@@ -1,0 +1,114 @@
+"""§Roofline — three-term roofline per (arch × shape × mesh) from the
+dry-run artifacts (benchmarks/results/dryrun/*.json).
+
+  compute_term    = flops_per_device / 197e12            [s]
+  memory_term     = bytes_per_device / 819e9             [s]
+  collective_term = collective_bytes_per_device / 50e9   [s]
+
+(cost_analysis on the SPMD-partitioned module is per-device, so the brief's
+global formulation divides through by the chip count; parsed collective
+bytes are per-device received bytes — all-gather output ≈ wire bytes; for
+all-reduce the output-size approximation ≈ ring wire bytes / 2, noted.)
+
+MODEL_FLOPS: 6·N·D for training (N = params, D = global tokens; MoE uses
+N_active), 2·N·D prefill, 2·N·B decode.  The MODEL/HLO ratio flags
+remat/redundancy waste (full-remat training honestly caps near 6/8 = 0.75).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link (ICI)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def model_flops_per_device(rec: dict) -> float:
+    n = rec["params_active"] if rec["params_active"] else rec["params"]
+    chips = 512 if rec["mesh"] == "multi" else 256
+    if rec["kind"] == "train":
+        d = rec["seq_len"] * rec["global_batch"]
+        return 6.0 * n * d / chips
+    if rec["kind"] == "prefill":
+        d = rec["seq_len"] * rec["global_batch"]
+        return 2.0 * n * d / chips
+    # decode: one token per sequence per step
+    return 2.0 * n * rec["global_batch"] / chips
+
+
+def collective_wire_bytes(coll: dict) -> float:
+    """Wire bytes; older artifacts (no 'wire_model' flag) counted output
+    bytes — convert with the ring all-reduce ×2 correction (other kinds'
+    output ≈ wire at large group sizes; reduce-scatter was never emitted
+    by the baseline programs)."""
+    if coll.get("wire_model"):
+        return coll["total_bytes"]
+    return coll["total_bytes"] + coll["all-reduce"]["bytes"]
+
+
+def analyse(rec: dict) -> dict:
+    compute = rec["flops_per_device"] / PEAK_FLOPS
+    memory = rec["bytes_per_device"] / HBM_BW
+    coll_b = collective_wire_bytes(rec["collectives"])
+    collective = coll_b / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    bound = max(terms.values())
+    step_time = bound  # roofline lower bound on step time
+    mfu_bound = (mf / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / rec["flops_per_device"]
+        if rec["flops_per_device"] > 0 else 0.0,
+        "roofline_mfu_bound": mfu_bound,
+        "hbm_temp_gib": rec.get("production", {}).get(
+            "temp_size_in_bytes", 0) / 2**30,
+        "hbm_args_gib": rec.get("production", {}).get(
+            "argument_size_in_bytes", 0) / 2**30,
+    }
+
+
+def run(results_dir: str = RESULTS_DIR, mesh: str | None = "single") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        name = os.path.basename(path)
+        if not name.startswith(("single_", "multi_")):
+            continue  # tagged (hillclimb) artifacts live in §Perf, not here
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        row = analyse(rec)
+        row["bench"] = "roofline"
+        rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | MFU bound |\n|" + "---|" * 9)
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_mfu_bound']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else None
+    rows = run(mesh=mesh)
+    print(markdown_table(rows))

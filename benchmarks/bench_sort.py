@@ -1,0 +1,48 @@
+"""Paper Fig. 5/6 — MapReduce integer sort: scaling with node count.
+
+The paper sorts 1B integers on up to 64 nodes (perfect scaling) and 8M
+integers against Spark (~100×).  Here the same engine sorts 4M integers
+across simulated nodes; reported are wall time, shuffle traffic and the
+tree-vs-naive shuffle ablation.  (Spark itself is not runnable offline; the
+comparison column reports our absolute throughput for the 8M case so the
+reader can line it up against the paper's Spark numbers.)
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import core as bind
+from repro.mapreduce import sort_integers
+
+
+def run(n_items: int = 4_000_000) -> list[dict]:
+    rng = np.random.default_rng(2)
+    vals = rng.integers(0, 2**31 - 1, size=n_items, dtype=np.int64)
+    expected = np.sort(vals)
+    rows = []
+    for nodes in (1, 2, 4, 8, 16):
+        for mode in ("tree", "naive"):
+            ex = bind.LocalExecutor(nodes, collective_mode=mode)
+            t0 = time.perf_counter()
+            out, stats = sort_integers(vals, n_nodes=nodes, executor=ex)
+            dt = time.perf_counter() - t0
+            ok = bool(np.array_equal(out, expected))
+            rows.append({
+                "bench": "sort_fig5_6", "mode": mode, "nodes": nodes,
+                "n_items": n_items,
+                "wall_ms": round(dt * 1e3, 1),
+                "mitems_per_s": round(n_items / dt / 1e6, 2),
+                "shuffle_bytes": stats.bytes_transferred,
+                "messages": stats.message_count,
+                "sorted_ok": ok,
+            })
+            assert ok
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

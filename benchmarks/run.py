@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run strassen   # one
+
+Prints ``bench,key-fields...`` lines and writes
+benchmarks/results/bench_results.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_strassen, bench_distgemm, bench_sort, bench_dag_overhead,
+        bench_roofline)
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    suites = {
+        "strassen": lambda: bench_strassen.run(),
+        "distgemm": lambda: bench_distgemm.run(),
+        "sort": lambda: bench_sort.run(n_items=1_000_000),
+        "dag_overhead": lambda: bench_dag_overhead.run(),
+        "roofline": lambda: bench_roofline.run(mesh=None),
+    }
+    if which != "all":
+        suites = {which: suites[which]}
+
+    all_rows = []
+    for name, fn in suites.items():
+        print(f"== {name} ==", flush=True)
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name} FAILED: {e!r}")
+            raise
+        for r in rows:
+            print(",".join(f"{k}={v}" for k, v in r.items()), flush=True)
+        all_rows.extend(rows)
+
+    out = os.path.join(os.path.dirname(__file__), "results",
+                       "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print(f"\nwrote {len(all_rows)} rows -> {out}")
+
+
+if __name__ == "__main__":
+    main()

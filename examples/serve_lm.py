@@ -1,0 +1,83 @@
+"""Serving example: batched prefill + KV-cache decode with the real stack.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma_7b --tokens 32
+
+Loads a reduced config (CPU-runnable), prefized with a shared prompt batch,
+then greedily decodes; demonstrates cache reuse, per-arch state handling
+(works for xlstm / recurrentgemma too) and throughput accounting.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import LanguageModel
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma_7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch).reduced()
+    model = LanguageModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    s_max = args.prompt_len + args.tokens
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    extras = {}
+    if cfg.encoder_layers:
+        extras["frames"] = jnp.asarray(rng.normal(
+            size=(args.batch, max(args.prompt_len // cfg.encoder_ratio, 4),
+                  cfg.d_model)), jnp.float32)
+    if cfg.frontend == "vision":
+        extras["pixels"] = jnp.asarray(rng.normal(
+            size=(args.batch, cfg.vision_tokens, cfg.d_model)), jnp.float32)
+        s_max += cfg.vision_tokens
+
+    t0 = time.perf_counter()
+    logits, states = jax.jit(
+        lambda p, t: model.prefill(p, t, s_max=s_max, **extras))(
+        params, prompt)
+    t_prefill = time.perf_counter() - t0
+
+    step = jax.jit(model.decode_step)
+    token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    n_img = cfg.vision_tokens if cfg.frontend == "vision" else 0
+    out_tokens = [token]
+    t0 = time.perf_counter()
+    for t in range(args.tokens - 1):
+        pos = jnp.int32(n_img + args.prompt_len + t)
+        logits, states = step(params, states, token, pos)
+        token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(token)
+    jax.block_until_ready(token)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    tput = args.batch * (args.tokens - 1) / max(t_decode, 1e-9)
+    print(f"arch={cfg.name} prefill {args.prompt_len} toks in "
+          f"{t_prefill*1e3:.0f} ms; decoded {args.tokens} toks/seq at "
+          f"{tput:.1f} tok/s (batch {args.batch})")
+    print("sample:", gen[0, :16].tolist())
+    assert gen.shape == (args.batch, args.tokens)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

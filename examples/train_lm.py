@@ -1,0 +1,91 @@
+"""End-to-end training example: a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 50  # CI
+
+Uses the full production stack: config -> model -> AdamW (fp32 master) ->
+deterministic data pipeline -> jitted train step -> async checkpoints.
+The loss must fall visibly (the synthetic corpus has learnable bigram
+structure); the run writes a loss curve JSON next to the checkpoints.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro import configs
+from repro.models import LanguageModel
+from repro.optim import AdamW, warmup_cosine
+from repro.data import SyntheticLMDataset
+from repro.ckpt import CheckpointManager
+from repro.train.step import make_train_step
+
+PRESETS = {
+    # ~100M params: 12L d=640 ff=2560 vocab=50304 -> 0.5*emb tied
+    "100m": dict(n_layers=12, d_model=640, n_heads=10, n_kv_heads=5,
+                 d_ff=2560, vocab_size=50304, head_dim=64),
+    "25m": dict(n_layers=8, d_model=320, n_heads=8, n_kv_heads=4,
+                d_ff=1280, vocab_size=32000, head_dim=40),
+    "tiny": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                 d_ff=256, vocab_size=512, head_dim=16),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="25m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--out", default="/tmp/train_lm_run")
+    args = ap.parse_args()
+
+    base = configs.get("h2o_danube_1_8b")      # llama-family base
+    cfg = dataclasses.replace(
+        base, name=f"example-{args.preset}", window=None,
+        block_pattern=("attn",), dtype="float32", tie_embeddings=True,
+        **PRESETS[args.preset])
+    model = LanguageModel(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params")
+
+    opt = AdamW(learning_rate=warmup_cosine(args.lr, 20, args.steps))
+    data = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    step_fn = make_train_step(model, opt)
+    ckpt = CheckpointManager(os.path.join(args.out, "ckpt"))
+
+    curve = []
+    t0 = time.time()
+    for step in range(args.steps):
+        params, opt_state, metrics = step_fn(
+            params, opt_state, data.batch_at(step))
+        if step % 10 == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            curve.append({"step": step, "loss": loss})
+            print(f"step {step:4d} loss {loss:.4f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
+        if (step + 1) % 100 == 0:
+            ckpt.save(step, (params, opt_state), extra={"step": step})
+    ckpt.save(args.steps - 1, (params, opt_state),
+              extra={"step": args.steps - 1}, block=True)
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "loss_curve.json"), "w") as f:
+        json.dump(curve, f, indent=1)
+    drop = curve[0]["loss"] - curve[-1]["loss"]
+    print(f"loss {curve[0]['loss']:.3f} -> {curve[-1]['loss']:.3f} "
+          f"(drop {drop:.3f}); curve -> {args.out}/loss_curve.json")
+    assert drop > 0.3, "synthetic-corpus loss should fall measurably"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Bind — the paper's partitioned global workflow model, rebuilt on JAX.
+
+Public API (the ``bind::`` namespace of the paper)::
+
+    from repro import core as bind
+
+    @bind.op
+    def gemm(a: bind.In, b: bind.In, c: bind.InOut):
+        return c + a @ b
+
+    with bind.Workflow(n_nodes=4) as wf:
+        a = wf.array(...)
+        with bind.node(3):
+            gemm(a, b, c)      # placed on node 3, transfers implicit
+        wf.sync()
+"""
+
+from .trace import BindArray, In, InOut, Out, OpNode, Workflow, current_workflow, op
+from .placement import NodeSet, node, nodes, placement_rank, placement_ranks
+from .versioning import Ref, Version, VersionStore
+from .collectives import (
+    InferredCollective,
+    TreeSchedule,
+    allreduce_tree,
+    broadcast_tree,
+    infer_broadcasts,
+    infer_reductions,
+    reduce_tree,
+)
+from .scheduler import ExecutionStats, LocalExecutor, TransferEvent
+from . import lowering
+
+__all__ = [
+    "BindArray", "In", "InOut", "Out", "OpNode", "Workflow", "current_workflow",
+    "op", "NodeSet", "node", "nodes", "placement_rank", "placement_ranks",
+    "Ref", "Version", "VersionStore", "InferredCollective", "TreeSchedule",
+    "allreduce_tree", "broadcast_tree", "infer_broadcasts", "infer_reductions",
+    "reduce_tree", "ExecutionStats", "LocalExecutor", "TransferEvent", "lowering",
+]

@@ -1,0 +1,350 @@
+"""Sequential-trace → transactional-DAG extraction (paper §II-A/B).
+
+The user writes classical sequential code over :class:`BindArray` handles.
+Functions are declared with ``@op`` and *argument intent annotations* — the
+JAX analogue of C++ ``const``-ness inspection:
+
+    @op
+    def gemm(a: In, b: In, c: InOut):
+        return a @ b + c          # returns payload for c's new version
+
+Calling ``gemm(x, y, z)`` inside an active :class:`Workflow` does **not**
+execute anything; it records an :class:`OpNode` that reads the current
+versions of ``x``/``y``/``z`` and generates a *new* version of ``z``.  The
+resulting DAG is the paper's transactional DAG: deterministic, replayable by
+any process, race-free by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+from .versioning import Ref, Version, reset_ids
+
+
+class In:
+    """Argument is read-only (C++ ``const&``)."""
+
+
+class Out:
+    """Argument is write-only — a fresh version is generated, old not read."""
+
+
+class InOut:
+    """Argument is read and replaced by a new version (C++ non-const ref)."""
+
+
+_INTENTS = (In, Out, InOut)
+
+
+@dataclasses.dataclass
+class OpNode:
+    """One transaction in the DAG."""
+
+    op_id: int
+    fn: Callable
+    name: str
+    # Versions read / generated, positionally aligned with the call args.
+    reads: tuple[Version, ...]
+    writes: tuple[Version, ...]
+    # Placement: None → unpinned (scheduler's choice = node 0); otherwise the
+    # node rank (paper's ``bind::node``) or an abstract placement object.
+    placement: Any
+    # All args in call order as (ref, version, intent) for replay.
+    args: tuple[tuple[Ref, Version, type], ...]
+    flops: int = 0
+
+    def __repr__(self) -> str:
+        r = ",".join(map(repr, self.reads))
+        w = ",".join(map(repr, self.writes))
+        return f"op{self.op_id}:{self.name}({r})->({w})@{self.placement}"
+
+
+class BindArray:
+    """User-facing handle: a versioned array in the global workflow."""
+
+    __slots__ = ("ref", "workflow")
+
+    def __init__(self, workflow: "Workflow", ref: Ref):
+        self.ref = ref
+        self.workflow = workflow
+
+    @property
+    def shape(self):
+        return getattr(self.ref.meta, "shape", None)
+
+    @property
+    def dtype(self):
+        return getattr(self.ref.meta, "dtype", None)
+
+    def __repr__(self):
+        return f"BindArray({self.ref!r})"
+
+    # Natural arithmetic sugar so user code stays "classical sequential".
+    def __iadd__(self, other: "BindArray"):
+        self.workflow.call(_add_inplace, (self, other), name="iadd")
+        return self
+
+    def __imul__(self, other):
+        self.workflow.call(_scale_inplace, (self, other), name="iscale")
+        return self
+
+
+def _add_inplace(c, x):
+    return c + x
+
+
+_add_inplace.__bind_intents__ = (InOut, In)
+
+
+def _scale_inplace(c, s):
+    return c * s
+
+
+_scale_inplace.__bind_intents__ = (InOut, In)
+
+
+_INTENT_NAMES = {"In": In, "Out": Out, "InOut": InOut}
+
+
+def intents_of(fn: Callable) -> tuple[type, ...]:
+    """Extract argument intents from annotations (compile-time inspection).
+
+    Handles stringified annotations (``from __future__ import annotations``)
+    by resolving on the terminal name.
+    """
+    cached = getattr(fn, "__bind_intents__", None)
+    if cached is not None:
+        return cached
+    sig = inspect.signature(fn)
+    intents = []
+    for p in sig.parameters.values():
+        ann = p.annotation
+        if isinstance(ann, str):
+            ann = _INTENT_NAMES.get(ann.split(".")[-1], ann)
+        if ann in _INTENTS:
+            intents.append(ann)
+        else:
+            # un-annotated / other → assumed constant input (safe default)
+            intents.append(In)
+    out = tuple(intents)
+    try:
+        fn.__bind_intents__ = out
+    except AttributeError:
+        pass
+    return out
+
+
+_TLS = threading.local()
+
+
+def current_workflow() -> Optional["Workflow"]:
+    return getattr(_TLS, "wf", None)
+
+
+class Workflow:
+    """Records the global workflow DAG from sequential user code.
+
+    Every process executing the same user code produces byte-identical
+    ``OpNode`` lists — the "partitioned *global* workflow".  Use as::
+
+        with Workflow() as wf:
+            a = wf.array(np.ones((4, 4)))
+            with node(1):
+                scale(a, 2.0)
+            wf.sync()
+    """
+
+    def __init__(self, n_nodes: int = 1, executor: Any = None):
+        reset_ids()
+        self.ops: list[OpNode] = []
+        self.refs: dict[int, Ref] = {}
+        self.initial: dict[tuple[int, int], Any] = {}
+        self.n_nodes = n_nodes
+        self._placement_stack: list[Any] = []
+        self._executor = executor
+        self._synced_upto = 0
+
+    # -- context management ------------------------------------------------
+    def __enter__(self):
+        _TLS.wf = self
+        return self
+
+    def __exit__(self, *exc):
+        if exc[0] is None:
+            self.sync()
+        _TLS.wf = None
+        return False
+
+    # -- placement ----------------------------------------------------------
+    def push_placement(self, p: Any) -> None:
+        self._placement_stack.append(p)
+
+    def pop_placement(self) -> None:
+        self._placement_stack.pop()
+
+    @property
+    def placement(self) -> Any:
+        return self._placement_stack[-1] if self._placement_stack else None
+
+    # -- array creation -----------------------------------------------------
+    def array(self, value: Any, name: str = "", rank: int = 0) -> BindArray:
+        """Create a versioned array from user data, resident on ``rank``."""
+        ref = Ref(name=name, meta=value)
+        self.refs[ref.ref_id] = ref
+        self.initial[ref.head.key] = (value, rank)
+        return BindArray(self, ref)
+
+    # -- op-created arrays ----------------------------------------------------
+    def apply(
+        self,
+        fn: Callable,
+        args: Sequence[Any],
+        name: str = "",
+        n_out: int = 1,
+        meta: Any = None,
+        flops: int = 0,
+    ):
+        """Record an op whose outputs are *fresh* arrays (no preallocation).
+
+        The returned handles' initial versions are produced by this op —
+        this is how temporaries are born inside a workflow without a
+        user-visible zero-fill + copy (zero-copy temp creation).
+        """
+        op_id = len(self.ops)
+        reads, rec_args = [], []
+        for a in args:
+            if isinstance(a, BindArray):
+                v = a.ref.head
+                reads.append(v)
+                rec_args.append((a.ref, v, In))
+            else:
+                rec_args.append((None, a, In))
+        outs = []
+        for i in range(n_out):
+            ref = Ref(name=f"{name or fn.__name__}.out{i}", meta=meta,
+                      first_producer=op_id)
+            self.refs[ref.ref_id] = ref
+            outs.append(ref.head)
+        node = OpNode(
+            op_id=op_id,
+            fn=fn,
+            name=name or getattr(fn, "__name__", "op"),
+            reads=tuple(reads),
+            writes=tuple(outs),
+            placement=self.placement,
+            args=tuple(rec_args),
+            flops=flops,
+        )
+        self.ops.append(node)
+        handles = tuple(BindArray(self, self.refs[v.ref_id]) for v in outs)
+        return handles[0] if n_out == 1 else handles
+
+    # -- op recording ---------------------------------------------------------
+    def call(
+        self,
+        fn: Callable,
+        args: Sequence[Any],
+        name: str = "",
+        flops: int = 0,
+    ) -> Optional[tuple[BindArray, ...]]:
+        intents = intents_of(fn)
+        if len(intents) < len(args):
+            intents = intents + (In,) * (len(args) - len(intents))
+        reads, writes, rec_args = [], [], []
+        op_id = len(self.ops)
+        # Pass 1 — snapshot every argument's head *before* any version bump:
+        # an op like ``mul(a, a)`` must read a.v_k through both arguments,
+        # not its own freshly created output version (self-dependency bug
+        # caught by tests/test_core_properties.py).
+        snap = []
+        for a, intent in zip(args, intents):
+            if isinstance(a, BindArray):
+                snap.append((a.ref, a.ref.head, intent))
+            else:
+                snap.append((None, a, In))  # constant: embed by value
+        # Pass 2 — record reads on the snapshot, then create new versions.
+        for ref, v, intent in snap:
+            if ref is None:
+                rec_args.append((None, v, In))
+                continue
+            if intent in (In, InOut):
+                reads.append(v)
+            rec_args.append((ref, v, intent))
+        for ref, v, intent in snap:
+            if ref is not None and intent in (Out, InOut):
+                writes.append(ref.new_version(op_id))
+        node = OpNode(
+            op_id=op_id,
+            fn=fn,
+            name=name or getattr(fn, "__name__", "op"),
+            reads=tuple(reads),
+            writes=tuple(writes),
+            placement=self.placement,
+            args=tuple(rec_args),
+            flops=flops,
+        )
+        self.ops.append(node)
+        return None
+
+    # -- consumer map (drives implicit-collective inference) -----------------
+    def consumers(self) -> dict[tuple[int, int], list[OpNode]]:
+        out: dict[tuple[int, int], list[OpNode]] = {}
+        for op in self.ops:
+            for v in op.reads:
+                out.setdefault(v.key, []).append(op)
+        return out
+
+    def producers(self) -> dict[tuple[int, int], OpNode]:
+        out: dict[tuple[int, int], OpNode] = {}
+        for op in self.ops:
+            for v in op.writes:
+                out[v.key] = op
+        return out
+
+    # -- execution boundary ---------------------------------------------------
+    def sync(self) -> None:
+        """Paper's ``bind::sync()``: execute everything recorded so far."""
+        if self._executor is None:
+            from .scheduler import LocalExecutor
+
+            self._executor = LocalExecutor(self.n_nodes)
+        self._executor.run(self, start=self._synced_upto)
+        self._synced_upto = len(self.ops)
+
+    def fetch(self, arr: BindArray) -> Any:
+        """Read back the head payload of an array (implies sync)."""
+        self.sync()
+        return self._executor.value(arr.ref.head)
+
+
+def op(fn: Callable = None, *, flops: int = 0) -> Callable:
+    """Decorator registering ``fn`` as a Bind operation.
+
+    When called inside an active :class:`Workflow` the call is *recorded*;
+    outside any workflow the function executes eagerly (plain Python), which
+    keeps user code runnable in both modes — the paper's "classical
+    sequential code design".
+    """
+
+    def wrap(f):
+        intents = intents_of(f)
+
+        def caller(*args, **kwargs):
+            wf = current_workflow()
+            if wf is None:
+                return f(*args, **kwargs)
+            assert not kwargs, "bind ops are positional-only when traced"
+            return wf.call(f, args, flops=flops)
+
+        caller.__name__ = getattr(f, "__name__", "op")
+        caller.__wrapped__ = f
+        caller.__bind_intents__ = intents
+        return caller
+
+    if fn is not None:
+        return wrap(fn)
+    return wrap

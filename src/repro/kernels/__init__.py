@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel family ships three files:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jitted public wrapper (padding, backend dispatch)
+  ref.py    — pure-jnp oracle, the correctness contract
+
+On this CPU container kernels run under ``interpret=True`` in the test
+suite; model code defaults to the mathematically identical XLA path and
+switches to Pallas with ``kernel_backend="pallas"`` on real TPUs.
+"""
+
+from .gemm import matmul, matmul_accumulate
+from .flash_attention import flash_attention
+from .linear_scan import linear_scan
+
+__all__ = ["matmul", "matmul_accumulate", "flash_attention", "linear_scan"]

@@ -1,0 +1,4 @@
+from .ops import flash_attention
+from . import ref
+
+__all__ = ["flash_attention", "ref"]

@@ -1,0 +1,147 @@
+"""Pallas TPU flash-attention kernel (prefill path).
+
+TPU adaptation of the memory-hierarchy insight behind FlashAttention: never
+materialise the (S, S) score matrix in HBM.  Blocking:
+
+* grid = (batch, q_heads, Sq/bq, Skv/bkv) — the KV axis innermost, so the
+  online-softmax state (row-max m, row-sum l, fp32 output accumulator) lives
+  in VMEM scratch across the KV sweep;
+* GQA is folded into the BlockSpec index map: query head ``h`` reads KV head
+  ``h // group`` — no KV replication in HBM;
+* causal + sliding-window masks are applied with block-level iota, and
+  blocks that the mask kills entirely are skipped before their DMA is used
+  (the ``pl.when`` guard) — for long_500k SWA decode this is what makes the
+  sweep O(window) instead of O(S).
+
+VMEM at defaults (bq=bkv=512, d=128, bf16): q 128 KiB + k/v 256 KiB +
+acc/m/l ≈ 260 KiB ≈ 0.6 MiB with double buffering — comfortably inside the
+16 MiB/core budget, big enough tiles to keep the MXU saturated.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    bq: int,
+    bkv: int,
+    n_kv: int,
+):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = kb * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    # Block-level skip: under causal masking, KV blocks strictly above the
+    # diagonal contribute nothing; under SWA, blocks older than the window
+    # likewise.  (On TPU this prunes the DMA+MXU work of the skipped block.)
+    run = True
+    if causal:
+        run = jnp.logical_and(run, kb * bkv <= qb * bq + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, (kb + 1) * bkv - 1 >= qb * bq - window + 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                     # (bq, bkv)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                        # masked lanes -> ~0
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kv - 1)
+    def _store():
+        # Fully-masked rows (never touched) have l=0; emit zeros, not NaN.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,   # (B, Hq, Sq, D)
+    k: jax.Array,   # (B, Hkv, Skv, D)
+    v: jax.Array,   # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 512,
+    bkv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, ((sq, skv), (bq, bkv))
+    scale = (d ** -0.5) if scale is None else scale
+    n_kv = skv // bkv
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, n_kv=n_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, iq, ik: (bb, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, bkv, d),
+                lambda bb, h, iq, ik, g=group: (bb, h // g, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bkv, d),
+                lambda bb, h, iq, ik, g=group: (bb, h // g, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, h, iq, ik: (bb, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Jitted wrapper for flash attention with backend dispatch + padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bkv", "backend", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bq: int = 512,
+    bkv: int = 512,
+    backend: str = "pallas",
+    interpret: bool = False,
+) -> jax.Array:
+    """(B, Hq, Sq, D) × (B, Hkv, Skv, D)² → (B, Hq, Sq, D)."""
+    if backend == "xla":
+        return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+    sq, skv = q.shape[2], k.shape[2]
+    bq_ = min(bq, sq)
+    bkv_ = min(bkv, skv)
+    pq = (-sq) % bq_
+    pkv = (-skv) % bkv_
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        # pad keys *in front of nothing* — padded keys get masked by giving
+        # them positions beyond every query (causal handles it); for
+        # non-causal we mask via window=None + explicit slice below, so pad
+        # at the tail and rely on causal/window masks. Non-causal unpadded
+        # shapes are required otherwise.
+        assert causal or window is not None or pkv == 0, (
+            "non-causal attention requires Skv % bkv == 0")
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        bq=bq_, bkv=bkv_, interpret=interpret,
+    )
+    return out[:, :, :sq, :]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash attention (materialised scores, same masking)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(
+    q: jax.Array,   # (B, Hq, Sq, D)
+    k: jax.Array,   # (B, Hkv, Skv, D)
+    v: jax.Array,   # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    # rows with no visible key: output zeros (matches kernel's safe divide)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(axis=-1)[None, None, :, None], p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import matmul, matmul_accumulate
+from . import ref
+
+__all__ = ["matmul", "matmul_accumulate", "ref"]

@@ -1,0 +1,77 @@
+"""Pallas TPU tiled-GEMM kernel — the leaf operation of Bind's tiled linalg.
+
+The paper dispatches single-tile multiplications to MKL's DGEMM; on TPU the
+analogous leaf is an MXU-aligned blocked matmul.  Blocking:
+
+* grid = (M/bm, N/bn, K/bk), K innermost so the fp32 accumulator tile stays
+  resident in VMEM scratch across the contraction;
+* every BlockSpec dimension is a multiple of 128 by default (MXU systolic
+  array is 128×128; the VPU lane width is 8×128), so no padding lanes are
+  wasted;
+* inputs stream HBM→VMEM tile-by-tile; the accumulator writes back exactly
+  once (at the last K step) — HBM traffic is the roofline minimum
+  bm·bk + bk·bn per step + one bm·bn store.
+
+VMEM budget (defaults bm=bn=bk=128, bf16 in / fp32 acc):
+  a-tile 32 KiB + b-tile 32 KiB + acc 64 KiB ≈ 128 KiB ≪ 16 MiB VMEM —
+  leaves room for the pipeline's double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU matmul with fp32 accumulation regardless of input dtype.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``a @ b`` via the blocked Pallas kernel. Shapes must divide the blocks
+    (the ops.py wrapper pads arbitrary shapes)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        (m, n, k), (bm, bn, bk))
+    out_dtype = out_dtype or a.dtype
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

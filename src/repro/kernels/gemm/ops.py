@@ -1,0 +1,71 @@
+"""Jitted public wrappers for the GEMM kernel (padding + backend dispatch).
+
+``matmul(a, b)`` pads arbitrary (m, k, n) up to block multiples, runs the
+Pallas kernel, and slices back.  ``backend="xla"`` falls back to the oracle —
+the CPU container default, since Pallas-TPU kernels only execute for real on
+TPU (interpret=True runs them on CPU for the correctness suite).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import matmul_pallas
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "backend", "interpret")
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    backend: str = "pallas",
+    interpret: bool = False,
+) -> jax.Array:
+    """``a @ b`` with fp32 accumulation; Pallas on TPU, oracle on XLA."""
+    if backend == "xla":
+        return ref.matmul(a, b)
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    out = matmul_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "backend", "interpret")
+)
+def matmul_accumulate(
+    c: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    backend: str = "pallas",
+    interpret: bool = False,
+) -> jax.Array:
+    """``c + a @ b`` — the Bind tile transaction ``gemm(a, b, c: InOut)``."""
+    if backend == "xla":
+        return ref.matmul_accumulate(c, a, b)
+    prod = matmul(
+        a, b, bm=bm, bn=bn, bk=bk, backend=backend, interpret=interpret
+    )
+    return (c.astype(jnp.float32) + prod.astype(jnp.float32)).astype(c.dtype)

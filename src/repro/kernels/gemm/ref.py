@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the GEMM kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def matmul_accumulate(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    return (
+        c.astype(jnp.float32)
+        + jnp.dot(a, b, preferred_element_type=jnp.float32)
+    ).astype(c.dtype)

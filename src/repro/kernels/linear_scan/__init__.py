@@ -1,0 +1,4 @@
+from .ops import linear_scan
+from . import ref
+
+__all__ = ["linear_scan", "ref"]

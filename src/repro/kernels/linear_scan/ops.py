@@ -1,0 +1,33 @@
+"""Jitted wrapper for the chunked linear scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import linear_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "backend", "interpret"))
+def linear_scan(
+    a: jax.Array,
+    x: jax.Array,
+    *,
+    bs: int = 256,
+    backend: str = "pallas",
+    interpret: bool = False,
+) -> jax.Array:
+    """y_t = a_t ⊙ y_{t-1} + x_t over (B, S, D); y_{-1} = 0."""
+    if backend == "xla":
+        return ref.linear_scan(a, x)
+    s = a.shape[1]
+    bs_ = min(bs, s)
+    pad = (-s) % bs_
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    out = linear_scan_pallas(a, x, bs=bs_, interpret=interpret)
+    return out[:, :s, :]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the linear scan: y_t = a_t * y_{t-1} + x_t, y_0 = x_0."""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan(a: jax.Array, x: jax.Array) -> jax.Array:
+    """(B, S, D) diagonal linear recurrence via lax.scan (time-major inside)."""
+
+    def step(h, ax):
+        a_t, x_t = ax
+        h = a_t * h + x_t
+        return h, h
+
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    x_t = jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+    h0 = jnp.zeros_like(x_t[0])
+    _, ys = jax.lax.scan(step, h0, (a_t, x_t))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

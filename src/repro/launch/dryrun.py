@@ -1,0 +1,427 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch gemma_7b
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+For each cell this AOT-compiles the real step function (train_step for
+training shapes, prefill/decode for serving shapes) against the production
+mesh with the full published model config — ShapeDtypeStructs only, no
+allocation — and records:
+
+* ``memory_analysis()``  (per-device argument/output/temp bytes — fits HBM?)
+* ``cost_analysis()``    (per-device HLO FLOPs + bytes accessed)
+* collective bytes by op kind, parsed from the post-SPMD HLO text
+
+into ``benchmarks/results/dryrun/<mesh>_<arch>_<shape>.json`` (incremental:
+existing cells are skipped unless --force). §Roofline reads these files.
+"""
+
+# MUST precede any jax import (device count locks on first init).
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.models import LanguageModel         # noqa: E402
+from repro.optim import AdamW                  # noqa: E402
+from repro.data import make_batch_specs        # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding import make_policy         # noqa: E402
+from repro.train.step import make_train_step   # noqa: E402
+from repro.train.serve import tree_state_shardings  # noqa: E402
+from repro.sharding.constraints import use_policy   # noqa: E402
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results",
+    "dryrun")
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string or tuple-of-shapes string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_GROUPS_RE = re.compile(
+    r"replica_groups=(?:\[(\d+),(\d+)\]|\{\{([\d,]*)\})")
+
+
+def _group_size(rhs: str) -> int:
+    """Participant count of a collective from its replica_groups attr."""
+    m = _GROUPS_RE.search(rhs)
+    if not m:
+        return 2  # conservative default
+    if m.group(2) is not None:
+        return max(int(m.group(2)), 1)       # iota form [n_groups, size]
+    first = m.group(3)
+    return max(len([x for x in first.split(",") if x != ""]), 1)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device *wire bytes* of every collective in the post-SPMD HLO.
+
+    From each op's output shape O and participant count g (replica_groups):
+      all-gather          O·(g−1)/g      (received; output = gathered)
+      all-reduce          2·O·(g−1)/g    (ring: reduce-scatter + all-gather)
+      reduce-scatter      O·(g−1)       (output = 1/g shard; input ≈ O·g)
+      all-to-all          O·(g−1)/g
+      collective-permute  O
+    '-start' async forms are counted once ('-done' skipped).
+    """
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            mm = re.match(rf"(\(.*?\)|\S+)\s+{kind}(?:-start)?\(", rhs)
+            if mm and f"{kind}-done" not in rhs:
+                o = _shape_bytes(mm.group(1))
+                g = _group_size(rhs)
+                if kind == "all-gather" or kind == "all-to-all":
+                    wire = o * (g - 1) / g
+                elif kind == "all-reduce":
+                    wire = 2 * o * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    wire = o * (g - 1)
+                else:  # collective-permute
+                    wire = o
+                out[kind]["bytes"] += int(wire)
+                out[kind]["count"] += 1
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["wire_model"] = True
+    return out
+
+
+def long500k_eligible(cfg) -> bool:
+    """Sub-quadratic archs only (full-attention archs skip, per DESIGN.md)."""
+    return all(b in ("rglru", "mlstm", "slstm", "swa", "local_attn")
+               for b in cfg.block_pattern)
+
+
+def cells_for(cfg) -> list[str]:
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if long500k_eligible(cfg):
+        cells.append("long_500k")
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# step builders (return (lowered, label) )
+# ---------------------------------------------------------------------------
+
+def lower_train(model, cfg, policy, seq_len, global_batch, *, remat=True,
+                n_loss_chunks=16):
+    optimizer = AdamW(learning_rate=1e-4)
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_s = jax.eval_shape(optimizer.init, params_s)
+    batch_specs = make_batch_specs(cfg, seq_len, global_batch)
+    step = make_train_step(model, optimizer, policy, remat=remat,
+                           n_loss_chunks=n_loss_chunks)
+    jitted = step.jit_with(params_s, opt_s, batch_specs)
+    return jitted.lower(params_s, opt_s, batch_specs)
+
+
+def lower_prefill(model, cfg, policy, seq_len, global_batch):
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch_specs = make_batch_specs(cfg, seq_len, global_batch)
+
+    def step(params, tokens, extras):
+        with use_policy(policy):
+            return model.prefill(
+                params, tokens, s_max=seq_len,
+                frames=extras.get("frames"), pixels=extras.get("pixels"))
+
+    p_sh = policy.tree_param_shardings(params_s)
+    dp = policy.dp_axes if policy.batch_sharded else None
+    sp = policy.model_axis if policy.seq_sharded else None
+    tok_sh = NamedSharding(policy.mesh, P(dp, sp))
+    extras, extras_sh = {}, {}
+    if "frames" in batch_specs:
+        extras["frames"] = batch_specs["frames"]
+        extras_sh["frames"] = NamedSharding(policy.mesh, P(dp, sp, None))
+    if "pixels" in batch_specs:
+        extras["pixels"] = batch_specs["pixels"]
+        extras_sh["pixels"] = NamedSharding(policy.mesh, P(dp, None, None))
+    out_s = jax.eval_shape(step, params_s, batch_specs["tokens"], extras)
+    states_sh = tree_state_shardings(policy, out_s[1])
+    logits_sh = NamedSharding(policy.mesh, P(dp, None, None))
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, tok_sh, extras_sh),
+        out_shardings=(logits_sh, states_sh))
+    return jitted.lower(params_s, batch_specs["tokens"], extras)
+
+
+def lower_decode(model, cfg, policy, seq_len, global_batch):
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    enc_len = (seq_len // cfg.encoder_ratio) if cfg.encoder_layers else 0
+    states_s = jax.eval_shape(
+        lambda: model.init_states(global_batch, seq_len, enc_len=enc_len))
+    dp = policy.dp_axes if policy.batch_sharded else None
+    token_s = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, states, token, pos):
+        with use_policy(policy):
+            return model.decode_step(params, states, token, pos)
+
+    p_sh = policy.tree_param_shardings(params_s)
+    st_sh = tree_state_shardings(policy, states_s)
+    tok_sh = NamedSharding(policy.mesh, P(dp, None))
+    pos_sh = NamedSharding(policy.mesh, P())
+    logits_sh = NamedSharding(policy.mesh, P(dp, None, None))
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, st_sh, tok_sh, pos_sh),
+        out_shardings=(logits_sh, st_sh),
+        donate_argnums=(1,),          # cache updated in place
+    )
+    return jitted.lower(params_s, states_s, token_s, pos_s)
+
+
+def _lower_for(model, cfg, policy, kind, seq_len, global_batch, remat):
+    if kind == "train":
+        return lower_train(model, cfg, policy, seq_len, global_batch,
+                           remat=remat)
+    if kind == "prefill":
+        return lower_prefill(model, cfg, policy, seq_len, global_batch)
+    return lower_decode(model, cfg, policy, seq_len, global_batch)
+
+
+def _compile_stats(lowered) -> dict:
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    out = {
+        "flops": float(cost.get("flops", -1)) if cost else -1.0,
+        "bytes": float(cost.get("bytes accessed", -1)) if cost else -1.0,
+        "collectives": parse_collective_bytes(compiled.as_text()),
+    }
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                out[k] = int(v)
+    return out
+
+
+def _meter(cfg, policy, kind, seq_len, global_batch) -> dict:
+    """Exact per-device FLOPs/bytes/collectives by group extrapolation.
+
+    XLA's cost analysis counts a while-loop body once, so the production
+    (scan-based) artifact under-reports.  Metering compiles the same cell at
+    1 and 2 pattern-periods of depth with every scan fully unrolled and the
+    materialised-attention/single-chunk-loss paths (loop-free), then
+    extrapolates linearly in depth:  total = base + (L/period)·per_period.
+    The sLSTM time scan is the one loop that cannot unroll; its in-loop
+    recurrence FLOPs are added analytically (see EXPERIMENTS.md §Dry-run).
+    """
+    import dataclasses
+
+    period = cfg.pattern_period
+    stats = []
+    for k_groups in (1, 2):
+        cfg_k = dataclasses.replace(
+            cfg, n_layers=k_groups * period,
+            encoder_layers=(k_groups * period if cfg.encoder_layers else 0))
+        model_k = LanguageModel(cfg_k, meter=True)
+        lowered = _lower_for(model_k, cfg_k, policy, kind, seq_len,
+                             global_batch, remat=False)
+        stats.append(_compile_stats(lowered))
+    s1, s2 = stats
+    ratio = cfg.n_layers / period
+
+    def extrap(a, b):
+        per = b - a
+        if per <= 0:
+            # fusion noise can make the 2-period artifact cheaper per-op;
+            # fall back to linear scaling of the larger artifact
+            return max(a, b) * ratio / 2.0
+        return max(a - per, 0.0) + ratio * per
+
+    coll = {}
+    for key in _COLLECTIVES + ("total_bytes",):
+        v1 = s1["collectives"][key]
+        v2 = s2["collectives"][key]
+        if isinstance(v1, dict):
+            coll[key] = {
+                "bytes": extrap(v1["bytes"], v2["bytes"]),
+                "count": extrap(v1["count"], v2["count"]),
+            }
+        else:
+            coll[key] = extrap(v1, v2)
+    out = {
+        "flops_per_device": extrap(s1["flops"], s2["flops"]),
+        "bytes_per_device": extrap(s1["bytes"], s2["bytes"]),
+        "collectives": coll,
+    }
+    # analytic sLSTM in-loop correction (per device: batch is dp-sharded;
+    # the gathered time scan runs replicated over the model axis)
+    n_slstm = sum(1 for i in range(cfg.n_layers)
+                  if cfg.block_pattern[i % period] == "slstm")
+    if n_slstm and kind != "decode":
+        d = cfg.d_model
+        dh = d // cfg.n_heads
+        b_loc = global_batch // policy.dp_size if policy.batch_sharded \
+            else global_batch
+        per_layer = seq_len * b_loc * (8 * cfg.n_heads * dh * dh + 24 * d)
+        out["flops_per_device"] += n_slstm * per_layer
+        out["slstm_flop_correction"] = n_slstm * per_layer
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, remat=True,
+             meter: bool = True, params_tp: bool = False,
+             ring_cache: bool = False) -> dict:
+    import dataclasses as _dc
+    cfg = configs.get(arch)
+    if ring_cache:
+        cfg = _dc.replace(cfg, ring_cache=True)
+    model = LanguageModel(cfg)
+    seq_len, global_batch, kind = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    policy = make_policy(
+        mesh,
+        batch_sharded=(global_batch > 1),
+        seq_sharded=(kind != "decode"),
+        params_tp=params_tp and kind == "decode",
+    )
+    t0 = time.time()
+    lowered = _lower_for(model, cfg, policy, kind, seq_len, global_batch,
+                         remat)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    prod = _compile_stats(lowered)
+    t_compile = time.time() - t0
+
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "seq_len": seq_len, "global_batch": global_batch, "kind": kind,
+        "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "production": prod,
+        "params": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    if meter:
+        m = _meter(cfg, policy, kind, seq_len, global_batch)
+        result.update(m)
+    else:
+        result["flops_per_device"] = prod["flops"]
+        result["bytes_per_device"] = prod["bytes"]
+        result["collectives"] = prod["collectives"]
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--decode-tp", action="store_true",
+                    help="TP-sharded weights for decode cells (§Perf C1)")
+    ap.add_argument("--ring-cache", action="store_true",
+                    help="windowed ring KV cache for SWA decode (§Perf r4)")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    archs = [args.arch] if args.arch else list(configs.all_names())
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = configs.get(arch)
+        shapes = [args.shape] if args.shape else cells_for(cfg)
+        for shape in shapes:
+            if shape == "long_500k" and not long500k_eligible(cfg):
+                print(f"SKIP {arch} long_500k (full attention)")
+                continue
+            for mesh_kind in meshes:
+                tag = f"{args.tag}_" if args.tag else ""
+                fname = os.path.join(
+                    args.out_dir, f"{tag}{mesh_kind}_{arch}_{shape}.json")
+                if os.path.exists(fname) and not args.force:
+                    print(f"have {fname}, skipping")
+                    continue
+                label = f"{arch} × {shape} × {mesh_kind}"
+                print(f"=== {label} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mesh_kind,
+                                   remat=not args.no_remat,
+                                   params_tp=args.decode_tp,
+                                   ring_cache=args.ring_cache)
+                    with open(fname, "w") as f:
+                        json.dump(res, f, indent=1)
+                    print(f"    ok: compile {res['compile_s']}s, "
+                          f"flops/dev {res['flops_per_device']:.3e}, "
+                          f"coll {res['collectives']['total_bytes']/2**20:.0f} MiB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((label, repr(e)))
+                    with open(fname + ".fail", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"    FAIL: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for label, err in failures:
+            print(f"  {label}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

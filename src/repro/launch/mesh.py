@@ -1,0 +1,25 @@
+"""Production mesh builders (functions, never module-level state — importing
+this module must not initialise jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips ("data", "model").
+    Multi-pod: (2, 16, 16) = 512 chips ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int | None = None, n_model: int = 1):
+    """A small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if n_data is None:
+        n_data = n // n_model
+    assert n_data * n_model <= n, (n_data, n_model, n)
+    if n_model > 1:
+        return jax.make_mesh((n_data, n_model), ("data", "model"))
+    return jax.make_mesh((n_data,), ("data",))

@@ -1,0 +1,60 @@
+"""Meter the gradient-sync schedules' collective traffic (subprocess tool).
+
+Compiles the explicit-DP training step on an (2,4) fake-device mesh for each
+schedule and prints a JSON line per schedule with per-device collective
+bytes/counts parsed from the post-SPMD HLO — the §Perf grad-sync ablation:
+paper-faithful binary tree vs torus-native ring vs pod-aware hierarchical
+(+ int8-compressed cross-pod).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import json  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models import LanguageModel  # noqa: E402
+from repro.optim import AdamW  # noqa: E402
+from repro.data import SyntheticLMDataset  # noqa: E402
+from repro.train.step import (  # noqa: E402
+    make_manual_dp_train_step, init_error_state)
+from repro.launch.dryrun import parse_collective_bytes  # noqa: E402
+
+
+def main() -> None:
+    cfg = configs.get("gemma_7b").reduced()
+    model = LanguageModel(cfg)
+    opt = AdamW(learning_rate=1e-3)
+    data = SyntheticLMDataset(cfg.vocab_size, seq_len=64, global_batch=8)
+    params = model.init(jax.random.PRNGKey(0))
+    os_ = opt.init(params)
+    err = init_error_state(params)
+    batch = data.batch_at(0)
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+
+    n_params = cfg.param_count()
+    for schedule, compress in (("tree", False), ("ring", False),
+                               ("hierarchical", False),
+                               ("hierarchical", True)):
+        step = make_manual_dp_train_step(
+            model, opt, mesh, schedule=schedule, data_axes=("pod", "data"),
+            compress_outer=compress)
+        lowered = step.lower(params, os_, batch, err)
+        compiled = lowered.compile()
+        coll = parse_collective_bytes(compiled.as_text())
+        print(json.dumps({
+            "schedule": schedule + ("+int8" if compress else ""),
+            "params": n_params,
+            "grad_fp32_bytes": 4 * n_params,
+            "collectives": coll,
+        }))
+
+
+if __name__ == "__main__":
+    main()

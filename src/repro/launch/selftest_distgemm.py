@@ -1,0 +1,37 @@
+"""Multi-device self-test for the shard_map distributed GEMM (subprocess).
+
+Validates the TPU lowering of Listing 1 on a (2, 4) fake-device mesh for both
+reduction schedules, against the dense numpy product.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.linalg.distributed import distributed_gemm_shardmap  # noqa: E402
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    mesh = jax.make_mesh((2, 4), ("p", "q"))
+    for m, k, n in ((8, 8, 8), (16, 32, 8), (64, 16, 24)):
+        A = rng.normal(size=(m, k)).astype(np.float32)
+        B = rng.normal(size=(k, n)).astype(np.float32)
+        for schedule in ("tree", "ring"):
+            fn = distributed_gemm_shardmap(mesh, schedule=schedule)
+            out = np.asarray(fn(A, B))
+            np.testing.assert_allclose(
+                out, A @ B, rtol=2e-4, atol=2e-4,
+                err_msg=f"schedule={schedule} shape={(m, k, n)}",
+            )
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

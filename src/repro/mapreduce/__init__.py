@@ -1,0 +1,6 @@
+"""Paper §IV-B: a MapReduce engine implemented on the Bind model."""
+
+from .engine import KVPairs
+from .sort import sort_integers
+
+__all__ = ["KVPairs", "sort_integers"]

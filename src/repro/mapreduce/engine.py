@@ -1,0 +1,128 @@
+"""A "trivial" MapReduce engine over Bind (paper §IV-B, Listing 2).
+
+The paper's point is that map / combine / **implicit shuffle** / reduce fall
+out of the Bind model for free: map and reduce are placed ops; the shuffle is
+nothing but the implicit transfers the runtime derives from "reduce of bucket
+``b`` runs on ``owner(b)`` but its inputs were produced on mapper nodes".
+
+Data model (columnar, vectorised — the TPU-friendly adaptation of the
+paper's ``std::vector<std::pair<K, V>>``): a partition is a numpy array of
+values; ``map`` emits (keys, values) arrays; the engine groups by key bucket.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro import core as bind
+
+
+def _map_partition(values, map_fn):
+    keys, vals = map_fn(values)
+    order = np.argsort(keys, kind="stable")  # group rows by destination bucket
+    return keys[order], vals[order]
+
+
+def _extract_bucket(keys, vals, lo, hi):
+    sel = slice(np.searchsorted(keys, lo), np.searchsorted(keys, hi))
+    return vals[sel]
+
+
+def _reduce_bucket(reduce_fn, bucket_id, *pieces):
+    merged = np.concatenate(pieces) if pieces else np.empty(0)
+    return reduce_fn(bucket_id, merged)
+
+
+class KVPairs:
+    """Distributed key/value collection: ``KVPairs(wf, partitions).map(f).reduce(g)``.
+
+    ``partitions`` maps node rank → BindArray of that node's local values
+    (the paper's ``local_map`` of documents).
+    """
+
+    def __init__(self, wf: bind.Workflow, partitions: dict[int, bind.BindArray]):
+        self.wf = wf
+        self.partitions = dict(partitions)
+
+    @classmethod
+    def from_arrays(cls, wf: bind.Workflow, arrays: Sequence[np.ndarray]) -> "KVPairs":
+        return cls(wf, {
+            rank: wf.array(arr, f"part{rank}", rank=rank)
+            for rank, arr in enumerate(arrays)
+        })
+
+    # -- map ------------------------------------------------------------------
+    def map(self, map_fn: Callable) -> "_Mapped":
+        """``map_fn(values) -> (keys, values)`` applied on each node's data."""
+        mapped = {}
+        for rank, part in self.partitions.items():
+            with bind.node(rank):
+                mapped[rank] = self.wf.apply(
+                    _map_partition, (part, map_fn), name="map", n_out=2
+                )
+        return _Mapped(self.wf, mapped)
+
+
+class _Mapped:
+    def __init__(self, wf: bind.Workflow, mapped: dict[int, tuple]):
+        self.wf = wf
+        self.mapped = mapped  # rank -> (keys BindArray, vals BindArray)
+
+    def reduce(
+        self,
+        reduce_fn: Callable,
+        n_buckets: int,
+        owner: Optional[Callable[[int], int]] = None,
+        combine_fn: Optional[Callable] = None,
+    ) -> "Reduced":
+        """Group by key into ``n_buckets``, ship each bucket to its owner node
+        (the *implicit shuffle*), then apply ``reduce_fn(bucket_id, values)``.
+
+        ``combine_fn`` (optional, the paper's ``combine``) pre-reduces each
+        mapper-local bucket *on the mapper's node* before it travels —
+        shrinking shuffle bytes exactly like Hadoop's combiner.
+        """
+        wf = self.wf
+        n_nodes = max(self.mapped) + 1 if self.mapped else 1
+        if owner is None:
+            owner = lambda b: b * n_nodes // n_buckets  # contiguous ranges
+
+        # 1. bucket extraction on the mapper's node
+        pieces: dict[int, list] = {b: [] for b in range(n_buckets)}
+        for rank, (keys, vals) in self.mapped.items():
+            for b in range(n_buckets):
+                with bind.node(rank):
+                    piece = wf.apply(
+                        _extract_bucket, (keys, vals, b, b + 1),
+                        name=f"extract[{b}]",
+                    )
+                    if combine_fn is not None:
+                        piece = wf.apply(combine_fn, (piece,), name="combine")
+                pieces[b].append(piece)
+
+        # 2. implicit shuffle + reduce: placing the reduce op on owner(b)
+        #    makes the runtime move every piece there (tree-shipped when a
+        #    piece has >1 consumer; plain p2p otherwise).
+        buckets = {}
+        for b in range(n_buckets):
+            with bind.node(owner(b)):
+                buckets[b] = wf.apply(
+                    _reduce_bucket, (reduce_fn, b, *pieces[b]),
+                    name=f"reduce[{b}]",
+                )
+        return Reduced(wf, buckets)
+
+
+class Reduced:
+    def __init__(self, wf: bind.Workflow, buckets: dict[int, bind.BindArray]):
+        self.wf = wf
+        self.buckets = buckets
+
+    def collect(self) -> np.ndarray:
+        """Gather buckets in key order to the host (implies sync)."""
+        outs = [np.asarray(self.wf.fetch(self.buckets[b]))
+                for b in sorted(self.buckets)]
+        outs = [o for o in outs if o.size]
+        return np.concatenate(outs) if outs else np.empty(0)

@@ -1,0 +1,7 @@
+"""Composable model zoo: every assigned architecture as a config over one
+scan-based transformer/SSM substrate."""
+
+from .config import ModelConfig
+from .model import LanguageModel
+
+__all__ = ["ModelConfig", "LanguageModel"]

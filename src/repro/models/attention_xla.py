@@ -1,0 +1,83 @@
+"""Chunked (flash-style) attention in pure XLA — the long-sequence path.
+
+The Pallas flash kernel (repro.kernels.flash_attention) is the TPU-native
+implementation; this module is the same online-softmax algorithm expressed
+as nested ``lax.scan`` so it (a) lowers on any backend (the dry-run's CPU
+AOT compile included) and (b) keeps O(S·c) instead of O(S²) live memory for
+32k/500k prefill.  Used on the no-grad serving paths; training at 4k uses
+the materialised oracle (cheaper backward).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, KV, Skv, D)
+    v: jax.Array,   # (B, KV, Skv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    cq: int = 512,
+    ckv: int = 1024,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kvh, skv, _ = k.shape
+    group = h // kvh
+    scale = (d ** -0.5) if scale is None else scale
+    cq = min(cq, sq)
+    ckv = min(ckv, skv)
+    assert sq % cq == 0 and skv % ckv == 0, ((sq, skv), (cq, ckv))
+    nq, nkv = sq // cq, skv // ckv
+
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    qs = jnp.moveaxis(q.reshape(b, h, nq, cq, d), 2, 0)      # (nq,B,H,cq,D)
+    ks = jnp.moveaxis(k.reshape(b, h, nkv, ckv, d), 2, 0)
+    vs = jnp.moveaxis(v.reshape(b, h, nkv, ckv, d), 2, 0)
+
+    def q_block(_, iq_qc):
+        iq, q_c = iq_qc
+        q_pos = iq * cq + jnp.arange(cq)
+
+        def kv_block(carry, ik_kc):
+            m, l, acc = carry
+            ik, k_c, v_c = ik_kc
+            k_pos = ik * ckv + jnp.arange(ckv)
+            s = jnp.einsum(
+                "bhqd,bhkd->bhqk", q_c.astype(jnp.float32),
+                k_c.astype(jnp.float32)) * scale
+            mask = jnp.ones((cq, ckv), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l = corr * l + p.sum(axis=-1, keepdims=True)
+            acc = corr * acc + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_c.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, cq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq, 1), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nkv), ks, vs))
+        out = acc / jnp.where(l == 0.0, 1.0, l)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qs))
+    return jnp.moveaxis(outs, 0, 2).reshape(b, h, sq, d)

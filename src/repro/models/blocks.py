@@ -1,0 +1,282 @@
+"""Block composition: every architecture is a ``block_pattern`` over these.
+
+Kinds: ``attn`` (full causal GQA), ``swa`` (sliding-window), ``local_attn``
+(hybrid-local window, MQA in recurrentgemma), ``rglru``, ``mlstm``, ``slstm``.
+Each block = pre-norm sublayer(s) with residual; dense/moe MLP follows
+attention-family blocks; recurrent-family blocks are self-contained (their
+MLP lives inside, per their papers) except rglru which follows Griffin's
+(recurrent block + MLP block) pairing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe as moe_mod, recurrent, xlstm
+from .layers import init_rmsnorm, rmsnorm
+
+
+ATTN_KINDS = ("attn", "swa", "local_attn", "cross")
+HAS_MLP = ("attn", "swa", "local_attn", "rglru")
+
+
+def _window_of(kind: str, cfg) -> Optional[int]:
+    if kind in ("swa", "local_attn"):
+        return cfg.window
+    return None
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, kind: str, cfg, dtype, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model, dtype)}
+    if kind in ATTN_KINDS:
+        p["attn"] = layers.init_attention(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = recurrent.init_recurrent(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.init_mlstm(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_cross"] = init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = layers.init_attention(ks[2], cfg, dtype)
+    if kind in HAS_MLP:
+        p["ln2"] = init_rmsnorm(cfg.d_model, dtype)
+        if cfg.is_moe:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = layers.init_mlp(ks[1], cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# apply (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def apply_block(
+    p: dict,
+    x: jax.Array,
+    kind: str,
+    cfg,
+    *,
+    causal: bool = True,
+    positions: Optional[jax.Array] = None,
+    memory_h: Optional[jax.Array] = None,   # encoder hiddens for cross-attn
+    return_state: bool = False,
+    s_max: Optional[int] = None,            # cache capacity when prefilling
+    chunked: bool = False,
+):
+    """Returns (x_out, moe_aux_loss[, state])."""
+    from repro.sharding.constraints import shard_act
+
+    aux = jnp.zeros((), jnp.float32)
+    state = None
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        win = _window_of(kind, cfg)
+        if return_state:
+            out, (k, v) = layers.attention(
+                p["attn"], h, cfg, causal=causal, window=win,
+                positions=positions, return_kv=True, chunked=chunked)
+            s_have = k.shape[2]
+            if (cfg.ring_cache and kind in ("swa", "local_attn")
+                    and cfg.window):
+                # arrange the last W positions into ring slots (p % W)
+                import numpy as np
+                W = min(cfg.window, s_max or s_have)
+                if s_have >= W:
+                    base = s_have - W
+                    p_for = base + ((np.arange(W) - base) % W)
+                    state = {"k": k[:, :, p_for], "v": v[:, :, p_for]}
+                else:
+                    pad = ((0, 0), (0, 0), (0, W - s_have), (0, 0))
+                    state = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+            else:
+                cap = s_max or s_have
+                pad = ((0, 0), (0, 0), (0, cap - s_have), (0, 0))
+                state = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        else:
+            out = layers.attention(
+                p["attn"], h, cfg, causal=causal, window=win,
+                positions=positions, chunked=chunked)
+    elif kind == "rglru":
+        r = recurrent.recurrent_block(p["rec"], h, cfg,
+                                      return_state=return_state)
+        out, state = r if return_state else (r, None)
+    elif kind == "mlstm":
+        r = xlstm.mlstm_block(p["mlstm"], h, cfg, return_state=return_state,
+                              chunked=chunked)
+        out, state = r if return_state else (r, None)
+    elif kind == "slstm":
+        r = xlstm.slstm_block(p["slstm"], h, cfg, return_state=return_state)
+        out, state = r if return_state else (r, None)
+    else:
+        raise ValueError(kind)
+    x = x + out.astype(x.dtype)
+    x = shard_act(x, "residual")
+
+    if "cross" in p and memory_h is not None:
+        h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        if return_state:
+            out, (ck, cv) = layers.attention(
+                p["cross"], h, cfg, memory_h=memory_h, return_kv=True,
+                chunked=chunked)
+            state = {"self": state, "cross": {"k": ck, "v": cv}}
+        else:
+            out = layers.attention(p["cross"], h, cfg, memory_h=memory_h,
+                                   chunked=chunked)
+        x = x + out.astype(x.dtype)
+    elif "cross" in p and return_state:
+        state = {"self": state, "cross": None}
+
+    if kind in HAS_MLP:
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            out, aux = moe_mod.moe_layer(p["moe"], h, cfg)
+        else:
+            out = layers.mlp(p["mlp"], h, cfg.mlp)
+        x = x + out.astype(x.dtype)
+        x = shard_act(x, "residual")
+    if return_state:
+        return x, aux, state
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# apply (single-token decode with state)
+# ---------------------------------------------------------------------------
+
+def apply_block_decode(
+    p: dict,
+    x: jax.Array,
+    state: Any,
+    kind: str,
+    pos: jax.Array,
+    cfg,
+) -> tuple[jax.Array, Any]:
+    has_cross = isinstance(state, dict) and "cross" in state and "self" in state
+    self_state = state["self"] if has_cross else state
+
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        ring = (cfg.ring_cache and kind in ("swa", "local_attn")
+                and cfg.window is not None)
+        out, self_state = layers.attention_decode(
+            p["attn"], h, self_state, pos, cfg, window=_window_of(kind, cfg),
+            ring=ring)
+    elif kind == "rglru":
+        out, self_state = recurrent.recurrent_block_decode(
+            p["rec"], h, self_state, cfg)
+    elif kind == "mlstm":
+        out, self_state = xlstm.mlstm_block_decode(
+            p["mlstm"], h, self_state, cfg)
+    elif kind == "slstm":
+        out, self_state = xlstm.slstm_block_decode(
+            p["slstm"], h, self_state, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + out.astype(x.dtype)
+
+    if has_cross and state["cross"] is not None:
+        h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        out, _ = layers.attention_decode(
+            p["cross"], h, state["cross"], pos, cfg, is_cross=True)
+        x = x + out.astype(x.dtype)
+
+    if kind in HAS_MLP:
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            out, _ = moe_mod.moe_layer(p["moe"], h, cfg)
+        else:
+            out = layers.mlp(p["mlp"], h, cfg.mlp)
+        x = x + out.astype(x.dtype)
+    state = {"self": self_state, "cross": state["cross"]} if has_cross \
+        else self_state
+    return x, state
+
+
+def init_block_state(
+    kind: str, cfg, batch: int, s_max: int, dtype,
+    *, enc_len: int = 0,
+) -> Any:
+    """Decode-time carried state for one block.
+
+    Caches are full-length even for windowed attention (the ring-buffer
+    variant is a §Perf optimisation, see EXPERIMENTS.md).
+    """
+    if kind in ("attn", "swa", "local_attn"):
+        cap = s_max
+        if cfg.ring_cache and kind in ("swa", "local_attn") and cfg.window:
+            cap = min(cfg.window, s_max)
+        state = layers.init_attention_cache(cfg, batch, cap, dtype)
+    elif kind == "rglru":
+        state = recurrent.init_recurrent_state(cfg, batch, dtype)
+    elif kind == "mlstm":
+        state = xlstm.init_mlstm_state(cfg, batch, dtype)
+    elif kind == "slstm":
+        state = xlstm.init_slstm_state(cfg, batch, dtype)
+    else:
+        raise ValueError(kind)
+    if enc_len:
+        cross = layers.init_attention_cache(cfg, batch, enc_len, dtype)
+        return {"self": state, "cross": cross}
+    return state
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def _block_params(kind: str, cfg, active_only: bool) -> int:
+    d, hd = cfg.d_model, cfg.head_dim_
+    n = 0
+    if kind in ATTN_KINDS:
+        n += d * (cfg.n_heads * hd) * 2              # wq, wo
+        n += d * (cfg.n_kv_heads * hd) * 2           # wk, wv
+    elif kind == "rglru":
+        w = cfg.lru_width_
+        n += d * w * 2 + w * w * 2 + w * d + cfg.conv_width * w
+    elif kind == "mlstm":
+        h = 2 * d
+        n += d * 2 * h + 3 * h * h + h * 2 * cfg.n_heads + h * d \
+            + cfg.conv_width * h
+    elif kind == "slstm":
+        dh = d // cfg.n_heads
+        d_ff = int(round(4 * d / 3 / 64) * 64) or 64
+        n += d * 4 * d + 4 * cfg.n_heads * dh * dh + 2 * d * d_ff
+    if kind in HAS_MLP:
+        if cfg.is_moe:
+            e = cfg.n_experts_active if active_only else cfg.n_experts
+            n += d * cfg.n_experts                    # router
+            n += e * 3 * d * cfg.d_ff
+        else:
+            n += 3 * d * cfg.d_ff if cfg.mlp in ("swiglu", "geglu") \
+                else 2 * d * cfg.d_ff
+    return n
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    pattern = cfg.block_pattern
+    total = cfg.vocab_size * cfg.d_model              # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * cfg.d_model         # lm head
+    for li in range(cfg.n_layers):
+        total += _block_params(pattern[li % len(pattern)], cfg, active_only)
+    if cfg.encoder_layers:
+        hd = cfg.head_dim_
+        for li in range(cfg.encoder_layers):
+            total += _block_params(pattern[li % len(pattern)], cfg, active_only)
+        # decoder cross-attention (wq, wo over heads; wk, wv over kv heads)
+        total += cfg.n_layers * (
+            cfg.d_model * cfg.n_heads * hd * 2
+            + cfg.d_model * cfg.n_kv_heads * hd * 2)
+    return total

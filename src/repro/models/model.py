@@ -1,0 +1,321 @@
+"""LanguageModel: one substrate for all ten architectures.
+
+* The layer stack is grouped by ``block_pattern`` repeats and lowered to a
+  single ``lax.scan`` (small HLO, fast compiles, clean remat boundaries);
+  remainder layers run unscanned ("tail").
+* Decoder-only, encoder-decoder (seamless), and stub-frontend (audio frames /
+  vision patch embeddings as direct inputs) variants share this class.
+* ``loss`` evaluates the LM cross-entropy in *sequence chunks* with
+  vocab-parallel logits, so the (B, S, V) tensor never materialises.
+* ``prefill`` + ``decode_step`` carry per-block states (KV caches for
+  attention, O(1) recurrent states for rglru/mlstm/slstm).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import shard_act
+from . import blocks
+from .layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def _dtype_of(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class LanguageModel:
+    def __init__(self, cfg, *, meter: bool = False):
+        self.cfg = cfg
+        # meter mode (dry-run metering artifacts): fully unroll every scan so
+        # XLA cost_analysis counts true trip counts, and use materialised
+        # attention / single-chunk loss (no inner loops). Never used at
+        # runtime — compile-only.
+        self.meter = meter
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = _dtype_of(cfg)
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "emb": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model))
+                    * 0.02).astype(dt),
+            "ln_f": init_rmsnorm(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                keys[1], cfg.d_model, cfg.vocab_size, dt)
+
+        cross = cfg.encoder_layers > 0
+
+        def init_group(k):
+            ks = jax.random.split(k, cfg.pattern_period)
+            return {
+                f"b{i}": blocks.init_block(ks[i], kind, cfg, dt, cross=cross)
+                for i, kind in enumerate(cfg.block_pattern)
+            }
+
+        if cfg.n_groups > 0:
+            gkeys = jax.random.split(keys[2], cfg.n_groups)
+            params["groups"] = jax.vmap(init_group)(gkeys)
+        tkeys = jax.random.split(keys[3], max(cfg.n_tail_layers, 1))
+        params["tail"] = [
+            blocks.init_block(tkeys[i], kind, cfg, dt, cross=cross)
+            for i, kind in enumerate(cfg.tail_pattern)
+        ]
+
+        if cfg.encoder_layers:
+            def init_enc_group(k):
+                ks = jax.random.split(k, cfg.pattern_period)
+                return {
+                    f"b{i}": blocks.init_block(ks[i], kind, cfg, dt)
+                    for i, kind in enumerate(cfg.block_pattern)
+                }
+            n_enc_groups = cfg.encoder_layers // cfg.pattern_period
+            ekeys = jax.random.split(keys[4], max(n_enc_groups, 1))
+            params["enc"] = {
+                "groups": jax.vmap(init_enc_group)(ekeys[:n_enc_groups])
+                if n_enc_groups else None,
+                "tail": [
+                    blocks.init_block(
+                        jax.random.fold_in(keys[5], i), kind, cfg, dt)
+                    for i, kind in enumerate(
+                        cfg.block_pattern[: cfg.encoder_layers
+                                          % cfg.pattern_period])
+                ],
+                "ln_f": init_rmsnorm(cfg.d_model, dt),
+            }
+        return params
+
+    # ------------------------------------------------------------------
+    # embedding
+    # ------------------------------------------------------------------
+    def embed(self, params, tokens, extra_embeds=None):
+        cfg = self.cfg
+        x = params["emb"][tokens]
+        if cfg.emb_scale:
+            x = x * math.sqrt(cfg.d_model)
+        if extra_embeds is not None:   # vision patches prepended
+            x = jnp.concatenate(
+                [extra_embeds.astype(x.dtype), x], axis=1)
+        return shard_act(x, "residual")
+
+    # ------------------------------------------------------------------
+    # stacks
+    # ------------------------------------------------------------------
+    def _run_stack(self, stack_params, x, *, causal=True, memory_h=None,
+                   remat=True, chunked=False):
+        cfg = self.cfg
+        pattern = cfg.block_pattern
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def group_fn(x, gp, memory_h):
+            from repro.sharding.constraints import shard_param_slice
+            gp = shard_param_slice(gp)
+            aux = jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(pattern):
+                x, a = blocks.apply_block(
+                    gp[f"b{i}"], x, kind, cfg, causal=causal,
+                    memory_h=memory_h, chunked=chunked)
+                aux = aux + a
+            return x, aux
+
+        gfn = group_fn
+        if remat:
+            gfn = jax.checkpoint(group_fn,
+                                 policy=jax.checkpoint_policies.nothing_saveable)
+
+        if stack_params.get("groups") is not None:
+            def scan_body(carry, gp):
+                x, aux = carry
+                x, a = gfn(x, gp, memory_h)
+                return (x, aux + a), None
+
+            n_g = jax.tree_util.tree_leaves(
+                stack_params["groups"])[0].shape[0]
+            (x, aux_total), _ = jax.lax.scan(
+                scan_body, (x, aux_total), stack_params["groups"],
+                unroll=n_g if self.meter else 1)
+        for i, tp in enumerate(stack_params.get("tail", [])):
+            kind = pattern[i]
+            x, a = blocks.apply_block(
+                tp, x, kind, cfg, causal=causal, memory_h=memory_h,
+                chunked=chunked)
+            aux_total = aux_total + a
+        return x, aux_total
+
+    # ------------------------------------------------------------------
+    # forward (training / prefill compute)
+    # ------------------------------------------------------------------
+    def forward(self, params, tokens, *, frames=None, pixels=None,
+                remat=True):
+        """Returns (hidden (B, S, d), aux_loss). ``frames``: audio-stub
+        encoder embeddings (enc-dec); ``pixels``: vision-stub patch
+        embeddings prepended to the token sequence."""
+        cfg = self.cfg
+        memory_h = None
+        if cfg.encoder_layers:
+            enc_x = shard_act(frames.astype(_dtype_of(cfg)), "residual")
+            enc_x, _ = self._run_stack(
+                params["enc"], enc_x, causal=False, remat=remat)
+            memory_h = rmsnorm(enc_x, params["enc"]["ln_f"], cfg.norm_eps)
+        x = self.embed(params, tokens, extra_embeds=pixels)
+        dec = {"groups": params.get("groups"), "tail": params.get("tail", [])}
+        x, aux = self._run_stack(
+            dec, x, causal=True, memory_h=memory_h, remat=remat)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return x, aux
+
+    def logits(self, params, hidden):
+        head = params["emb"].T if self.cfg.tie_embeddings \
+            else params["lm_head"]
+        return hidden @ head
+
+    # ------------------------------------------------------------------
+    # loss (sequence-sharded full-vocab logits)
+    # ------------------------------------------------------------------
+    def loss(self, params, batch, *, n_chunks: int = 8, remat=True):
+        """batch: tokens (B,S), labels (B,S) with -1 = masked, plus
+        frames/pixels stubs. Returns (loss, metrics).
+
+        Logits stay sequence-sharded with the vocab dim whole
+        (``logits_seq``): (B,S,V) bf16 is ≤1.3 GB/device even at qwen2.5's
+        152k vocab, and chunk-scanning a *sharded* axis is an XLA
+        anti-pattern (every slice lives on one shard → per-chunk gather
+        storms; replacing the earlier vocab-parallel chunk scan was §Perf
+        iteration B1 — see EXPERIMENTS.md). ``n_chunks`` is retained for
+        API compatibility and ignored.
+        """
+        del n_chunks
+        cfg = self.cfg
+        hidden, aux = self.forward(
+            params, batch["tokens"], frames=batch.get("frames"),
+            pixels=batch.get("pixels"), remat=remat)
+        labels = batch["labels"]
+        if batch.get("pixels") is not None:
+            # image positions carry no LM loss
+            pad = jnp.full(batch["pixels"].shape[:2], -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        head = params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = shard_act(hidden @ head, "logits_seq").astype(jnp.float32)
+        mask = labels >= 0
+        y_safe = jnp.where(mask, labels, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_safe[..., None], axis=-1)[..., 0]
+        nll_sum = jnp.where(mask, logz - gold, 0.0).sum()
+        n_tok = mask.sum()
+        nll = nll_sum / jnp.maximum(n_tok, 1)
+        total = nll + 0.01 * aux
+        return total, {"nll": nll, "aux": aux, "tokens": n_tok}
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def init_states(self, batch: int, s_max: int, *, enc_len: int = 0):
+        """Zero decode states laid out like prefill's outputs (for dry-run)."""
+        cfg = self.cfg
+        dt = _dtype_of(cfg)
+
+        def group_states(n):
+            def one(_):
+                return {
+                    f"b{i}": blocks.init_block_state(
+                        kind, cfg, batch, s_max, dt, enc_len=enc_len)
+                    for i, kind in enumerate(cfg.block_pattern)
+                }
+            return jax.vmap(one)(jnp.arange(n)) if n else None
+
+        return {
+            "groups": group_states(cfg.n_groups),
+            "tail": [
+                blocks.init_block_state(kind, cfg, batch, s_max, dt,
+                                        enc_len=enc_len)
+                for kind in cfg.tail_pattern
+            ],
+        }
+
+    def prefill(self, params, tokens, *, s_max: int, frames=None,
+                pixels=None):
+        """Run the full-sequence pass, returning (last-token logits, states)."""
+        cfg = self.cfg
+        memory_h = None
+        if cfg.encoder_layers:
+            enc_x = shard_act(frames.astype(_dtype_of(cfg)), "residual")
+            enc_x, _ = self._run_stack(params["enc"], enc_x, causal=False,
+                                       remat=False, chunked=not self.meter)
+            memory_h = rmsnorm(enc_x, params["enc"]["ln_f"], cfg.norm_eps)
+        x = self.embed(params, tokens, extra_embeds=pixels)
+        pattern = cfg.block_pattern
+
+        def group_fn(x, gp):
+            from repro.sharding.constraints import shard_param_slice
+            gp = shard_param_slice(gp)
+            states = {}
+            for i, kind in enumerate(pattern):
+                x, _, st = blocks.apply_block(
+                    gp[f"b{i}"], x, kind, cfg, causal=True,
+                    memory_h=memory_h, return_state=True, s_max=s_max,
+                    chunked=not self.meter)
+                states[f"b{i}"] = st
+            return x, states
+
+        states = {"groups": None, "tail": []}
+        if params.get("groups") is not None:
+            def scan_body(x, gp):
+                x, st = group_fn(x, gp)
+                return x, st
+            n_g = jax.tree_util.tree_leaves(
+                params["groups"])[0].shape[0]
+            x, states["groups"] = jax.lax.scan(
+                scan_body, x, params["groups"],
+                unroll=n_g if self.meter else 1)
+        for i, tp in enumerate(params.get("tail", [])):
+            x, _, st = blocks.apply_block(
+                tp, x, pattern[i], cfg, causal=True, memory_h=memory_h,
+                return_state=True, s_max=s_max, chunked=not self.meter)
+            states["tail"].append(st)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return self.logits(params, x[:, -1:, :]), states
+
+    def decode_step(self, params, states, token, pos):
+        """token: (B, 1) int32; pos: scalar. Returns (logits (B,1,V), states)."""
+        cfg = self.cfg
+        x = params["emb"][token]
+        if cfg.emb_scale:
+            x = x * math.sqrt(cfg.d_model)
+        pattern = cfg.block_pattern
+
+        if states.get("groups") is not None:
+            def scan_body(x, gp_st):
+                from repro.sharding.constraints import shard_param_slice
+                gp, st = gp_st
+                gp = shard_param_slice(gp)
+                new_st = {}
+                for i, kind in enumerate(pattern):
+                    x, s2 = blocks.apply_block_decode(
+                        gp[f"b{i}"], x, st[f"b{i}"], kind, pos, cfg)
+                    new_st[f"b{i}"] = s2
+                return x, new_st
+
+            n_g = jax.tree_util.tree_leaves(params["groups"])[0].shape[0]
+            x, new_groups = jax.lax.scan(
+                scan_body, x, (params["groups"], states["groups"]),
+                unroll=n_g if self.meter else 1)
+        else:
+            new_groups = None
+        new_tail = []
+        for i, tp in enumerate(params.get("tail", [])):
+            x, s2 = blocks.apply_block_decode(
+                tp, x, states["tail"][i], pattern[i], pos, cfg)
+            new_tail.append(s2)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return self.logits(params, x), \
+            {"groups": new_groups, "tail": new_tail}

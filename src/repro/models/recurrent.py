@@ -1,0 +1,95 @@
+"""RecurrentGemma's recurrent block: causal conv1d + RG-LRU (Griffin).
+
+Training uses the chunked/associative linear scan (``repro.kernels.
+linear_scan`` on TPU; its jnp oracle here), decode carries an O(1) state —
+the reason recurrentgemma *runs* the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_scan import ref as scan_ref
+from .layers import dense_init, init_rmsnorm
+
+_C_FACTOR = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def init_recurrent(key, cfg, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width_
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = sigmoid(Λ)^(8r) starts near 0.9..0.999 (Griffin A.2)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / _C_FACTOR) / (1 - u ** (1.0 / _C_FACTOR)))
+    return {
+        "w_x": dense_init(ks[1], d, w, dtype),
+        "w_y": dense_init(ks[2], d, w, dtype),
+        "conv_k": (jax.random.normal(ks[3], (cfg.conv_width, w))
+                   * (1.0 / math.sqrt(cfg.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_rg": dense_init(ks[4], w, w, dtype),
+        "w_ig": dense_init(ks[5], w, w, dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], w, d, dtype, scale=1.0 / math.sqrt(w)),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array, bias: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, width K. x: (B, S, w); state: (B, K-1, w)."""
+    k = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, w)
+    out = sum(xp[:, i:i + x.shape[1], :] * kernel[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return out + bias, new_state
+
+
+def _rg_lru_gates(p, u):
+    r = jax.nn.sigmoid(u @ p["w_rg"])
+    i = jax.nn.sigmoid(u @ p["w_ig"])
+    log_a = -_C_FACTOR * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * (i * u).astype(jnp.float32)
+    return a, gated
+
+
+def recurrent_block(p: dict, x: jax.Array, cfg, *, return_state: bool = False):
+    """(B, S, d) -> (B, S, d), parallel (training/prefill) form."""
+    xb = x @ p["w_x"]
+    yb = jax.nn.gelu(x @ p["w_y"], approximate=True)
+    u, conv_state = _causal_conv(xb, p["conv_k"], p["conv_b"])
+    a, gated = _rg_lru_gates(p, u)
+    h = scan_ref.linear_scan(a, gated)
+    out = (h.astype(x.dtype) * yb) @ p["w_out"]
+    if return_state:
+        return out, {"conv": conv_state, "h": h[:, -1, :]}
+    return out
+
+
+def recurrent_block_decode(
+    p: dict, x: jax.Array, state: dict, cfg
+) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d); state: {"conv": (B, K-1, w), "h": (B, w)}."""
+    xb = x @ p["w_x"]
+    yb = jax.nn.gelu(x @ p["w_y"], approximate=True)
+    u, conv_state = _causal_conv(xb, p["conv_k"], p["conv_b"], state["conv"])
+    a, gated = _rg_lru_gates(p, u)
+    h = a[:, 0] * state["h"] + gated[:, 0]          # single step
+    out = (h[:, None, :].astype(x.dtype) * yb) @ p["w_out"]
+    return out, {"conv": conv_state, "h": h}
+
+
+def init_recurrent_state(cfg, batch: int, dtype) -> dict:
+    w = cfg.lru_width_
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,273 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+* **mLSTM** trains in its parallel (quadratic, attention-like) form with
+  exponential-gate stabilisation, and decodes recurrently with the per-head
+  matrix state (C, n, m) — O(1) per token, which is why xlstm runs the
+  long_500k cell.  Projection factor 2, causal conv width 4, per-head
+  RMS-style group norm, learnable skip — following the paper's block.
+* **sLSTM** has true recurrent (h_{t-1}) connections through block-diagonal
+  R matrices, so training is a ``lax.scan`` over time (inherently
+  sequential — the paper says as much); exponential gating is stabilised
+  with the running max m.  Post-projection GeLU MLP with factor 4/3.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, init_rmsnorm, rmsnorm
+from .recurrent import _causal_conv
+
+
+def _head_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """Per-head RMS norm. x: (..., H, dh); scale: (H*dh,)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    out = xf.reshape(*x.shape[:-2], -1) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    h = 2 * d                       # projection factor 2
+    H = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * h, dtype),
+        "conv_k": (jax.random.normal(ks[1], (cfg.conv_width, h))
+                   * (1.0 / math.sqrt(cfg.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((h,), dtype),
+        "wq": dense_init(ks[2], h, h, dtype),
+        "wk": dense_init(ks[3], h, h, dtype),
+        "wv": dense_init(ks[4], h, h, dtype),
+        "w_if": dense_init(ks[5], h, 2 * H, dtype),   # input+forget gates
+        "skip": jnp.ones((h,), dtype),
+        "norm": init_rmsnorm(h, dtype),
+        "w_down": dense_init(ks[6], h, d, dtype, scale=1.0 / math.sqrt(h)),
+    }
+
+
+def _mlstm_qkvif(p, xm, cfg):
+    b, s, h = xm.shape
+    H = cfg.n_heads
+    dh = h // H
+    c, _ = _causal_conv(xm, p["conv_k"], p["conv_b"])
+    c = jax.nn.silu(c)
+    q = (c @ p["wq"]).reshape(b, s, H, dh)
+    k = (c @ p["wk"]).reshape(b, s, H, dh) / math.sqrt(dh)
+    v = (xm @ p["wv"]).reshape(b, s, H, dh)
+    gates = (c @ p["w_if"]).astype(jnp.float32)       # (b, s, 2H)
+    i_gate, f_gate = gates[..., :H], gates[..., H:]
+    return q, k, v, i_gate, f_gate, c
+
+
+def _mlstm_weights_chunk(q_c, F_c, k, v, F, i_gate, s, q_pos0, cq):
+    """Stabilised mLSTM mixing for one q-chunk against all keys."""
+    # D[i, j] = F_i - F_j + i_j for j <= i
+    D = F_c[:, :, None, :] - F[:, None, :, :] + i_gate[:, None, :, :]
+    q_pos = q_pos0 + jnp.arange(cq)
+    causal = q_pos[:, None] >= jnp.arange(s)[None, :]
+    D = jnp.where(causal[None, :, :, None], D, -jnp.inf)
+    m = jnp.max(D, axis=2, keepdims=True)
+    m = jnp.maximum(m, -1e30)                         # guard all -inf rows
+    decay = jnp.exp(D - m)
+    scores = jnp.einsum("bihd,bjhd->bijh",
+                        q_c.astype(jnp.float32), k.astype(jnp.float32))
+    w = scores * decay
+    denom = jnp.maximum(
+        jnp.abs(w.sum(axis=2, keepdims=True)), jnp.exp(-m))
+    return jnp.einsum("bijh,bjhd->bihd", w / denom, v.astype(jnp.float32))
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg, *, return_state: bool = False,
+                chunked: bool = False, cq: int = 512):
+    """Parallel (quadratic) training form; ``chunked`` scans q-chunks so the
+    (S×S) decay matrix never materialises (the 32k/500k prefill path)."""
+    b, s, d = x.shape
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)                 # (b, s, h) each
+    q, k, v, i_gate, f_gate, conv_tail = _mlstm_qkvif(p, xm, cfg)
+
+    log_f = jax.nn.log_sigmoid(f_gate)                # (b, s, H)
+    F = jnp.cumsum(log_f, axis=1)                     # prefix sums
+    if chunked and s > cq:
+        assert s % cq == 0, (s, cq)
+        nq = s // cq
+        qs = jnp.moveaxis(q.reshape(b, nq, cq, *q.shape[2:]), 1, 0)
+        Fs = jnp.moveaxis(F.reshape(b, nq, cq, F.shape[-1]), 1, 0)
+
+        def q_block(_, xs):
+            iq, q_c, F_c = xs
+            out = _mlstm_weights_chunk(
+                q_c, F_c, k, v, F, i_gate, s, iq * cq, cq)
+            return None, out
+
+        _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qs, Fs))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, q.shape[2], q.shape[3])
+    else:
+        out = _mlstm_weights_chunk(q, F, k, v, F, i_gate, s, 0, s)
+    out = _head_norm(out, p["norm"], cfg.norm_eps)    # (b, s, h)
+    out = out + xm * p["skip"]
+    out = out * jax.nn.silu(z)
+    out = out @ p["w_down"]
+    if not return_state:
+        return out
+    # Closed-form final recurrent state (continues decode exactly):
+    #   m_S = max_j (F_S - F_j + i_j);  C_S = Σ_j e^{F_S-F_j+i_j-m_S} k_j v_jᵀ
+    rel = F[:, -1:, :] - F + i_gate                   # (b, s, H)
+    m_S = jnp.max(rel, axis=1)                        # (b, H)
+    wts = jnp.exp(rel - m_S[:, None, :])              # (b, s, H)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = jnp.einsum("bjh,bjhk,bjhl->bhkl", wts, kf, vf)
+    n = jnp.einsum("bjh,bjhk->bhk", wts, kf)
+    state = {"C": C, "n": n, "m": m_S,
+             "conv": xm[:, -(cfg.conv_width - 1):, :]}
+    return out, state
+
+
+def mlstm_block_decode(p, x, state, cfg):
+    """Recurrent step. state: C (B,H,dk,dv), n (B,H,dk), m (B,H), conv (B,K-1,h)."""
+    b = x.shape[0]
+    H = cfg.n_heads
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    h = xm.shape[-1]
+    dh = h // H
+    c, conv_state = _causal_conv(xm, p["conv_k"], p["conv_b"], state["conv"])
+    c = jax.nn.silu(c)
+    q = (c @ p["wq"]).reshape(b, H, dh)
+    k = ((c @ p["wk"]) / math.sqrt(dh)).reshape(b, H, dh).astype(jnp.float32)
+    v = (xm @ p["wv"]).reshape(b, H, dh).astype(jnp.float32)
+    gates = (c @ p["w_if"]).astype(jnp.float32).reshape(b, 2 * H)
+    log_i, log_f = gates[:, :H], jax.nn.log_sigmoid(gates[:, H:])
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)        # (b, H)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    i_sc = jnp.exp(log_i - m_new)[..., None]
+    C = f_sc[..., None] * state["C"] + i_sc[..., None] * (
+        k[..., :, None] * v[..., None, :])                # (b,H,dk,dv)
+    n = f_sc * state["n"] + i_sc * k
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n))[..., None],
+        jnp.exp(-m_new)[..., None])
+    out = (num / den).reshape(b, 1, h)
+    out = _head_norm(out.reshape(b, 1, H, dh), p["norm"], cfg.norm_eps)
+    out = out + xm * p["skip"]
+    out = out * jax.nn.silu(z)
+    new_state = {"C": C, "n": n, "m": m_new, "conv": conv_state}
+    return out @ p["w_down"], new_state
+
+
+def init_mlstm_state(cfg, batch: int, dtype) -> dict:
+    H = cfg.n_heads
+    h = 2 * cfg.d_model
+    dh = h // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), 0.0, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, h), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 7)
+    d_ff = int(round(4 * d / 3 / 64) * 64) or 64      # pf 4/3, aligned
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),       # i f z o
+        "r_gates": (jax.random.normal(ks[1], (4, H, dh, dh))
+                    * (1.0 / math.sqrt(dh))).astype(dtype),  # block-diag R
+        "b_gates": jnp.zeros((4 * d,), dtype),
+        "norm": init_rmsnorm(d, dtype),
+        "ffn_up": dense_init(ks[2], d, d_ff, dtype),
+        "ffn_down": dense_init(ks[3], d_ff, d, dtype,
+                               scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def _slstm_step(p, carry, wx, cfg):
+    """One timestep. carry: (c, n, h, m) each (B, d) fp32; wx: (B, 4d) fp32."""
+    c, n, h, m = carry
+    b, d = c.shape
+    H = cfg.n_heads
+    dh = d // H
+    hh = h.reshape(b, H, dh)
+    rec = jnp.einsum("bhk,ghkl->gbhl", hh, p["r_gates"].astype(jnp.float32))
+    rec = rec.reshape(4, b, d)
+    pre = wx.reshape(b, 4, d).transpose(1, 0, 2) + rec \
+        + p["b_gates"].astype(jnp.float32).reshape(4, d)[:, None, :]
+    i_t, f_t, z_t, o_t = pre[0], pre[1], pre[2], pre[3]
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_sc = jnp.exp(i_t - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c_new = f_sc * c + i_sc * jnp.tanh(z_t)
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(p: dict, x: jax.Array, cfg, *, return_state: bool = False):
+    """(B, S, d): true recurrence -> lax.scan over time.
+
+    sLSTM is serial in time (the paper says as much), which conflicts with
+    sequence sharding: the gate pre-activations are gathered across the
+    model axis and the scan runs replicated per model shard (compute is
+    redundant ×model_size but tiny; a pipelined cross-shard scan is the
+    §Perf follow-up).  Output re-shards to the residual layout.
+    """
+    from repro.sharding.constraints import shard_act
+
+    b, s, d = x.shape
+    x = shard_act(x, "seq_gathered")
+    wx = (x @ p["w_gates"]).astype(jnp.float32)       # (b, s, 4d)
+    zeros = jnp.zeros((b, d), jnp.float32)
+    carry0 = (zeros, zeros, zeros, zeros)
+
+    def step(carry, wx_t):
+        new = _slstm_step(p, carry, wx_t, cfg)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)        # (b, s, d)
+    h = shard_act(h, "residual")                      # back to seq-sharded
+    h = rmsnorm(h, p["norm"], cfg.norm_eps)
+    y = jax.nn.gelu(h @ p["ffn_up"], approximate=True) @ p["ffn_down"]
+    if return_state:
+        c, n, hh, m = carry
+        return y, {"c": c, "n": n, "h": hh, "m": m}
+    return y
+
+
+def slstm_block_decode(p, x, state, cfg):
+    """x: (B, 1, d); state: dict of c,n,h,m (B, d)."""
+    wx = (x[:, 0] @ p["w_gates"]).astype(jnp.float32)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    c, n, h, m = _slstm_step(p, carry, wx, cfg)
+    out = rmsnorm(h[:, None].astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = jax.nn.gelu(out @ p["ffn_up"], approximate=True) @ p["ffn_down"]
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def init_slstm_state(cfg, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}

@@ -1,0 +1,86 @@
+"""AdamW with fp32 master weights (mixed-precision training state).
+
+State = {master fp32, m fp32, v fp32, count}; the *fast* params handed to the
+forward pass stay bf16, so FSDP all-gathers move half the bytes — the "memory
+differentiation" idea of the paper applied to parameter storage classes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    master: Any      # fp32 copy of params
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params) -> OptState:
+        # copy=True: master must never alias the fast params (donation safety)
+        f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            master=jax.tree_util.tree_map(f32, params),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, metrics)."""
+        gf = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(gf)))
+        if self.grad_clip is not None:
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            gf = jax.tree_util.tree_map(lambda g: g * scale, gf)
+        count = state.count + 1
+        c1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+
+        def upd(g, m, v, master):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mhat = m / c1
+            vhat = v / c2
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and master.ndim >= 2:
+                step = step + self.weight_decay * master
+            master = master - lr * step
+            return m, v, master
+
+        flat_g, tdef = jax.tree_util.tree_flatten(gf)
+        flat_m = jax.tree_util.tree_leaves(state.m)
+        flat_v = jax.tree_util.tree_leaves(state.v)
+        flat_ma = jax.tree_util.tree_leaves(state.master)
+        new_m, new_v, new_ma = [], [], []
+        for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+            m2, v2, ma2 = upd(g, m, v, ma)
+            new_m.append(m2); new_v.append(v2); new_ma.append(ma2)
+        unf = lambda leaves: jax.tree_util.tree_unflatten(tdef, leaves)
+        new_state = OptState(unf(new_ma), unf(new_m), unf(new_v), count)
+        # fast (compute) params: cast master back to the original dtypes
+        new_params = jax.tree_util.tree_map(
+            lambda p, ma: ma.astype(p.dtype), params, unf(new_ma))
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,14 @@
+"""LR schedules."""
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(c < warmup, warm, cos)
+    return lr

@@ -1,0 +1,3 @@
+from .supervisor import Supervisor
+
+__all__ = ["Supervisor"]

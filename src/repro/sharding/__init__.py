@@ -1,0 +1,6 @@
+from .constraints import shard_act, use_policy, current_policy
+from .policy import ShardingPolicy, make_policy
+
+__all__ = [
+    "shard_act", "use_policy", "current_policy", "ShardingPolicy", "make_policy",
+]

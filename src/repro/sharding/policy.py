@@ -1,0 +1,214 @@
+"""Sharding policy: how every tensor in the system maps onto the mesh.
+
+Scheme (uniform across all ten architectures — chosen so no architecture
+hits a head-divisibility wall; see DESIGN.md §4):
+
+* **Parameters** — flat FSDP (ZeRO-3): each tensor's largest eligible dim is
+  sharded over ``fsdp_axes`` = ("data", "model") — 256-way within a pod,
+  replicated across pods (gradient sync crosses pods hierarchically).
+* **Activations** — batch over ``dp_axes`` = ("pod", "data"); sequence over
+  "model" (context/sequence parallelism).  Attention keeps queries
+  seq-sharded and gathers the (GQA-small) K/V over "model".
+* **Logits** — vocab-parallel over "model" (sequence unshards there), with
+  the loss computed in sequence chunks so full logits never materialise.
+* **MoE** — expert dim over "model" when divisible (EP all_to_all inside a
+  shard_map), otherwise experts replicated over "model" and computed on the
+  local sequence shard.
+
+The policy object is consumed by (a) ``shard_act`` tags inside model code,
+(b) ``param_specs`` for in/out shardings of the jitted steps, (c) the KV
+cache layout for decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]          # batch axes, outermost first
+    model_axis: Optional[str]         # tensor/sequence axis (None -> off)
+    fsdp_axes: tuple[str, ...]        # parameter flat-sharding axes
+    batch_sharded: bool = True        # False for global_batch=1 (long_500k)
+    seq_sharded: bool = True
+    # params_tp (decode serving): weights live TP-sharded over the model
+    # axis (column-parallel in / row-parallel out) + FSDP over data only —
+    # no per-step weight regathers over the model axis (§Perf C1)
+    params_tp: bool = False
+    # tensors below this many elements replicate (tiny-tensor FSDP causes
+    # involuntary SPMD remats + pointless gathers; §Perf A2)
+    min_shard_elems: int = 65536
+
+    # -- sizes ------------------------------------------------------------
+    @property
+    def fsdp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.fsdp_axes]))
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.model_axis else 1
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    # -- activations --------------------------------------------------------
+    def activation_spec(self, tag: str, ndim: int) -> Optional[P]:
+        dp = self.dp_axes if self.batch_sharded else None
+        sp = self.model_axis if self.seq_sharded else None
+        if tag == "residual":        # (B, S, d)
+            return P(dp, sp, None)
+        if tag == "tokens":          # (B, S)
+            return P(dp, sp)
+        if tag == "kv_gathered":     # (B, KV, S, hd) — gather seq over model
+            return P(dp, None, None, None)
+        if tag == "seq_gathered":    # (B, S, d) — sLSTM: time scan needs the
+            return P(dp, None, None)  # whole sequence (serial recurrence)
+        if tag == "ffn_hidden":      # (B, S, ff)
+            return P(dp, sp, None)
+        if tag == "logits_vp":       # (B, S_chunk, V) vocab-parallel
+            return P(dp, None, sp)
+        if tag == "logits_seq":      # (B, S, V) seq-sharded, full vocab
+            return P(dp, sp, None)
+        if tag == "kv_cache":        # (B, KV, S_max, hd) — seq-sharded cache
+            return P(dp, None, sp, None)
+        if tag == "recurrent_state":  # (B, width) / (B, H, dk, dv)
+            return (P(dp, sp) if ndim == 2
+                    else P(dp, None, sp, None) if ndim == 4
+                    else P(dp, None, sp))
+        if tag == "expert_buffer":   # (E, C, d) — EP
+            return P(sp, None, None)
+        return None
+
+    def activation_sharding(self, tag: str, ndim: int):
+        spec = self.activation_spec(tag, ndim)
+        return NamedSharding(self.mesh, spec if spec is not None else P())
+
+    # -- parameters -----------------------------------------------------------
+    def param_spec(self, shape: tuple[int, ...], *, stacked: bool = False,
+                   expert_dim: Optional[int] = None) -> P:
+        """Flat-FSDP: shard the largest dim divisible by the axis product.
+
+        ``stacked`` marks a leading scan (layer-group) dim that must stay
+        unsharded; ``expert_dim`` pins MoE expert weights' expert axis to the
+        model axis (EP) with FSDP falling back to the remaining axes.
+        """
+        start = 1 if stacked else 0
+        dims = list(range(start, len(shape)))
+        spec: list[Any] = [None] * len(shape)
+        n_elems = int(np.prod(shape)) if shape else 0
+        if len(shape) - start < 2 or n_elems < self.min_shard_elems:
+            return P(*spec)          # tiny / 1-D tensors replicate (A2)
+        if expert_dim is not None and self.model_axis:
+            spec[expert_dim] = self.model_axis
+            dims.remove(expert_dim)
+            axes = tuple(a for a in self.fsdp_axes if a != self.model_axis)
+        else:
+            axes = self.fsdp_axes
+        if axes:
+            size = int(np.prod([self.mesh.shape[a] for a in axes]))
+            cands = [d for d in dims if shape[d] % size == 0 and shape[d] >= size]
+            if cands:
+                d = max(cands, key=lambda i: shape[i])
+                spec[d] = axes if len(axes) > 1 else axes[0]
+            else:
+                # fall back to the single largest axis that divides
+                for ax in sorted(axes, key=lambda a: -self.mesh.shape[a]):
+                    n = self.mesh.shape[ax]
+                    cands = [d for d in dims if shape[d] % n == 0 and shape[d] >= n]
+                    if cands:
+                        d = max(cands, key=lambda i: shape[i])
+                        spec[d] = ax
+                        break
+        return P(*spec)
+
+    def param_sharding(self, shape, **kw) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_spec(shape, **kw))
+
+    # TP placement by weight role: column-parallel projections shard their
+    # output dim, row-parallel ones their input dim (Megatron convention)
+    _TP_COL = ("wq", "wk", "wv", "w_gate", "w_up", "ffn_up", "w_x", "w_y",
+               "w_gates", "w_if", "lm_head")
+    _TP_ROW = ("wo", "w_down", "ffn_down", "w_out")
+
+    def _tp_spec(self, keys, shape, stacked: bool):
+        """TP serving placement: weights shard over the model axis only and
+        stay *resident* (replicated over data — a 1/model_size shard fits
+        HBM for every assigned arch), so decode steps move zero weight
+        bytes (§Perf C1/C2)."""
+        last = keys[-1] if keys else ""
+        m, n_m = self.model_axis, self.model_size
+        o = 1 if stacked else 0
+        if len(shape) - o != 2 or m is None:
+            return None
+        spec: list[Any] = [None] * len(shape)
+        if last in self._TP_COL and shape[o + 1] % n_m == 0:
+            spec[o + 1] = m
+            return P(*spec)
+        if last in self._TP_ROW and shape[o] % n_m == 0:
+            spec[o] = m
+            return P(*spec)
+        if last == "emb" and shape[o + 1] % n_m == 0:
+            spec[o + 1] = m        # d_model-sharded: lookup gathers 1/16
+            return P(*spec)
+        return None
+
+    def tree_param_shardings(self, tree) -> Any:
+        """Shardings for a parameter pytree (heuristics by path)."""
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        treedef = jax.tree_util.tree_structure(tree)
+        specs = []
+        for path, leaf in flat:
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            stacked = "groups" in keys
+            if self.params_tp:
+                tp = self._tp_spec(keys, leaf.shape, stacked)
+                if tp is not None:
+                    specs.append(NamedSharding(self.mesh, tp))
+                    continue
+            expert_dim = None
+            if any(k in ("experts",) for k in keys if isinstance(k, str)):
+                # expert weights: (..., E, d_in, d_out); expert dim is 0
+                # (or 1 when stacked)
+                e_ax = 1 if stacked else 0
+                if leaf.ndim > e_ax and leaf.shape[e_ax] % max(self.model_size, 1) == 0 \
+                        and self.model_size > 1:
+                    expert_dim = e_ax
+            specs.append(self.param_sharding(
+                leaf.shape, stacked=stacked, expert_dim=expert_dim))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+def make_policy(
+    mesh: Mesh,
+    *,
+    batch_sharded: bool = True,
+    seq_sharded: bool = True,
+    fsdp: bool = True,
+    params_tp: bool = False,
+) -> ShardingPolicy:
+    """Derive the standard policy from a mesh's axis names."""
+    names = mesh.axis_names
+    model_axis = "model" if "model" in names else None
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    fsdp_axes = tuple(a for a in names if a in ("data", "model")) if fsdp else ()
+    return ShardingPolicy(
+        mesh=mesh,
+        dp_axes=dp,
+        model_axis=model_axis,
+        fsdp_axes=fsdp_axes,
+        batch_sharded=batch_sharded,
+        seq_sharded=seq_sharded,
+        params_tp=params_tp,
+    )

@@ -1,0 +1,7 @@
+from .step import make_train_step, make_eval_step, make_manual_dp_train_step
+from .serve import make_prefill_step, make_decode_step
+
+__all__ = [
+    "make_train_step", "make_eval_step", "make_manual_dp_train_step",
+    "make_prefill_step", "make_decode_step",
+]

@@ -1,0 +1,73 @@
+"""Serving step factories: prefill (full-sequence, cache-building) and
+single-token decode against sharded caches.
+
+Decode sharding (uniform across architectures — flash-decoding style):
+batch over the data axes, cache *sequence* over the model axis; each model
+shard scores its KV slice and XLA merges the partial softmaxes with the
+collectives its partitioner derives (log-sum-exp-equivalent).  Recurrent
+states shard their channel/key dims over the model axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.constraints import use_policy
+
+
+def state_spec(policy, path_keys: tuple, shape: tuple[int, ...]) -> P:
+    """Sharding spec for one decode-state leaf."""
+    dp = policy.dp_axes if policy.batch_sharded else None
+    m = policy.model_axis
+    n_model = policy.model_size
+    stacked = "groups" in path_keys
+    o = 1 if stacked else 0
+    spec: list[Any] = [None] * len(shape)
+    if dp is not None and len(shape) > o and shape[o] % max(policy.dp_size, 1) == 0:
+        spec[o] = dp
+    if m is None or n_model <= 1:
+        return P(*spec)
+    last = path_keys[-1] if path_keys else ""
+    if len(shape) - o == 4 and last in ("k", "v"):
+        if policy.params_tp and shape[o + 1] % n_model == 0:
+            spec[o + 1] = m              # TP serving: heads co-located with
+            return P(*spec)              # their head-sharded projections (C1)
+        if shape[o + 2] % n_model == 0:
+            spec[o + 2] = m              # sequence dim of the KV cache
+        return P(*spec)
+    # generic: largest trailing dim divisible by the model axis
+    cands = [d for d in range(o + 1, len(shape)) if shape[d] % n_model == 0
+             and shape[d] >= n_model]
+    if cands:
+        spec[max(cands, key=lambda d: shape[d])] = m
+    return P(*spec)
+
+
+def tree_state_shardings(policy, states):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(states)
+    out = []
+    for path, leaf in flat:
+        keys = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
+        out.append(NamedSharding(
+            policy.mesh, state_spec(policy, keys, leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_prefill_step(model, policy=None, *, s_max: int):
+    def step(params, tokens, frames=None, pixels=None):
+        with use_policy(policy):
+            logits, states = model.prefill(
+                params, tokens, s_max=s_max, frames=frames, pixels=pixels)
+        return logits, states
+    return step
+
+
+def make_decode_step(model, policy=None):
+    def step(params, states, token, pos):
+        with use_policy(policy):
+            return model.decode_step(params, states, token, pos)
+    return step

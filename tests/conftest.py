@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real 1-CPU device;
+multi-device behaviour is validated via subprocess selftests (see
+repro/launch/selftest_*.py) so device count is never globally forced."""
+
+import os
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture
+def rng():
+    import numpy as np
+
+    return np.random.default_rng(0)

@@ -1,0 +1,179 @@
+"""Implicit-collective inference + tree schedules (paper §III) with hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core as bind
+from repro.core.collectives import (
+    allreduce_tree,
+    broadcast_tree,
+    infer_broadcasts,
+    infer_reductions,
+    reduce_tree,
+)
+
+
+# ---------------------------------------------------------------------------
+# Tree schedule properties
+# ---------------------------------------------------------------------------
+
+ranks_strategy = st.lists(
+    st.integers(min_value=0, max_value=63), min_size=1, max_size=32, unique=True
+)
+
+
+@given(ranks=ranks_strategy, root_pos=st.integers(min_value=0, max_value=31))
+@settings(max_examples=200, deadline=None)
+def test_broadcast_tree_properties(ranks, root_pos):
+    root = ranks[root_pos % len(ranks)]
+    tree = broadcast_tree(root, ranks)
+    n = len(ranks)
+    # log depth
+    assert tree.depth == int(np.ceil(np.log2(n))) if n > 1 else tree.depth == 0
+    # exactly n-1 messages (every non-root rank receives exactly once)
+    assert tree.total_messages == n - 1
+    informed = {root}
+    receivers = set()
+    for rnd in tree.rounds:
+        new = set()
+        for src, dst in rnd:
+            assert src in informed, "sender must already hold the data"
+            assert dst not in informed and dst not in new, "no duplicate delivery"
+            assert dst in tree.ranks and src in tree.ranks, "partial: stays in subset"
+            new.add(dst)
+        informed |= new
+        receivers |= new
+    assert informed == set(ranks), "everyone informed"
+
+
+@given(ranks=ranks_strategy)
+@settings(max_examples=100, deadline=None)
+def test_reduce_tree_accumulates_everything(ranks):
+    root = ranks[0]
+    tree = reduce_tree(root, ranks)
+    # simulate: each rank holds value=1; after replay root holds n
+    val = {r: 1 for r in ranks}
+    for rnd in tree.rounds:
+        for src, dst in rnd:
+            val[dst] += val.pop(src)
+    assert val[root] == len(ranks)
+    assert tree.total_messages == len(ranks) - 1
+
+
+def test_allreduce_tree_is_reduce_then_broadcast():
+    red, bc = allreduce_tree(range(8))
+    assert red.kind == "reduce" and bc.kind == "broadcast"
+    assert red.depth == 3 and bc.depth == 3  # 2*log2(8) total rounds
+
+
+# ---------------------------------------------------------------------------
+# DAG-level inference
+# ---------------------------------------------------------------------------
+
+@bind.op
+def produce(x: bind.InOut):
+    return x + 1
+
+
+@bind.op
+def consume(x: bind.In, out: bind.InOut):
+    return out + x
+
+
+def test_infer_partial_broadcast():
+    """A version read on ranks {1,2,5} of an 8-node world must become a
+    *partial* broadcast over exactly those ranks (+producer) — paper's sparse
+    collectives [5]."""
+    with bind.Workflow(n_nodes=8) as wf:
+        x = wf.array(np.ones(4), "x")
+        outs = [wf.array(np.zeros(4)) for _ in range(3)]
+        with bind.node(0):
+            produce(x)
+        for rank, o in zip((1, 2, 5), outs):
+            with bind.node(rank):
+                consume(x, o)
+        colls = infer_broadcasts(wf)
+        # x.v1 becomes one broadcast over ranks {0,1,2,5} (initial versions of
+        # the out arrays also get shipped from rank 0 — those are 1:1 sends)
+        xcolls = [c for c in colls if c.version_key == (x.ref.ref_id, 1)]
+        assert len(xcolls) == 1
+        c = xcolls[0]
+        assert set(c.schedule.ranks) == {0, 1, 2, 5}
+        assert c.schedule.depth == 2  # log2(4)
+        wf.sync()
+
+
+def test_infer_reduction_from_iadd_chain():
+    """Listing-1 style accumulation across ranks is recognised as a tree
+    reduction."""
+    with bind.Workflow(n_nodes=4) as wf:
+        acc = wf.array(np.zeros(4), "acc")
+        xs = [wf.array(np.full(4, float(i))) for i in range(4)]
+        for rank, x in enumerate(xs):
+            with bind.node(rank):
+                acc += x
+        colls = infer_reductions(wf)
+        assert len(colls) == 1
+        assert set(colls[0].schedule.ranks) == {0, 1, 2, 3}
+        assert colls[0].schedule.depth == 2
+        np.testing.assert_allclose(wf.fetch(acc), np.full(4, 6.0))
+
+
+# ---------------------------------------------------------------------------
+# Executor transfer accounting: tree vs naive
+# ---------------------------------------------------------------------------
+
+def _fanout_workflow(n_readers):
+    wf = bind.Workflow(n_nodes=n_readers + 1)
+    with wf:
+        x = wf.array(np.ones(1024), "x")   # 8 KiB payload
+        outs = [wf.array(np.zeros(1024)) for _ in range(n_readers)]
+        with bind.node(0):
+            produce(x)
+        for r in range(n_readers):
+            with bind.node(r + 1):
+                consume(x, outs[r])
+        wf._executor = bind.LocalExecutor(
+            n_readers + 1, collective_mode="naive"
+        )  # placeholder, replaced below
+    return wf, x
+
+
+def test_tree_transfers_log_depth_vs_naive():
+    n_readers = 8
+    results = {}
+    for mode in ("tree", "naive"):
+        with bind.Workflow(n_nodes=n_readers + 1) as wf:
+            x = wf.array(np.ones(1024), "x")
+            outs = [wf.array(np.zeros(1024)) for _ in range(n_readers)]
+            with bind.node(0):
+                produce(x)
+            for r in range(n_readers):
+                with bind.node(r + 1):
+                    consume(x, outs[r])
+            ex = bind.LocalExecutor(n_readers + 1, collective_mode=mode)
+            ex.run(wf)
+        vkey = (x.ref.ref_id, 1)
+        results[mode] = (
+            ex.stats.transfer_depth(vkey),
+            sum(1 for t in ex.stats.transfers if t.version_key == vkey),
+        )
+    # both ship 8 messages (one per reader), but the tree does it in ≤4 rounds
+    assert results["naive"][1] == results["tree"][1] == n_readers
+    assert results["naive"][0] == n_readers
+    assert results["tree"][0] <= int(np.ceil(np.log2(n_readers + 1))) + 1
+
+
+def test_transfers_are_implicit_and_correct():
+    """Data produced on node 0 and consumed on node 3 moves with no user code."""
+    with bind.Workflow(n_nodes=4) as wf:
+        x = wf.array(np.arange(8.0), "x")
+        out = wf.array(np.zeros(8), "out")
+        with bind.node(0):
+            produce(x)          # x.v1 = x+1 on node 0
+        with bind.node(3):
+            consume(x, out)     # needs x.v1 on node 3
+        np.testing.assert_allclose(wf.fetch(out), np.arange(8.0) + 1)
+        ex = wf._executor
+        assert any(t.dst == 3 for t in ex.stats.transfers)

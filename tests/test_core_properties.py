@@ -1,0 +1,111 @@
+"""Hypothesis property: ANY random Bind program over ANY placement equals
+its eager sequential execution — the model's core guarantee (§II): the
+transactional DAG + implicit transfers + version GC never change semantics.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core as bind
+
+
+@bind.op
+def addc(a: bind.InOut, c: bind.In):
+    return a + c
+
+
+@bind.op
+def mul(a: bind.InOut, b: bind.In):
+    return a * b
+
+
+@bind.op
+def mix(out: bind.InOut, x: bind.In, y: bind.In):
+    return out + 0.5 * x - 0.25 * y
+
+
+OPS = ("addc", "mul", "mix")
+
+
+@st.composite
+def programs(draw):
+    n_arrays = draw(st.integers(2, 5))
+    n_nodes = draw(st.integers(1, 5))
+    n_ops = draw(st.integers(1, 25))
+    steps = []
+    for _ in range(n_ops):
+        kind = draw(st.sampled_from(OPS))
+        tgt = draw(st.integers(0, n_arrays - 1))
+        src = draw(st.integers(0, n_arrays - 1))
+        src2 = draw(st.integers(0, n_arrays - 1))
+        rank = draw(st.integers(0, n_nodes - 1))
+        const = draw(st.floats(-2, 2, allow_nan=False))
+        steps.append((kind, tgt, src, src2, rank, const))
+    mode = draw(st.sampled_from(["tree", "naive"]))
+    return n_arrays, n_nodes, steps, mode
+
+
+def _eager(n_arrays, steps, seed):
+    rng = np.random.default_rng(seed)
+    arrs = [rng.normal(size=(3, 3)) for _ in range(n_arrays)]
+    for kind, tgt, src, src2, _rank, const in steps:
+        if kind == "addc":
+            arrs[tgt] = arrs[tgt] + const
+        elif kind == "mul":
+            arrs[tgt] = arrs[tgt] * arrs[src]
+        else:
+            arrs[tgt] = arrs[tgt] + 0.5 * arrs[src] - 0.25 * arrs[src2]
+    return arrs
+
+
+@given(prog=programs(), seed=st.integers(0, 2**16))
+@settings(max_examples=40, deadline=None)
+def test_any_program_any_placement_matches_eager(prog, seed):
+    n_arrays, n_nodes, steps, mode = prog
+    rng = np.random.default_rng(seed)
+    ex = bind.LocalExecutor(n_nodes, collective_mode=mode)
+    with bind.Workflow(n_nodes=n_nodes, executor=ex) as wf:
+        handles = [wf.array(rng.normal(size=(3, 3)), f"a{i}",
+                            rank=i % n_nodes)
+                   for i in range(n_arrays)]
+        for kind, tgt, src, src2, rank, const in steps:
+            with bind.node(rank):
+                if kind == "addc":
+                    addc(handles[tgt], const)
+                elif kind == "mul":
+                    mul(handles[tgt], handles[src])
+                else:
+                    mix(handles[tgt], handles[src], handles[src2])
+        results = [wf.fetch(h) for h in handles]
+    expected = _eager(n_arrays, steps, seed)
+    for got, exp in zip(results, expected):
+        np.testing.assert_allclose(got, exp, rtol=1e-12)
+
+
+@given(prog=programs(), seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_wavefronts_never_exceed_op_count_and_respect_deps(prog, seed):
+    """Structural invariants of the extracted DAG."""
+    n_arrays, n_nodes, steps, mode = prog
+    rng = np.random.default_rng(seed)
+    with bind.Workflow(n_nodes=n_nodes) as wf:
+        handles = [wf.array(rng.normal(size=(2,)), rank=i % n_nodes)
+                   for i in range(n_arrays)]
+        for kind, tgt, src, src2, rank, const in steps:
+            with bind.node(rank):
+                if kind == "addc":
+                    addc(handles[tgt], const)
+                elif kind == "mul":
+                    mul(handles[tgt], handles[src])
+                else:
+                    mix(handles[tgt], handles[src], handles[src2])
+        waves = bind.LocalExecutor.wavefronts(wf)
+        wf.sync()
+    assert sum(waves) == len(steps)
+    # every op reads versions produced by earlier ops only (trace order)
+    producers = wf.producers()
+    for op_node in wf.ops:
+        for v in op_node.reads:
+            p = producers.get(v.key)
+            if p is not None:
+                assert p.op_id <= op_node.op_id

@@ -1,0 +1,106 @@
+"""Data pipeline determinism + checkpoint manager behaviour."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLMDataset
+from repro.ckpt import CheckpointManager
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_batches_deterministic_and_skip_ahead():
+    d1 = SyntheticLMDataset(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    d2 = SyntheticLMDataset(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    # skip-ahead: batch 5 identical whether or not 0..4 were consumed
+    for s in range(5):
+        d1.batch_at(s)
+    b1, b2 = d1.batch_at(5), d2.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # different steps differ
+    assert not np.array_equal(np.asarray(d1.batch_at(6)["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_labels_are_next_tokens():
+    d = SyntheticLMDataset(vocab_size=100, seq_len=16, global_batch=2)
+    b = d.batch_at(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    # learnable bigram: follow-rule holds for a majority of positions
+    t = np.asarray(b["tokens"])
+    y = np.asarray(b["labels"])
+    np.testing.assert_array_equal(t[:, 1:], y[:, :-1])
+
+
+def test_frontend_stub_outputs():
+    d = SyntheticLMDataset(vocab_size=10, seq_len=8, global_batch=2,
+                           enc_len=4, d_model=16, vision_tokens=3)
+    b = d.batch_at(0)
+    assert b["frames"].shape == (2, 4, 16)
+    assert b["pixels"].shape == (2, 3, 16)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(rng):
+    return {"a": jnp.asarray(rng.normal(size=(4, 4)), jnp.float32),
+            "b": [jnp.arange(3), jnp.asarray(rng.normal(size=(2,)),
+                                             jnp.bfloat16)]}
+
+
+def test_roundtrip(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = _tree(rng)
+    mgr.save(3, tree, extra={"step": 3})
+    out, extra = mgr.restore(tree)
+    assert extra["step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_gc(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    tree = _tree(rng)
+    for s in (1, 5, 9):
+        mgr.save(s, tree, extra={"step": s})
+    assert mgr.latest_step() == 9
+    dirs = [n for n in os.listdir(tmp_path) if n.startswith("step_")]
+    assert len(dirs) == 2                      # GC keeps newest two
+
+
+def test_async_save_then_wait(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    tree = _tree(rng)
+    mgr.save(1, tree, extra={"step": 1})
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_atomicity_no_partial_dirs(tmp_path, rng):
+    """A second save over the same step replaces it atomically."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = _tree(rng)
+    mgr.save(2, tree, extra={"step": 2})
+    mgr.save(2, tree, extra={"step": 2})
+    assert mgr.latest_step() == 2
+    out, _ = mgr.restore(tree)
+    assert len(jax.tree_util.tree_leaves(out)) == 3
+
+
+def test_structure_mismatch_raises(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(0, _tree(rng), extra={})
+    with pytest.raises(AssertionError):
+        mgr.restore({"only": jnp.zeros(2)})

@@ -1,0 +1,123 @@
+"""Unit tests for the dry-run metering tools (no 512-device compile needed):
+HLO collective parsing (wire model, replica groups) and sharding-policy
+spec rules. The dryrun module force-sets XLA_FLAGS on import, so the parse
+helpers are imported in a subprocess-safe way via importlib of the source
+file's functions recreated here from the module namespace loaded lazily in
+a child process — simpler: parse functions are pure, so we exec just them.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _parse_in_subprocess(hlo: str) -> dict:
+    """Run parse_collective_bytes in a child (dryrun import sets XLA flags)."""
+    import json
+    code = (
+        "import json,sys\n"
+        "from repro.launch.dryrun import parse_collective_bytes\n"
+        "print(json.dumps(parse_collective_bytes(sys.stdin.read())))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], input=hlo,
+                         capture_output=True, text=True, timeout=300, env=env)
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout)
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p = bf16[16,256]{1,0} parameter(0)
+  %ag = bf16[256,256]{1,0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%y), replica_groups=[1,16]<=[16], dimensions={0}
+  %a2a = bf16[8,32]{1,0} all-to-all(%z), replica_groups=[2,8]<=[16]
+  %cp = f32[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %done = f32[1024]{0} all-reduce-done(%ar2)
+}
+"""
+
+
+def test_parse_wire_model():
+    out = _parse_in_subprocess(HLO)
+    # all-gather: 256*256*2 bytes out, g=16 -> *(15/16)
+    assert out["all-gather"]["bytes"] == int(256 * 256 * 2 * 15 / 16)
+    # all-reduce: 1024*4 out, g=4 -> 2*(3/4)
+    assert out["all-reduce"]["bytes"] == int(1024 * 4 * 2 * 3 / 4)
+    assert out["all-reduce"]["count"] == 1          # -done not double counted
+    # reduce-scatter: 64*4 out, g=16 -> *(15)
+    assert out["reduce-scatter"]["bytes"] == 64 * 4 * 15
+    # all-to-all: 8*32*2, g=8 -> *(7/8)
+    assert out["all-to-all"]["bytes"] == int(8 * 32 * 2 * 7 / 8)
+    # collective-permute: full output
+    assert out["collective-permute"]["bytes"] == 128 * 4
+    assert out["wire_model"] is True
+    assert out["total_bytes"] == sum(
+        out[k]["bytes"] for k in ("all-gather", "all-reduce",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute"))
+
+
+# ---------------------------------------------------------------------------
+# policy spec rules (1 device is enough: spec logic is mesh-shape arithmetic)
+# ---------------------------------------------------------------------------
+
+def _fake_policy(params_tp=False):
+    from unittest.mock import MagicMock
+    from repro.sharding.policy import ShardingPolicy
+    mesh = MagicMock()
+    mesh.shape = {"data": 16, "model": 16}
+    mesh.axis_names = ("data", "model")
+    return ShardingPolicy(
+        mesh=mesh, dp_axes=("data",), model_axis="model",
+        fsdp_axes=("data", "model"), params_tp=params_tp)
+
+
+def test_param_spec_largest_divisible_dim():
+    from jax.sharding import PartitionSpec as P
+    pol = _fake_policy()
+    # (vocab, d): vocab 152064 % 256 == 0 and largest -> sharded
+    assert pol.param_spec((152064, 5120)) == P(("data", "model"), None)
+    # stacked: leading dim untouched
+    assert pol.param_spec((64, 5120, 27648), stacked=True) == \
+        P(None, None, ("data", "model"))
+    # tiny tensors replicate (A2)
+    assert pol.param_spec((4, 1024)) == P(None, None)
+    assert pol.param_spec((5120,)) == P(None)
+    # no dim divides 256 -> single-axis fallback
+    assert pol.param_spec((49155, 48)) == P(None, "data") or \
+        pol.param_spec((49155, 48)) == P("data", None)
+
+
+def test_tp_spec_rules():
+    from jax.sharding import PartitionSpec as P
+    pol = _fake_policy(params_tp=True)
+    assert pol._tp_spec(["attn", "wq"], (3072, 4096), False) == P(None, "model")
+    assert pol._tp_spec(["attn", "wo"], (4096, 3072), False) == P("model", None)
+    assert pol._tp_spec(["mlp", "w_down"], (24576, 3072), False) == \
+        P("model", None)
+    # indivisible output dim -> no TP rule (falls back to FSDP)
+    assert pol._tp_spec(["attn", "wq"], (3072, 100), False) is None
+
+
+def test_state_spec_rules():
+    from jax.sharding import PartitionSpec as P
+    from repro.train.serve import state_spec
+    pol = _fake_policy()
+    # KV cache: seq dim over model
+    assert state_spec(pol, ("groups", "b0", "k"), (2, 128, 16, 32768, 256)) \
+        == P(None, ("data",), None, "model", None)
+    # recurrent state: largest trailing divisible dim over model
+    assert state_spec(pol, ("h",), (128, 4096)) == P(("data",), "model")
+    # TP mode: kv-heads dim preferred when divisible
+    pol_tp = _fake_policy(params_tp=True)
+    assert state_spec(pol_tp, ("k",), (128, 16, 32768, 256)) == \
+        P(("data",), "model", None, None)

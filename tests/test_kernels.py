@@ -1,0 +1,169 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import gemm
+from repro.kernels.flash_attention import ops as fa_pkg
+from repro.kernels.linear_scan import ops as ls_pkg
+from repro.kernels.gemm import ref as gemm_ref
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.linear_scan import ref as ls_ref
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [
+    (128, 128, 128),   # exact single block
+    (256, 384, 128),   # multi-block grid
+    (130, 70, 260),    # ragged -> padding path
+    (1, 128, 1),       # degenerate
+    (64, 64, 64),
+]
+
+
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_gemm_matches_ref(m, k, n, dtype, rng):
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype=dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype=dtype)
+    out = gemm.matmul(a, b, bm=64, bn=64, bk=64, interpret=True)
+    exp = gemm_ref.matmul(a, b)
+    assert out.dtype == exp.dtype and out.shape == exp.shape
+    # blocked K-accumulation reorders fp32 sums vs the oracle -> small atol
+    tol = (1e-4, 1e-3) if dtype == np.float32 else (2e-2, 2e-1)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        rtol=tol[0], atol=tol[1],
+    )
+
+
+def test_gemm_accumulate(rng):
+    c = jnp.asarray(rng.normal(size=(64, 32)), dtype=jnp.float32)
+    a = jnp.asarray(rng.normal(size=(64, 48)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(48, 32)), dtype=jnp.float32)
+    out = gemm.matmul_accumulate(c, a, b, bm=32, bn=32, bk=32, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(gemm_ref.matmul_accumulate(c, a, b)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@given(
+    m=st.integers(1, 160), k=st.integers(1, 96), n=st.integers(1, 160),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=10, deadline=None)
+def test_gemm_property_any_shape(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype=jnp.float32)
+    out = gemm.matmul(a, b, bm=32, bn=32, bk=32, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(a) @ np.asarray(b), rtol=2e-4, atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, Hq, Hkv, Sq, Skv, D, causal, window)
+    (1, 2, 2, 32, 32, 8, True, None),     # MHA causal
+    (2, 4, 2, 64, 64, 16, True, None),    # GQA 2:1
+    (1, 8, 1, 32, 32, 16, True, None),    # MQA
+    (1, 2, 2, 64, 64, 8, True, 16),       # sliding window
+    (1, 2, 1, 48, 48, 8, False, None),    # bidirectional (encoder)
+    (1, 2, 2, 33, 33, 8, True, None),     # ragged seq -> padding path
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,window", ATTN_CASES)
+def test_flash_attention_matches_ref(b, hq, hkv, sq, skv, d, causal, window, rng):
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype=jnp.float32)
+    out = fa_pkg.flash_attention(
+        q, k, v, causal=causal, window=window, bq=16, bkv=16, interpret=True
+    )
+    exp = fa_ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_flash_attention_bf16(rng):
+    b, hq, hkv, s, d = 1, 4, 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)), dtype=jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype=jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype=jnp.bfloat16)
+    out = fa_pkg.flash_attention(q, k, v, bq=32, bkv=32, interpret=True)
+    exp = fa_ref.attention(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_flash_attention_swa_equals_full_when_window_covers(rng):
+    """window ≥ S must reproduce plain causal attention exactly."""
+    q = jnp.asarray(rng.normal(size=(1, 2, 32, 8)), dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 32, 8)), dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 32, 8)), dtype=jnp.float32)
+    full = fa_pkg.flash_attention(q, k, v, causal=True, bq=16, bkv=16, interpret=True)
+    swa = fa_pkg.flash_attention(
+        q, k, v, causal=True, window=64, bq=16, bkv=16, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(swa), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Linear scan (RG-LRU / sLSTM recurrence)
+# ---------------------------------------------------------------------------
+
+SCAN_SHAPES = [(1, 16, 4), (2, 64, 8), (3, 100, 5), (1, 256, 16)]
+
+
+@pytest.mark.parametrize("b,s,d", SCAN_SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_linear_scan_matches_ref(b, s, d, dtype, rng):
+    # decay in (0, 1) like a forget gate; inputs O(1)
+    a = jnp.asarray(rng.uniform(0.2, 0.99, size=(b, s, d)), dtype=dtype)
+    x = jnp.asarray(rng.normal(size=(b, s, d)), dtype=dtype)
+    out = ls_pkg.linear_scan(a, x, bs=32, interpret=True)
+    exp = ls_ref.linear_scan(a, x)
+    tol = 1e-5 if dtype == np.float32 else 4e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@given(
+    b=st.integers(1, 3), s=st.integers(1, 130), d=st.integers(1, 9),
+    bs=st.sampled_from([8, 32, 64]), seed=st.integers(0, 2**16),
+)
+@settings(max_examples=10, deadline=None)
+def test_linear_scan_property(b, s, d, bs, seed):
+    """Chunked kernel == sequential scan for any (shape, block) combination —
+    the chunk boundary carry must be exact."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.0, 1.0, size=(b, s, d)), dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, s, d)), dtype=jnp.float32)
+    out = ls_pkg.linear_scan(a, x, bs=bs, interpret=True)
+    exp = ls_ref.linear_scan(a, x)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_linear_scan_zero_decay_is_identity(rng):
+    """a=0 ⇒ y=x (property: scan degenerates to a copy)."""
+    x = jnp.asarray(rng.normal(size=(2, 32, 4)), dtype=jnp.float32)
+    out = ls_pkg.linear_scan(jnp.zeros_like(x), x, bs=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)

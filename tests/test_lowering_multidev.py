@@ -1,0 +1,32 @@
+"""Multi-device validation of core.lowering, via subprocess (8 fake devices).
+
+The main pytest process must keep the real single CPU device (smoke tests and
+benches depend on it), so anything needing a mesh runs in a child interpreter
+that sets XLA_FLAGS before importing jax.
+"""
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run_module(mod: str, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", mod],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"{mod} failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+def test_collective_schedules_multidevice():
+    assert "OK" in _run_module("repro.launch.selftest_collectives")
+
+
+def test_distributed_gemm_multidevice():
+    assert "OK" in _run_module("repro.launch.selftest_distgemm")

@@ -1,0 +1,106 @@
+"""Optimizer + compression unit/property tests."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamW, warmup_cosine
+from repro.optim.compression import (
+    BLOCK, dequantize_int8, quantize_int8)
+
+
+def test_adamw_matches_reference_math(rng):
+    params = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    opt = AdamW(learning_rate=1e-2, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.1, grad_clip=None)
+    st_ = opt.init(params)
+    new_p, new_st, metrics = jax.jit(opt.update)(grads, st_, params)
+
+    # numpy oracle, step 1
+    for k, wd in (("w", 0.1), ("b", 0.0)):   # 1-D params skip weight decay
+        g = np.asarray(grads[k])
+        m = 0.1 * g
+        v = 0.05 * g ** 2
+        mhat = m / (1 - 0.9)
+        vhat = v / (1 - 0.95)
+        step = mhat / (np.sqrt(vhat) + 1e-8) + wd * np.asarray(params[k])
+        exp = np.asarray(params[k]) - 1e-2 * step
+        np.testing.assert_allclose(np.asarray(new_p[k]), exp, rtol=1e-5,
+                                   err_msg=k)
+    assert int(new_st.count) == 1
+
+
+def test_grad_clip_caps_global_norm(rng):
+    params = {"w": jnp.zeros((4, 4), jnp.float32)}
+    big = {"w": jnp.full((4, 4), 100.0, jnp.float32)}
+    opt = AdamW(learning_rate=1.0, grad_clip=1.0, weight_decay=0.0)
+    st_ = opt.init(params)
+    _, _, metrics = opt.update(big, st_, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(400.0)
+
+
+def test_bf16_params_keep_fp32_master(rng):
+    params = {"w": jnp.asarray(rng.normal(size=(16, 16)), jnp.bfloat16)}
+    opt = AdamW(learning_rate=1e-4, weight_decay=0.0, grad_clip=None)
+    st_ = opt.init(params)
+    assert st_.master["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((16, 16), 1e-4, jnp.bfloat16)}
+    p, st_, _ = opt.update(grads, st_, params)
+    assert p["w"].dtype == jnp.bfloat16
+    # tiny updates must accumulate in the master even below bf16 resolution
+    for _ in range(3):
+        p, st_, _ = opt.update(grads, st_, p)
+    drift = np.abs(np.asarray(st_.master["w"] , np.float32)
+                   - np.asarray(params["w"], np.float32)).mean()
+    assert drift > 0
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert float(lr(jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+    assert float(lr(jnp.int32(55))) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# int8 compression
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 2000), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_quantization_error_bounded(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    codes, scales = quantize_int8(x)
+    back = dequantize_int8(codes, scales, x.shape)
+    # per-block error bound: half a quantisation step = max|block| / 254
+    xb = np.asarray(jnp.pad(x, (0, (-n) % BLOCK))).reshape(-1, BLOCK)
+    bound = np.abs(xb).max(axis=1, keepdims=True) / 254 + 1e-7
+    err = np.abs(np.asarray(back) - np.asarray(x)).reshape(-1)
+    err_b = np.pad(err, (0, (-n) % BLOCK)).reshape(-1, BLOCK)
+    assert (err_b <= bound + 1e-9).all()
+
+
+def test_error_feedback_recovers_mean(rng):
+    """Simulated error feedback over steps: the *accumulated* applied update
+    converges to the accumulated true gradient (EF-SGD property)."""
+    g = rng.normal(size=(512,)).astype(np.float32) * 1e-2
+    err = np.zeros_like(g)
+    applied = np.zeros_like(g)
+    true = np.zeros_like(g)
+    for t in range(50):
+        gt = g * (1 + 0.1 * np.sin(t))
+        true += gt
+        codes, scales = quantize_int8(jnp.asarray(gt + err))
+        q = np.asarray(dequantize_int8(codes, scales, gt.shape))
+        err = gt + err - q
+        applied += q
+    # residual is bounded -> accumulated difference stays ~one quantum
+    assert np.abs(applied - true).max() < np.abs(g).max()
