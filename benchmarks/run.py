@@ -4,7 +4,10 @@
     PYTHONPATH=src python -m benchmarks.run strassen   # one
 
 Prints ``bench,key-fields...`` lines and writes
-benchmarks/results/bench_results.json.
+benchmarks/results/bench_results.json.  The dag_overhead suite additionally
+writes ``benchmarks/BENCH_dag_overhead.json`` — the committed,
+machine-readable before/after executor trajectory (interpreter vs compiled
+plan) that future PRs append their numbers to.
 """
 
 from __future__ import annotations
@@ -48,6 +51,15 @@ def main() -> None:
     with open(out, "w") as f:
         json.dump(all_rows, f, indent=1, default=str)
     print(f"\nwrote {len(all_rows)} rows -> {out}")
+
+    dag_rows = [r for r in all_rows
+                if r.get("bench") in ("dag_overhead", "versioning_memory")]
+    if dag_rows:
+        dag_out = os.path.join(os.path.dirname(__file__),
+                               "BENCH_dag_overhead.json")
+        with open(dag_out, "w") as f:
+            json.dump(dag_rows, f, indent=1, default=str)
+        print(f"wrote {len(dag_rows)} rows -> {dag_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,60 @@
+"""Version compatibility shims for the pinned toolchain.
+
+The repo pins jax 0.4.37, where ``shard_map`` still lives in
+``jax.experimental.shard_map`` (top-level ``jax.shard_map`` appeared in
+0.6) and its replication-check kwarg is spelled ``check_rep`` rather than
+the modern ``check_vma``.  All internal call sites import ``shard_map``
+from here instead of from ``jax`` so the codebase reads like current JAX
+while running on the baked-in toolchain:
+
+    from repro.compat import shard_map
+
+The wrapper accepts *both* spellings of the check kwarg and translates to
+whatever the underlying implementation understands.  ``axis_size`` covers
+the same drift for ``jax.lax.axis_size`` (added in 0.5).
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+try:  # jax >= 0.6: public top-level export
+    from jax import shard_map as _shard_map_impl  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+_HAS_CHECK_VMA = "check_vma" in _PARAMS
+_HAS_CHECK_REP = "check_rep" in _PARAMS
+
+
+def axis_size(axis_name: Any) -> Any:
+    """``lax.axis_size`` (jax >= 0.5); falls back to ``psum(1, axis)``.
+
+    Inside ``shard_map``/``pmap`` the psum of a unit over the axis *is* the
+    axis size; it resolves to a compile-time constant under jit.
+    """
+    from jax import lax
+
+    fn = getattr(lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool | None = None, check_rep: bool | None = None,
+              **kwargs: Any) -> Callable:
+    """``jax.shard_map`` with the modern keyword surface on any jax version."""
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        if _HAS_CHECK_VMA:
+            kwargs["check_vma"] = check
+        elif _HAS_CHECK_REP:
+            kwargs["check_rep"] = check
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+__all__ = ["axis_size", "shard_map"]

@@ -28,6 +28,15 @@ from .collectives import (
     reduce_tree,
 )
 from .scheduler import ExecutionStats, LocalExecutor, TransferEvent
+from .plan import (
+    ExecutionPlan,
+    PLAN_CACHE_STATS,
+    build_plan,
+    clear_plan_cache,
+    plan_for,
+    segment_signature,
+)
+from .executable_cache import EXEC_CACHE, ExecutableCache
 from . import lowering
 
 __all__ = [
@@ -36,4 +45,6 @@ __all__ = [
     "Ref", "Version", "VersionStore", "InferredCollective", "TreeSchedule",
     "allreduce_tree", "broadcast_tree", "infer_broadcasts", "infer_reductions",
     "reduce_tree", "ExecutionStats", "LocalExecutor", "TransferEvent", "lowering",
+    "ExecutionPlan", "PLAN_CACHE_STATS", "build_plan", "clear_plan_cache",
+    "plan_for", "segment_signature", "EXEC_CACHE", "ExecutableCache",
 ]

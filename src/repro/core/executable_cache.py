@@ -1,0 +1,125 @@
+"""Jitted executable cache — compile an op signature once, replay forever.
+
+The dominant pattern in tiled linalg and MapReduce workflows is thousands of
+ops sharing a handful of *signatures* ``(fn, abstract shapes, dtypes)``: every
+leaf GEMM of a Strassen recursion, every per-tile ``iadd``, every bucket sort.
+The interpreter paid Python dispatch (and, for JAX payloads, re-tracing) per
+call; this cache resolves each signature to an *executable* exactly once:
+
+* **JAX payloads** → one ``jax.jit``-compiled executable per signature,
+  replayed as a cached XLA computation (the KaMPIng-style "plan once, replay
+  cheap" hot path);
+* **NumPy / other payloads** → the raw Python callable (a NumPy 8×8 multiply
+  beats XLA dispatch latency, so jitting would be a pessimisation) — the
+  cache still memoises the jit-vs-python decision per signature.
+
+Semantics are preserved exactly: NumPy payloads never silently become JAX
+arrays (which would flip float64 → float32 under default jax config), and a
+signature whose first jitted call raises falls back to the Python callable
+permanently.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _abstract(arg: Any):
+    """Abstract signature component of one payload: shape/dtype or type.
+
+    ``np.dtype`` objects are hashable and cheap to compare — never
+    stringified (``str(dtype)`` costs ~µs and used to dominate replay).
+    """
+    t = type(arg)
+    if t is np.ndarray:
+        return (arg.shape, arg.dtype, False)
+    shape = getattr(arg, "shape", None)
+    dtype = getattr(arg, "dtype", None)
+    if shape is not None and dtype is not None:
+        return (shape, dtype, isinstance(arg, jax.Array))
+    return t
+
+
+MAX_ENTRIES = 1024
+
+
+class ExecutableCache:
+    """Signature-keyed executable store with hit/miss/compile counters.
+
+    Bounded: past ``MAX_ENTRIES`` signatures the table is reset (entries pin
+    op functions and XLA executables; a reset only costs recompiles, and hot
+    signatures repopulate immediately).
+    """
+
+    __slots__ = ("_entries", "hits", "misses", "compiles", "fallbacks")
+
+    def __init__(self):
+        self._entries: dict[tuple, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+        self.compiles = 0      # signatures that produced a live XLA executable
+        self.fallbacks = 0     # jit candidates that raised and fell back
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = self.misses = self.compiles = self.fallbacks = 0
+
+    def signature(self, fn: Callable, args) -> tuple:
+        return (fn,) + tuple(_abstract(a) for a in args)
+
+    def lookup(self, fn: Callable, args) -> Callable:
+        """Resolve ``fn`` for these payloads; O(1) dict hit on replay."""
+        key = self.signature(fn, args)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            return entry
+        self.misses += 1
+        if len(self._entries) >= MAX_ENTRIES:
+            self._entries.clear()
+        entry = self._build(key, fn, args)
+        self._entries[key] = entry
+        return entry
+
+    # -- entry construction ---------------------------------------------------
+    def _build(self, key: tuple, fn: Callable, args) -> Callable:
+        array_args = [a for a in args
+                      if getattr(a, "shape", None) is not None
+                      and getattr(a, "dtype", None) is not None]
+        use_jit = bool(array_args) and all(
+            isinstance(a, jax.Array) for a in array_args)
+        if not use_jit:
+            return fn
+        jitted = jax.jit(fn)
+        cache = self
+
+        def first_call(*call_args):
+            # Compile lazily at the first replay; if the op body is not
+            # jit-traceable (data-dependent Python control flow, host-only
+            # types), pin the signature to the Python path instead of
+            # failing the workflow.  Only tracing-class errors fall back —
+            # runtime failures (OOM, real bugs) must propagate, and the
+            # fallback re-executes the body, so it is reserved for bodies
+            # whose trace never completed.
+            try:
+                out = jitted(*call_args)
+            except (jax.errors.JAXTypeError, TypeError):
+                cache.fallbacks += 1
+                cache._entries[key] = fn
+                return fn(*call_args)
+            cache.compiles += 1
+            cache._entries[key] = jitted
+            return out
+
+        return first_call
+
+
+# Process-wide cache: signatures are shared across executors and workflows
+# (the same tiled-GEMM leaf compiles once per process, not once per run).
+EXEC_CACHE = ExecutableCache()

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 
 # ---------------------------------------------------------------------------
 # Paper-faithful binary-tree collectives (log-depth ppermute schedules)
@@ -43,7 +45,7 @@ def tree_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     other ranks hold garbage partials (callers follow with a broadcast or
     discard).  Mirrors Listing 1's ``for (s = 1; s < nt; s *= 2)`` loop.
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     s = 1
     while s < n:
@@ -57,7 +59,7 @@ def tree_reduce(x: jax.Array, axis_name: str) -> jax.Array:
 
 def tree_broadcast(x: jax.Array, axis_name: str) -> jax.Array:
     """Binary-tree broadcast from rank 0 of ``axis_name`` (log₂ n rounds)."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     if n == 1:
         return x
@@ -147,7 +149,7 @@ def allreduce_by_schedule(
         outer, inner = data_axes[0], data_axes[-1]
         scat = scatter_dimension
         if scat is None:
-            inner_n = lax.axis_size(inner)
+            inner_n = axis_size(inner)
             scat = next(
                 (d for d in range(x.ndim) if x.shape[d] % inner_n == 0), None
             )
@@ -171,7 +173,7 @@ def sync_gradients(
     """All-reduce every leaf of a gradient pytree with the chosen schedule."""
     n = 1
     for ax in data_axes:
-        n *= lax.axis_size(ax)
+        n *= axis_size(ax)
 
     def _one(g):
         out = allreduce_by_schedule(g, schedule, data_axes=data_axes)

@@ -1,0 +1,283 @@
+"""Compiled execution plans for the transactional DAG (interpreter → replay).
+
+The paper's §III names run-time DAG handling the model's "critical
+disadvantage": every recorded op used to pay interpreter-style bookkeeping —
+an O(ranks) store scan per payload read, a full live-footprint rescan after
+every op, and a fresh ``producers()`` rebuild per analysis.  This module
+splits that cost out of the hot path:
+
+* :class:`ExecutionPlan` — built **once** per recorded op segment: topological
+  wavefront levels, per-version reader refcounts, segment-wide reader-rank
+  sets, precomputed broadcast-tree ship schedules (relative round ids), and
+  per-op GC drop lists.  Executing a plan is a pure replay: every step is a
+  dict hit, no scans.
+* a process-wide **plan cache** keyed on the structural signature of the
+  segment (op functions, placements, version keys, initial holder state):
+  iterative drivers that re-record the same DAG every step — tiled linalg,
+  MapReduce rounds, training loops — pay analysis cost once and replay
+  thereafter.  ``Workflow()`` resets the global id streams, so two identical
+  builds of the same user code produce byte-identical signatures.
+
+Plans are pure metadata (no payloads), so a cached plan is valid for any
+payload values — only the *structure* (which the signature captures) matters.
+Constants embedded in op args are read from the live op at replay time, never
+baked into the plan.
+
+Measured on the ``bench_dag_overhead`` scale chain (tile=8, one rank): the
+seed interpreter executed at ~19.6 µs/op; the current interpreter (O(1)
+bookkeeping, cached producer maps) at ~10-15 µs/op; planned replay at
+~4-5.5 µs/op warm (plan-cache hit) and ~14-20 µs/op cold (plan construction
+included) — a ~4-5× cut vs the seed in the regime where per-op overhead
+dominates (eager NumPy is ~0.7-1.3 µs/op on the same chain, host noise
+included).  See ``benchmarks/BENCH_dag_overhead.json`` for the tracked
+trajectory.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Iterable
+
+from .collectives import broadcast_tree
+from .placement import placement_ranks
+
+
+class PlanOp:
+    """One op of a plan: everything replay needs, resolved to O(1) lookups.
+
+    ``ships`` is a tuple of ``(version_key, root_rank, transfers)`` where
+    ``transfers`` is ``((src, dst, kind, relative_round), ...)`` — the
+    broadcast-tree schedule computed at plan time.  ``gc_keys`` are the
+    versions whose last (execution-order) reader is this op.
+
+    ``cached_types``/``cached_call`` memoise the executable-cache resolution
+    for the Python (non-jit) path: when the payload types match the previous
+    replay the resolved callable is reused without rebuilding the abstract
+    signature (jit entries are shape-keyed, so they always re-resolve).
+    """
+
+    __slots__ = ("op_id", "fn", "arg_keys", "write_keys", "exec_ranks",
+                 "ships", "gc_keys", "level", "n_writes", "simple_write",
+                 "cached_types", "cached_call")
+
+    def __init__(self, op_id, fn, arg_keys, write_keys, exec_ranks, ships,
+                 gc_keys, level):
+        self.op_id = op_id
+        self.fn = fn
+        self.arg_keys = arg_keys
+        self.write_keys = write_keys
+        self.exec_ranks = exec_ranks
+        self.ships = ships
+        self.gc_keys = gc_keys
+        self.level = level
+        self.n_writes = len(write_keys)
+        # dominant case: one written version, one executing rank
+        self.simple_write = len(write_keys) == 1 and len(exec_ranks) == 1
+        self.cached_types = None
+        self.cached_call = None
+
+
+class ExecutionPlan:
+    """A compiled segment: wavefront-ordered :class:`PlanOp` schedule."""
+
+    __slots__ = ("schedule", "wavefront_counts", "n_rounds", "start", "end",
+                 "n_nodes", "collective_mode", "total_writes")
+
+    def __init__(self, schedule, wavefront_counts, n_rounds, start, end,
+                 n_nodes, collective_mode):
+        self.schedule = schedule
+        self.wavefront_counts = wavefront_counts
+        self.n_rounds = n_rounds
+        self.start = start
+        self.end = end
+        self.n_nodes = n_nodes
+        self.collective_mode = collective_mode
+        self.total_writes = sum(p.n_writes for p in schedule)
+
+    def __len__(self) -> int:
+        return len(self.schedule)
+
+
+def segment_signature(wf, start: int, end: int) -> tuple:
+    """Structural identity of ``wf.ops[start:end]`` (plan-cache key part).
+
+    Captures op functions, names, placements and the version-key wiring;
+    deliberately excludes embedded constants (read from the live op at
+    replay) and payload shapes (plans are shape-oblivious).  The per-op
+    signatures are hash-consed to small ints at record time
+    (``Workflow._index_op``), so this is a slice of ints — cache keys hash
+    and compare without revisiting the nested structure.
+    """
+    return tuple(wf._op_sigs[start:end])
+
+
+def wavefront_levels(wf, start: int, end: int) -> tuple[dict[int, int], list[int]]:
+    """Dependency level per op and ops-per-level counts for a segment.
+
+    Level of an op = 1 + max level of the producers of the versions it
+    reads *plus* the producer of the previous version of any ref it writes
+    (write-after-write order on the same ref is preserved).  Single source
+    of truth for both the planner and ``LocalExecutor.wavefronts`` — the
+    two execution modes must report identical wavefront stats.
+    """
+    producers = wf.producers()
+    level: dict[int, int] = {}
+    counts: dict[int, int] = {}
+    for node in wf.ops[start:end]:
+        deps = []
+        for v in node.reads:
+            p = producers.get(v.key)
+            if p is not None and p.op_id != node.op_id:
+                deps.append(level.get(p.op_id, 0))
+        for v in node.writes:
+            if v.index > 0:
+                prev = producers.get((v.ref_id, v.index - 1))
+                if prev is not None and prev.op_id != node.op_id:
+                    deps.append(level.get(prev.op_id, 0))
+        lv = (max(deps) + 1) if deps else 1
+        level[node.op_id] = lv
+        counts[lv] = counts.get(lv, 0) + 1
+    return level, [counts[k] for k in sorted(counts)]
+
+
+def build_plan(wf, start: int, end: int, n_nodes: int, collective_mode: str,
+               holders: dict, pinned: Iterable) -> ExecutionPlan:
+    """Compile ``wf.ops[start:end]`` into an :class:`ExecutionPlan`.
+
+    ``holders`` maps version_key -> set of ranks holding its payload at run
+    start (copied, never mutated); ``pinned`` are version keys exempt from
+    GC.  The simulation walks ops in execution order (wavefront level major,
+    trace order minor — identical to trace order whenever the trace is
+    already level-sorted, which keeps stats byte-compatible with the
+    interpreter on such workflows).
+    """
+    ops = wf.ops[start:end]
+    pinned = set(pinned)
+
+    level, wavefront_counts = wavefront_levels(wf, start, end)
+    order = sorted(range(len(ops)), key=lambda i: (level[ops[i].op_id], i))
+
+    # -- segment-wide reader refcounts and reader-rank sets ------------------
+    readers: dict[tuple[int, int], int] = {}
+    reader_ranks: dict[tuple[int, int], set[int]] = {}
+    for node in ops:
+        rr = placement_ranks(node.placement)
+        for v in node.reads:
+            k = v.key
+            readers[k] = readers.get(k, 0) + 1
+            s = reader_ranks.get(k)
+            if s is None:
+                reader_ranks[k] = s = set()
+            s.update(rr)
+
+    # -- execution-order simulation: ships, writes, GC -----------------------
+    sim: dict[tuple[int, int], set[int]] = {k: set(v) for k, v in holders.items()}
+    naive = collective_mode == "naive"
+    rel_round = 0
+    schedule = []
+    for i in order:
+        node = ops[i]
+        exec_ranks = placement_ranks(node.placement)
+        ships = []
+        for v in node.reads:
+            k = v.key
+            hold = sim.get(k)
+            assert hold, f"version {k} was never materialised"
+            missing = sorted((set(exec_ranks) | reader_ranks[k]) - hold)
+            if not missing:
+                continue
+            root = min(hold)
+            transfers = []
+            if naive or len(missing) == 1:
+                for dst in missing:
+                    rel_round += 1
+                    transfers.append((root, dst, "p2p", rel_round))
+            else:
+                tree = broadcast_tree(root, [root] + missing)
+                for round_pairs in tree.rounds:
+                    rel_round += 1
+                    for src, dst in round_pairs:
+                        transfers.append((src, dst, "broadcast", rel_round))
+            hold.update(missing)
+            ships.append((k, root, tuple(transfers)))
+        write_keys = tuple(v.key for v in node.writes)
+        for k in write_keys:
+            sim[k] = set(exec_ranks)
+        gc_keys = []
+        for v in node.reads:
+            k = v.key
+            left = readers[k] - 1
+            readers[k] = left
+            if left <= 0 and k not in pinned and k in sim:
+                gc_keys.append(k)
+                del sim[k]
+        schedule.append(PlanOp(
+            op_id=node.op_id,
+            fn=node.fn,
+            arg_keys=tuple((v.key if ref is not None else None)
+                           for ref, v, _ in node.args),
+            write_keys=write_keys,
+            exec_ranks=exec_ranks,
+            ships=tuple(ships),
+            gc_keys=tuple(gc_keys),
+            level=level[node.op_id],
+        ))
+    return ExecutionPlan(tuple(schedule), wavefront_counts, rel_round,
+                         start, end, n_nodes, collective_mode)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide plan cache
+# ---------------------------------------------------------------------------
+
+PLAN_CACHE_SIZE = 64
+_PLAN_CACHE: "OrderedDict[tuple, ExecutionPlan]" = OrderedDict()
+_PLAN_CACHE_LOCK = threading.Lock()
+PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_plan_cache() -> None:
+    with _PLAN_CACHE_LOCK:
+        _PLAN_CACHE.clear()
+        PLAN_CACHE_STATS["hits"] = PLAN_CACHE_STATS["misses"] = 0
+
+
+def plan_for(wf, start: int, end: int, n_nodes: int, collective_mode: str,
+             holders: dict, pinned: Iterable) -> ExecutionPlan:
+    """Fetch-or-build the plan for a segment (LRU-cached process-wide).
+
+    The key ties the structural segment signature to everything else the
+    simulation consumed: world size, collective mode, the run-start holder
+    state of the versions the segment *reads* (ship schedules and GC depend
+    on nothing else in the stores — unrelated live payloads must not cause
+    misses), and the pinned set — a hit guarantees the cached ship/GC
+    schedules are valid for this run.
+    """
+    read_holders: dict[tuple[int, int], tuple[int, ...]] = {}
+    for node in wf.ops[start:end]:
+        for v in node.reads:
+            k = v.key
+            if k not in read_holders:
+                rs = holders.get(k)
+                if rs is not None:
+                    read_holders[k] = tuple(sorted(rs))
+    key = (
+        n_nodes, collective_mode, start,
+        segment_signature(wf, start, end),
+        tuple(sorted(read_holders.items())),
+        tuple(sorted(pinned)),
+    )
+    with _PLAN_CACHE_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            _PLAN_CACHE.move_to_end(key)
+            PLAN_CACHE_STATS["hits"] += 1
+            return plan
+        PLAN_CACHE_STATS["misses"] += 1
+    plan = build_plan(wf, start, end, n_nodes, collective_mode, holders, pinned)
+    with _PLAN_CACHE_LOCK:
+        _PLAN_CACHE[key] = plan
+        while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
+            _PLAN_CACHE.popitem(last=False)
+    return plan

@@ -15,20 +15,41 @@ model's behaviour is observable and testable on one host:
 * payloads are reclaimed once their last consumer ran (the paper's "smart
   memory reusage"), and :class:`ExecutionStats` records the peak working set.
 
-The executor also derives the *wavefront* decomposition of the DAG (ops whose
-inputs are all available can run concurrently), which is how the paper's Fig. 1
-"n+m operations in parallel" claim is validated in the tests.
+Two execution modes share identical value semantics; accounting (transfer
+order, live-set peaks) is byte-identical whenever the trace order is already
+wavefront-level-sorted — plan mode executes level-major, so a trace that
+interleaves levels may legitimately report different (higher-parallelism)
+peaks:
+
+* ``mode="plan"`` (default) — the segment is compiled once into an
+  :class:`~repro.core.plan.ExecutionPlan` (wavefront levels, ship schedules,
+  GC drop lists) and replayed wavefront-by-wavefront with O(1) bookkeeping
+  per step; op bodies dispatch through the process-wide
+  :class:`~repro.core.executable_cache.ExecutableCache` so repeated
+  signatures compile once.  Plans are cached process-wide, so iterative
+  drivers re-recording the same DAG pay analysis cost once.
+* ``mode="interpret"`` — the original per-op trace-order interpreter, kept as
+  the semantics reference (and the "before" side of
+  ``benchmarks/bench_dag_overhead.py``).
+
+Payload location is tracked in a version→holder-ranks index, so ``value()``
+and holder queries are O(1) instead of O(ranks), and the live footprint
+(bytes deduplicated across replicas, payload count per replica — exactly the
+quantities the old full rescan computed) is maintained incrementally.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from itertools import islice
 from typing import Any, Optional
 
 import numpy as np
 
 from .collectives import broadcast_tree
+from .executable_cache import EXEC_CACHE, ExecutableCache
 from .placement import placement_rank, placement_ranks
+from .plan import plan_for, wavefront_levels
 from .trace import OpNode, Workflow
 
 
@@ -93,48 +114,80 @@ class LocalExecutor:
         broadcast tree (paper-faithful implicit collectives);
       * ``"naive"`` — producer sends one message per reader rank (what a
         non-collective-aware runtime would do; kept for the ablation).
+
+    ``mode``:
+      * ``"plan"``      — compiled-plan replay (default, fast path);
+      * ``"interpret"`` — per-op trace-order interpreter (reference).
     """
 
-    def __init__(self, n_nodes: int = 1, collective_mode: str = "tree"):
+    def __init__(self, n_nodes: int = 1, collective_mode: str = "tree",
+                 mode: str = "plan",
+                 executable_cache: Optional[ExecutableCache] = None):
         assert collective_mode in ("tree", "naive")
+        assert mode in ("plan", "interpret")
         self.n_nodes = n_nodes
         self.collective_mode = collective_mode
+        self.mode = mode
         # payload stores: rank -> version_key -> payload
         self._stores: dict[int, dict[tuple[int, int], Any]] = {
             r: {} for r in range(n_nodes)
         }
+        # location index: version_key -> set of holder ranks (O(1) queries)
+        self._where: dict[tuple[int, int], set[int]] = {}
+        # incremental live footprint (matches the old full-store rescan:
+        # bytes deduplicated across replicas, payloads counted per replica)
+        self._key_bytes: dict[tuple[int, int], int] = {}
+        self._live_bytes = 0
+        self._live_entries = 0
+        self._init_seen = 0            # wf.initial items already materialised
+        self._exec_cache = executable_cache if executable_cache is not None else EXEC_CACHE
         self.stats = ExecutionStats()
         self._round_counter = 0
 
     # -- payload access ------------------------------------------------------
     def value(self, version) -> Any:
-        """Fetch a version's payload from whichever rank holds it."""
-        for store in self._stores.values():
-            if version.key in store:
-                return store[version.key]
-        raise KeyError(f"no payload for {version!r}")
+        """Fetch a version's payload from whichever rank holds it (O(1))."""
+        ranks = self._where.get(version.key)
+        if not ranks:
+            raise KeyError(f"no payload for {version!r}")
+        return self._stores[next(iter(ranks))][version.key]
 
     def _holders(self, vkey) -> list[int]:
-        return [r for r, s in self._stores.items() if vkey in s]
+        return sorted(self._where.get(vkey, ()))
 
-    # -- bookkeeping -----------------------------------------------------------
-    def _live_footprint(self) -> tuple[int, int]:
-        seen: dict[tuple[int, int], int] = {}
-        count = 0
-        for store in self._stores.values():
-            for k, v in store.items():
-                count += 1
-                seen[k] = _nbytes(v)
-        return sum(seen.values()), count
+    # -- store bookkeeping (all mutations flow through these) ----------------
+    def _place(self, rank: int, vkey, payload) -> None:
+        ranks = self._where.get(vkey)
+        if ranks is None:
+            self._where[vkey] = ranks = set()
+        if rank in ranks:
+            return
+        ranks.add(rank)
+        self._stores[rank][vkey] = payload
+        self._live_entries += 1
+        if vkey not in self._key_bytes:
+            nb = _nbytes(payload)
+            self._key_bytes[vkey] = nb
+            self._live_bytes += nb
+
+    def _drop(self, vkey) -> None:
+        ranks = self._where.pop(vkey, None)
+        if ranks is None:
+            return
+        for r in ranks:
+            del self._stores[r][vkey]
+        self._live_entries -= len(ranks)
+        self._live_bytes -= self._key_bytes.pop(vkey, 0)
 
     def _note_live(self) -> None:
-        b, c = self._live_footprint()
-        self.stats.peak_live_bytes = max(self.stats.peak_live_bytes, b)
-        self.stats.peak_live_payloads = max(self.stats.peak_live_payloads, c)
+        if self._live_bytes > self.stats.peak_live_bytes:
+            self.stats.peak_live_bytes = self._live_bytes
+        if self._live_entries > self.stats.peak_live_payloads:
+            self.stats.peak_live_payloads = self._live_entries
 
     # -- transfers --------------------------------------------------------------
     def _transfer(self, vkey, payload, src: int, dst: int, kind: str, round_id: int):
-        self._stores[dst][vkey] = payload
+        self._place(dst, vkey, payload)
         self.stats.transfers.append(
             TransferEvent(vkey, src, dst, _nbytes(payload), round_id, kind)
         )
@@ -161,8 +214,6 @@ class LocalExecutor:
         for round_pairs in tree.rounds:
             self._round_counter += 1
             for src, dst in round_pairs:
-                if dst in self._stores[dst] and vkey in self._stores[dst]:
-                    continue
                 self._transfer(vkey, payload, src, dst, "broadcast", self._round_counter)
 
     # -- wavefront decomposition -------------------------------------------------
@@ -170,57 +221,149 @@ class LocalExecutor:
     def wavefronts(wf: Workflow, start: int = 0, end: Optional[int] = None) -> list[int]:
         """Ops per dependency level — the DAG parallelism profile.
 
-        Level of an op = 1 + max level of the producers of the versions it
-        reads *plus* the producer of the previous version of any ref it
-        writes (write-after-write order on the same ref is preserved).
+        Delegates to :func:`repro.core.plan.wavefront_levels`, the single
+        source of the level recurrence for both execution modes.
         """
         end = len(wf.ops) if end is None else end
-        producers = wf.producers()
-        level: dict[int, int] = {}
-        counts: dict[int, int] = {}
-        for op_node in wf.ops[start:end]:
-            deps = []
-            for v in op_node.reads:
-                p = producers.get(v.key)
-                if p is not None and p.op_id != op_node.op_id:
-                    deps.append(level.get(p.op_id, 0))
-            for v in op_node.writes:
-                if v.index > 0:
-                    prev = producers.get((v.ref_id, v.index - 1))
-                    if prev is not None and prev.op_id != op_node.op_id:
-                        deps.append(level.get(prev.op_id, 0))
-            lv = (max(deps) + 1) if deps else 1
-            level[op_node.op_id] = lv
-            counts[lv] = counts.get(lv, 0) + 1
-        return [counts[k] for k in sorted(counts)]
+        return wavefront_levels(wf, start, end)[1]
 
     # -- execution ------------------------------------------------------------
     def run(self, wf: Workflow, start: int = 0) -> ExecutionStats:
         # Materialise initial payloads where the sequential program created
         # them (``wf.array(..., rank=r)``); transfers away from there are
-        # implicit.
-        for vkey, (payload, rank) in wf.initial.items():
-            if not self._holders(vkey):
-                self._stores[rank][vkey] = payload
+        # implicit.  Only items recorded since the last run are new.
+        if self._init_seen < len(wf.initial):
+            for vkey, (payload, rank) in islice(
+                    wf.initial.items(), self._init_seen, None):
+                if vkey not in self._where:
+                    self._place(rank, vkey, payload)
+            self._init_seen = len(wf.initial)
 
-        ops = wf.ops[start:]
-        if not ops:
+        if start >= len(wf.ops):
             return self.stats
+        if self.mode == "interpret":
+            return self._run_interpret(wf, start)
+        return self._run_planned(wf, start)
+
+    # -- planned replay (default) ---------------------------------------------
+    def _pinned(self, wf: Workflow) -> set:
+        # Heads of *user-created* arrays are pinned (user may fetch() them);
+        # op-created temporaries are reclaimed after their last reader, and
+        # any version no op ever reads survives by construction (GC only
+        # fires on reads).
+        return {
+            wf.refs[ref_id].head.key
+            for (ref_id, _idx) in wf.initial.keys()
+            if ref_id in wf.refs
+        }
+
+    def _run_planned(self, wf: Workflow, start: int) -> ExecutionStats:
+        plan = plan_for(wf, start, len(wf.ops), self.n_nodes,
+                        self.collective_mode, self._where, self._pinned(wf))
+        ops = wf.ops
+        stores = self._stores
+        where = self._where
+        key_bytes = self._key_bytes
+        stats = self.stats
+        events = stats.transfers
+        lookup = self._exec_cache.lookup
+        base_round = self._round_counter
+        single = self.n_nodes == 1
+        store0 = stores[0]
+        live_b, live_c = self._live_bytes, self._live_entries
+        peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
+
+        for p in plan.schedule:
+            node = ops[p.op_id]
+            if p.ships:
+                for vkey, root, transfers in p.ships:
+                    payload = stores[root][vkey]
+                    nb = _nbytes(payload)
+                    ranks = where[vkey]
+                    for src, dst, kind, rel in transfers:
+                        stores[dst][vkey] = payload
+                        ranks.add(dst)
+                        live_c += 1
+                        events.append(
+                            TransferEvent(vkey, src, dst, nb, base_round + rel, kind))
+            if single:
+                args = [store0[k] if k is not None else a[1]
+                        for k, a in zip(p.arg_keys, node.args)]
+            else:
+                args = [stores[next(iter(where[k]))][k] if k is not None else a[1]
+                        for k, a in zip(p.arg_keys, node.args)]
+            types = tuple(map(type, args))
+            if types == p.cached_types:
+                call = p.cached_call
+            else:
+                call = lookup(p.fn, args)
+                if call is p.fn:   # Python path: valid for any shapes
+                    # call before types: plans are shared process-wide, and a
+                    # concurrent replayer must never see matching types with
+                    # the callable still unset.
+                    p.cached_call = call
+                    p.cached_types = types
+                else:              # jit path: shape-keyed, re-resolve per run
+                    p.cached_types = None
+            result = call(*args)
+            if p.simple_write and not isinstance(result, tuple):
+                # dominant case: one payload, one executing rank
+                wk = p.write_keys[0]
+                nb = _nbytes(result)
+                key_bytes[wk] = nb
+                live_b += nb
+                rank = p.exec_ranks[0]
+                where[wk] = {rank}
+                stores[rank][wk] = result
+                live_c += 1
+            else:
+                if not isinstance(result, tuple):
+                    result = (result,)
+                assert len(result) == p.n_writes, (
+                    f"{node.name} returned {len(result)} payloads for "
+                    f"{p.n_writes} written args"
+                )
+                for wk, payload in zip(p.write_keys, result):
+                    nb = _nbytes(payload)
+                    key_bytes[wk] = nb
+                    live_b += nb
+                    holders = set(p.exec_ranks)
+                    where[wk] = holders
+                    for rank in holders:
+                        stores[rank][wk] = payload
+                    live_c += len(holders)
+            if live_b > peak_b:
+                peak_b = live_b
+            if live_c > peak_c:
+                peak_c = live_c
+            if p.gc_keys:
+                for dk in p.gc_keys:
+                    ranks = where.pop(dk)
+                    for r in ranks:
+                        del stores[r][dk]
+                    live_c -= len(ranks)
+                    live_b -= key_bytes.pop(dk, 0)
+
+        self._live_bytes, self._live_entries = live_b, live_c
+        stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c
+        stats.ops_executed += len(plan.schedule)
+        # zero-copy accounting: every InOut write in pass-by-value C++
+        # semantics would deep-copy; versioning just re-points.
+        stats.copies_elided += plan.total_writes
+        self._round_counter = base_round + plan.n_rounds
+        stats.wavefronts = list(plan.wavefront_counts)
+        return stats
+
+    # -- reference interpreter (trace order, per-op) --------------------------
+    def _run_interpret(self, wf: Workflow, start: int) -> ExecutionStats:
+        ops = wf.ops[start:]
 
         # Reader refcounts for version GC within this run.
         readers: dict[tuple[int, int], int] = {}
         for op_node in ops:
             for v in op_node.reads:
                 readers[v.key] = readers.get(v.key, 0) + 1
-        # Heads of *user-created* arrays are pinned (user may fetch() them);
-        # op-created temporaries are reclaimed after their last reader, and
-        # any version no op ever reads survives by construction (GC only
-        # fires on reads).
-        pinned = {
-            wf.refs[ref_id].head.key
-            for (ref_id, _idx) in wf.initial.keys()
-            if ref_id in wf.refs
-        }
+        pinned = self._pinned(wf)
 
         # Precompute, per version, the set of ranks that will read it — this
         # is the "queue of communications involving the same object" the
@@ -254,7 +397,7 @@ class LocalExecutor:
             )
             for rank in ranks:
                 for v, payload in zip(op_node.writes, result):
-                    self._stores[rank][v.key] = payload
+                    self._place(rank, v.key, payload)
             # zero-copy accounting: every InOut write in pass-by-value C++
             # semantics would deep-copy; versioning just re-points.
             self.stats.copies_elided += len(op_node.writes)
@@ -264,8 +407,7 @@ class LocalExecutor:
             for v in op_node.reads:
                 readers[v.key] -= 1
                 if readers[v.key] <= 0 and v.key not in pinned:
-                    for store in self._stores.values():
-                        store.pop(v.key, None)
+                    self._drop(v.key)
 
         self.stats.wavefronts = self.wavefronts(wf, start=start)
         return self.stats

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import itertools
 import threading
 from typing import Any, Callable, Optional, Sequence
 
@@ -140,6 +141,29 @@ def intents_of(fn: Callable) -> tuple[type, ...]:
 
 _TLS = threading.local()
 
+# Hash-consing for per-op structural signatures: identical op structure →
+# identical small int, so plan-cache keys hash/compare in O(ops) int work
+# instead of re-hashing nested tuples every sync.  Ids come from a monotonic
+# counter (never reused), so two *different* structures can never share an
+# id even across the table reset below; ``setdefault`` keeps the mapping
+# consistent under concurrent per-thread tracing (a skipped counter value is
+# harmless).  The table is cleared once it exceeds _SIG_INTERN_MAX — drivers
+# whose version keys advance forever (incremental sync loops) would
+# otherwise grow it one entry per op while pinning op functions; a reset
+# only costs later plan-cache misses, never correctness.
+_SIG_INTERN: dict[tuple, int] = {}
+_SIG_IDS = itertools.count()
+_SIG_INTERN_MAX = 1 << 18
+
+
+def _intern_sig(sig: tuple) -> int:
+    sid = _SIG_INTERN.get(sig)
+    if sid is None:
+        if len(_SIG_INTERN) >= _SIG_INTERN_MAX:
+            _SIG_INTERN.clear()
+        sid = _SIG_INTERN.setdefault(sig, next(_SIG_IDS))
+    return sid
+
 
 def current_workflow() -> Optional["Workflow"]:
     return getattr(_TLS, "wf", None)
@@ -167,6 +191,14 @@ class Workflow:
         self._placement_stack: list[Any] = []
         self._executor = executor
         self._synced_upto = 0
+        # producer/consumer maps maintained incrementally at record time —
+        # analyses (wavefronts, collective inference, planning) read them
+        # without ever rescanning the op list.
+        self._producers: dict[tuple[int, int], OpNode] = {}
+        self._consumers: dict[tuple[int, int], list[OpNode]] = {}
+        # per-op structural signatures (see core.plan.segment_signature),
+        # built at record time so plan-cache keys are a slice, not a rescan.
+        self._op_sigs: list[tuple] = []
 
     # -- context management ------------------------------------------------
     def __enter__(self):
@@ -240,6 +272,7 @@ class Workflow:
             flops=flops,
         )
         self.ops.append(node)
+        self._index_op(node)
         handles = tuple(BindArray(self, self.refs[v.ref_id]) for v in outs)
         return handles[0] if n_out == 1 else handles
 
@@ -288,22 +321,43 @@ class Workflow:
             flops=flops,
         )
         self.ops.append(node)
+        self._index_op(node)
         return None
+
+    def _index_op(self, node: OpNode) -> None:
+        """Extend the cached producer/consumer maps with one recorded op."""
+        consumers = self._consumers
+        for v in node.reads:
+            lst = consumers.get(v.key)
+            if lst is None:
+                consumers[v.key] = [node]
+            else:
+                lst.append(node)
+        producers = self._producers
+        for v in node.writes:
+            producers[v.key] = node
+        self._op_sigs.append(_intern_sig((
+            node.fn, node.name, node.placement,
+            tuple((v.key if ref is not None else None)
+                  for ref, v, _ in node.args),
+            tuple(v.key for v in node.writes),
+            tuple(v.key for v in node.reads),
+        )))
 
     # -- consumer map (drives implicit-collective inference) -----------------
     def consumers(self) -> dict[tuple[int, int], list[OpNode]]:
-        out: dict[tuple[int, int], list[OpNode]] = {}
-        for op in self.ops:
-            for v in op.reads:
-                out.setdefault(v.key, []).append(op)
-        return out
+        """version_key -> reading ops (cached; extended as ops are recorded).
+
+        Returns the live map — treat it as read-only.
+        """
+        return self._consumers
 
     def producers(self) -> dict[tuple[int, int], OpNode]:
-        out: dict[tuple[int, int], OpNode] = {}
-        for op in self.ops:
-            for v in op.writes:
-                out[v.key] = op
-        return out
+        """version_key -> producing op (cached; extended as ops are recorded).
+
+        Returns the live map — treat it as read-only.
+        """
+        return self._producers
 
     # -- execution boundary ---------------------------------------------------
     def sync(self) -> None:

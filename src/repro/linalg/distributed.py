@@ -20,8 +20,9 @@ import numpy as np
 
 import jax
 from jax import lax
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro import core as bind
 from repro.core import lowering

@@ -24,7 +24,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.constraints import current_policy

@@ -23,8 +23,9 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import lowering
 from repro.sharding.constraints import use_policy

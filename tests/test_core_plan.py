@@ -1,0 +1,255 @@
+"""Compiled wavefront execution engine (plan + executable caches).
+
+Covers the plan layer's contracts: plan caching across repeated ``sync()``
+and across identical workflow builds, executable-cache hit accounting,
+incremental live-footprint accounting matching the interpreter's full
+rescan, and GC-under-plan keeping the versioning-memory working set O(1).
+"""
+
+import numpy as np
+import pytest
+
+from repro import core as bind
+
+
+@bind.op
+def scale(a: bind.InOut, s: bind.In):
+    return a * s
+
+
+@bind.op
+def gemm(a: bind.In, b: bind.In, c: bind.InOut):
+    return c + a @ b
+
+
+@bind.op
+def produce(x: bind.InOut):
+    return x + 1
+
+
+@bind.op
+def consume(x: bind.In, out: bind.InOut):
+    return out + x
+
+
+_CALLS = {"n": 0}
+
+
+def _counting(a, s):
+    _CALLS["n"] += 1
+    return a * s
+
+
+_counting.__bind_intents__ = (bind.InOut, bind.In)
+
+
+# ---------------------------------------------------------------------------
+# Plan caching
+# ---------------------------------------------------------------------------
+
+def test_second_sync_does_not_rerun_executed_ops():
+    _CALLS["n"] = 0
+    with bind.Workflow() as wf:
+        a = wf.array(np.ones((4, 4)))
+        for _ in range(5):
+            wf.call(_counting, (a, 1.01), name="count")
+        wf.sync()
+        assert _CALLS["n"] == 5
+        wf.sync()          # nothing new recorded -> pure no-op
+        assert _CALLS["n"] == 5
+        wf.fetch(a)        # fetch implies sync; still no re-execution
+        assert _CALLS["n"] == 5
+    assert _CALLS["n"] == 5
+
+
+def test_identical_workflow_builds_hit_plan_cache():
+    bind.clear_plan_cache()
+
+    def build():
+        ex = bind.LocalExecutor(1, mode="plan")
+        with bind.Workflow(executor=ex) as wf:
+            a = wf.array(np.arange(16.0).reshape(4, 4), "a")
+            for _ in range(8):
+                scale(a, 1.5)
+            return np.asarray(wf.fetch(a))
+
+    first = build()
+    h0 = dict(bind.PLAN_CACHE_STATS)
+    second = build()
+    h1 = dict(bind.PLAN_CACHE_STATS)
+    np.testing.assert_allclose(first, np.arange(16.0).reshape(4, 4) * 1.5 ** 8)
+    np.testing.assert_allclose(first, second)
+    # the second, structurally-identical build re-used the compiled plan
+    assert h1["hits"] == h0["hits"] + 1
+    assert h1["misses"] == h0["misses"]
+
+
+def test_plan_cache_keyed_on_structure_not_constants():
+    """Same DAG shape with different embedded constants must share a plan
+    (constants are read from the live op at replay) AND compute correctly."""
+    bind.clear_plan_cache()
+
+    def build(factor):
+        ex = bind.LocalExecutor(1, mode="plan")
+        with bind.Workflow(executor=ex) as wf:
+            a = wf.array(np.ones((3, 3)), "a")
+            for _ in range(4):
+                scale(a, factor)
+            return np.asarray(wf.fetch(a))
+
+    np.testing.assert_allclose(build(2.0), np.ones((3, 3)) * 16.0)
+    h0 = dict(bind.PLAN_CACHE_STATS)
+    np.testing.assert_allclose(build(3.0), np.ones((3, 3)) * 81.0)
+    h1 = dict(bind.PLAN_CACHE_STATS)
+    assert h1["hits"] == h0["hits"] + 1  # structure identical -> cache hit
+
+
+# ---------------------------------------------------------------------------
+# Executable cache
+# ---------------------------------------------------------------------------
+
+def test_executable_cache_hit_counts():
+    bind.clear_plan_cache()
+    cache = bind.ExecutableCache()
+    ex = bind.LocalExecutor(1, mode="plan", executable_cache=cache)
+    n_ops = 12
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((4, 4)))
+        for _ in range(n_ops):
+            scale(a, 1.1)
+    # one signature: (scale, (4,4) float64, float) -> 1 miss, rest hits
+    assert cache.misses == 1
+    assert cache.hits == n_ops - 1
+    assert len(cache) == 1
+
+
+def test_executable_cache_distinct_signatures():
+    bind.clear_plan_cache()
+    cache = bind.ExecutableCache()
+    ex = bind.LocalExecutor(1, mode="plan", executable_cache=cache)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((4, 4)))
+        b = wf.array(np.ones((8, 8)))
+        for _ in range(3):
+            scale(a, 1.1)   # signature 1
+            scale(b, 1.1)   # signature 2 (different shape)
+    assert cache.misses == 2
+    assert cache.hits == 4
+    assert len(cache) == 2
+
+
+def test_executable_cache_jits_jax_payloads():
+    jnp = pytest.importorskip("jax.numpy")
+    bind.clear_plan_cache()
+    cache = bind.ExecutableCache()
+    ex = bind.LocalExecutor(1, mode="plan", executable_cache=cache)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((4, 4), jnp.float32))
+        for _ in range(6):
+            scale(a, 2.0)
+        out = wf.fetch(a)
+    np.testing.assert_allclose(np.asarray(out), np.full((4, 4), 64.0))
+    assert cache.compiles == 1          # one XLA executable for 6 replays
+    assert cache.fallbacks == 0
+
+
+# ---------------------------------------------------------------------------
+# Accounting equivalence: planned replay vs reference interpreter
+# ---------------------------------------------------------------------------
+
+def _stats_for(build, n_nodes, mode, collective_mode="tree"):
+    ex = bind.LocalExecutor(n_nodes, collective_mode=collective_mode, mode=mode)
+    with bind.Workflow(n_nodes=n_nodes, executor=ex) as wf:
+        build(wf)
+    return ex.stats
+
+
+def _build_chain(wf):
+    a = wf.array(np.ones((64, 64)), "a")
+    for _ in range(10):
+        scale(a, 1.01)
+
+
+def _build_fig1(wf):
+    A = wf.array(np.eye(2), "A")
+    bs = [wf.array(np.ones((2, 2)), f"b{i}") for i in range(7)]
+    cs = [wf.array(np.zeros((2, 2)), f"c{i}") for i in range(7)]
+    for i in range(3):
+        gemm(A, bs[i], cs[i])
+    scale(A, 2.0)
+    for i in range(3, 7):
+        gemm(A, bs[i], cs[i])
+
+
+def _build_fanout(wf):
+    x = wf.array(np.ones(1024), "x")
+    outs = [wf.array(np.zeros(1024)) for _ in range(8)]
+    with bind.node(0):
+        produce(x)
+    for r in range(8):
+        with bind.node(r + 1):
+            consume(x, outs[r])
+
+
+@pytest.mark.parametrize("name,build,n_nodes", [
+    ("chain", _build_chain, 1),
+    ("fig1", _build_fig1, 1),
+    ("fanout", _build_fanout, 9),
+])
+@pytest.mark.parametrize("collective_mode", ["tree", "naive"])
+def test_planned_stats_match_interpreter(name, build, n_nodes, collective_mode):
+    """Transfers (events, rounds, bytes), wavefronts and incremental live
+    accounting must be byte-identical to the interpreter's full rescan."""
+    a = _stats_for(build, n_nodes, "interpret", collective_mode)
+    b = _stats_for(build, n_nodes, "plan", collective_mode)
+    assert a.transfers == b.transfers
+    assert a.wavefronts == b.wavefronts
+    assert a.peak_live_bytes == b.peak_live_bytes
+    assert a.peak_live_payloads == b.peak_live_payloads
+    assert a.copies_elided == b.copies_elided
+    assert a.ops_executed == b.ops_executed
+
+
+def test_planned_results_match_interpreter_values():
+    results = {}
+    for mode in ("interpret", "plan"):
+        ex = bind.LocalExecutor(4, mode=mode)
+        with bind.Workflow(n_nodes=4, executor=ex) as wf:
+            a = wf.array(np.arange(9.0).reshape(3, 3), "a", rank=1)
+            c = wf.array(np.zeros((3, 3)), "c", rank=2)
+            with bind.node(2):
+                gemm(a, a, c)
+            with bind.node(3):
+                scale(a, 3.0)
+            gemm(a, a, c)
+            results[mode] = (np.asarray(wf.fetch(a)), np.asarray(wf.fetch(c)))
+    np.testing.assert_allclose(results["interpret"][0], results["plan"][0])
+    np.testing.assert_allclose(results["interpret"][1], results["plan"][1])
+
+
+# ---------------------------------------------------------------------------
+# GC under plan: versioning-memory scenario stays O(1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["plan", "interpret"])
+def test_gc_with_plan_keeps_working_set_constant(mode):
+    n_versions = 64
+    ex = bind.LocalExecutor(1, mode=mode)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((256, 256)))
+        for _ in range(n_versions):
+            scale(a, 1.01)
+    assert ex.stats.peak_live_payloads <= 2
+    assert ex.stats.peak_live_bytes <= 2 * 256 * 256 * 8
+    # only the head survives; intermediates were reclaimed
+    assert ex.value(a.ref.head).shape == (256, 256)
+    with pytest.raises(KeyError):
+        ex.value(a.ref.version(3))
+
+
+def test_wavefront_counts_match_static_analysis():
+    ex = bind.LocalExecutor(1, mode="plan")
+    with bind.Workflow(executor=ex) as wf:
+        _build_fig1(wf)
+        static = bind.LocalExecutor.wavefronts(wf)
+    assert ex.stats.wavefronts == static == [4, 4]
