@@ -2,18 +2,30 @@
 
 1. run-time DAG construction overhead per operation (µs/op) as a function
    of op granularity — the paper's "critical disadvantage depending upon
-   the computational cost of a single operation".  Reported for **both**
-   executor modes so the interpreter→compiled-plan speedup is tracked:
+   the computational cost of a single operation".  Reported for the
+   interpreter, for cold/warm planned replay, and **per execution backend**
+   so the interpreter → compiled-plan → pluggable-backend trajectory is
+   tracked:
 
-   * ``exec_us_per_op_interp`` — per-op trace-order interpreter (the
+   * ``exec_us_per_op_interp``  — per-op trace-order interpreter (the
      "before" side; the seed executor measured ~19.6 µs/op at tile=8);
-   * ``exec_us_per_op_cold``   — planned mode, first run: plan construction
+   * ``exec_us_per_op_cold``    — planned mode, first run: plan construction
      + wavefront replay;
-   * ``exec_us_per_op``        — planned mode, warm: the plan-cache hit an
-     iterative driver sees from its second identical segment onward (the
-     headline number);
+   * ``exec_us_per_op``         — planned mode, warm, serial backend: the
+     plan-cache hit an iterative driver sees from its second identical
+     segment onward (the headline number);
+   * ``exec_us_per_op_threads`` / ``exec_us_per_op_fused`` — warm replay
+     through the thread-pool and fused-batch backends.  The scale chain has
+     no intra-level parallelism, so these must track the serial number
+     (both backends take their chain fast path) — regressions here are pure
+     dispatch overhead;
 
-2. multi-versioning memory overhead: peak live payloads vs the
+2. backend wavefront scaling (``bench="backend_parallel"``): a *wide* DAG
+   (independent same-signature jax ops per level) where the thread pool
+   overlaps op bodies and the fused backend collapses each level into one
+   vmapped XLA dispatch — µs/op per backend plus the fused batch counters;
+
+3. multi-versioning memory overhead: peak live payloads vs the
    single-version working set, with and without version GC (checked in
    both executor modes).
 """
@@ -32,10 +44,11 @@ def scale(a: bind.InOut, s: bind.In):
     return a * s
 
 
-def _chain_exec_time(mode: str, tile: int, n_ops: int) -> float:
+def _chain_exec_time(mode: str, tile: int, n_ops: int,
+                     backend: str = "serial") -> float:
     """Seconds spent in ``sync()`` for a ``n_ops``-long scale chain."""
     x = np.ones((tile, tile))
-    ex = bind.LocalExecutor(1, mode=mode)
+    ex = bind.LocalExecutor(1, mode=mode, backend=backend)
     with bind.Workflow(executor=ex) as wf:
         a = wf.array(x)
         for _ in range(n_ops):
@@ -45,18 +58,40 @@ def _chain_exec_time(mode: str, tile: int, n_ops: int) -> float:
         return time.perf_counter() - t0
 
 
-def run() -> list[dict]:
+def _wide_exec_time(backend, width: int, depth: int, tile: int) -> float:
+    """Seconds in ``sync()`` for ``depth`` levels of ``width`` independent
+    same-signature jax ops — the fused/thread backends' target shape."""
+    import jax.numpy as jnp
+
+    ex = bind.LocalExecutor(1, mode="plan", backend=backend)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.ones((tile, tile), jnp.float32), f"x{i}")
+              for i in range(width)]
+        for _ in range(depth):
+            for x in xs:
+                scale(x, 1.0000001)
+        t0 = time.perf_counter()
+        wf.sync()
+        for x in xs:            # materialise async jax results
+            np.asarray(wf.fetch(x))
+        return time.perf_counter() - t0
+
+
+def run(quick: bool = False) -> list[dict]:
     rows = []
     # Warm the process (allocator, bytecode, caches) so the first timed row
     # measures the executors, not interpreter start-up.
     for mode in ("interpret", "plan", "plan"):
         _chain_exec_time(mode, 8, 50)
+    for backend in ("threads", "fused"):
+        _chain_exec_time("plan", 8, 50, backend=backend)
     # 1. trace overhead vs op cost.  Small tiles get long chains: per-op
     # overhead is the measurand there and the host is noisy, so amortise.
-    for tile in (8, 64, 256, 1024):
+    tiles = (8,) if quick else (8, 64, 256, 1024)
+    for tile in tiles:
         n_ops = 1000 if tile <= 64 else 300
         x = np.ones((tile, tile))
-        reps = 7 if tile <= 64 else 3
+        reps = (3 if quick else 7) if tile <= 64 else 3
 
         # trace cost (recording only; shared by both executor modes)
         def trace_once():
@@ -68,17 +103,12 @@ def run() -> list[dict]:
                 dt = time.perf_counter() - t0
                 wf._synced_upto = len(wf.ops)  # skip execution on exit
                 return dt
-        t_trace = min(trace_once() for _ in range(reps))
-        # interpreter ("before"); best-of-N to damp scheduler noise
-        t_interp = min(_chain_exec_time("interpret", tile, n_ops)
-                       for _ in range(reps))
-        # planned: cold (plan built) then warm (identical segment, cache hit)
+
+        # planned cold: plan built fresh each time
         def cold_once():
             bind.clear_plan_cache()
             return _chain_exec_time("plan", tile, n_ops)
-        t_cold = min(cold_once() for _ in range(reps))
-        t_warm = min(_chain_exec_time("plan", tile, n_ops)
-                     for _ in range(reps))
+
         # eager baseline (no DAG)
         def eager_once():
             t0 = time.perf_counter()
@@ -86,7 +116,32 @@ def run() -> list[dict]:
             for _ in range(n_ops):
                 y = y * 1.0000001
             return time.perf_counter() - t0
-        t_eager = min(eager_once() for _ in range(reps))
+
+        # Best-of-N with *interleaved* rounds: one measurement of every
+        # measurand per round, so a host load spike inflates the whole
+        # round rather than silently penalising one mode (the numbers are
+        # paired comparisons).
+        measurands = {
+            "trace": trace_once,
+            "interp": lambda: _chain_exec_time("interpret", tile, n_ops),
+            "cold": cold_once,
+            "warm": lambda: _chain_exec_time("plan", tile, n_ops),
+            "threads": lambda: _chain_exec_time("plan", tile, n_ops,
+                                                backend="threads"),
+            "fused": lambda: _chain_exec_time("plan", tile, n_ops,
+                                              backend="fused"),
+            "eager": eager_once,
+        }
+        best = {k: float("inf") for k in measurands}
+        for _ in range(reps):
+            for k, fn in measurands.items():
+                dt = fn()
+                if dt < best[k]:
+                    best[k] = dt
+        t_trace, t_interp, t_cold, t_warm, t_eager = (
+            best["trace"], best["interp"], best["cold"], best["warm"],
+            best["eager"])
+        t_backend = {"threads": best["threads"], "fused": best["fused"]}
 
         def pct(t_exec):
             return round(100 * (t_trace + t_exec - t_eager) / max(t_eager, 1e-9), 1)
@@ -100,6 +155,8 @@ def run() -> list[dict]:
             "exec_us_per_op": round(t_warm / n_ops * 1e6, 2),
             "exec_us_per_op_cold": round(t_cold / n_ops * 1e6, 2),
             "exec_us_per_op_interp": round(t_interp / n_ops * 1e6, 2),
+            "exec_us_per_op_threads": round(t_backend["threads"] / n_ops * 1e6, 2),
+            "exec_us_per_op_fused": round(t_backend["fused"] / n_ops * 1e6, 2),
             "eager_us_per_op": round(t_eager / n_ops * 1e6, 2),
             "overhead_pct": pct(t_warm),
             "overhead_pct_interp": pct(t_interp),
@@ -109,7 +166,37 @@ def run() -> list[dict]:
                 seed_exec / max(t_warm / n_ops * 1e6, 1e-12), 2),
         })
 
-    # 2. versioning memory: GC keeps the working set O(1), not O(#versions) —
+    # 2. backend wavefront scaling: wide levels of same-signature jax ops.
+    width, depth, tile = (8, 10, 16) if quick else (32, 20, 16)
+    reps = 2 if quick else 3
+    backends = {n: bind.get_backend(n) for n in ("serial", "threads", "fused")}
+    for backend in backends.values():              # warm caches per backend
+        _wide_exec_time(backend, 4, 2, tile)
+        _wide_exec_time(backend, width, depth, tile)
+    t_best = {n: float("inf") for n in backends}   # interleaved rounds again
+    fused_counts = (0, 0)
+    for _ in range(reps):
+        for n, backend in backends.items():
+            if n == "fused":
+                b0, o0 = backend.batches_dispatched, backend.ops_fused
+            t_best[n] = min(t_best[n], _wide_exec_time(backend, width, depth, tile))
+            if n == "fused":
+                # per-run deltas (the workload is deterministic, so every
+                # rep fuses identically) — never the cumulative counters
+                fused_counts = (backend.batches_dispatched - b0,
+                                backend.ops_fused - o0)
+    n_ops = width * depth
+    for name, backend in backends.items():
+        row = {
+            "bench": "backend_parallel", "backend": name,
+            "width": width, "depth": depth, "tile": tile, "ops": n_ops,
+            "exec_us_per_op": round(t_best[name] / n_ops * 1e6, 2),
+        }
+        if name == "fused":
+            row["batches_dispatched"], row["ops_fused"] = fused_counts
+        rows.append(row)
+
+    # 3. versioning memory: GC keeps the working set O(1), not O(#versions) —
     #    in both executor modes.
     n_versions = 64
     for mode in ("plan", "interpret"):

@@ -1,13 +1,17 @@
 """Benchmark harness: one module per paper table/figure + the roofline.
 
-    PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run strassen   # one
+    PYTHONPATH=src python -m benchmarks.run                     # all
+    PYTHONPATH=src python -m benchmarks.run strassen            # one
+    PYTHONPATH=src python -m benchmarks.run --quick dag_overhead  # CI smoke
+
+``--quick`` shrinks problem sizes / repetitions for CI smoke runs; numbers
+from quick mode are sanity signals, not trajectory data.
 
 Prints ``bench,key-fields...`` lines and writes
 benchmarks/results/bench_results.json.  The dag_overhead suite additionally
 writes ``benchmarks/BENCH_dag_overhead.json`` — the committed,
 machine-readable before/after executor trajectory (interpreter vs compiled
-plan) that future PRs append their numbers to.
+plan vs pluggable backends) that future PRs append their numbers to.
 """
 
 from __future__ import annotations
@@ -22,12 +26,14 @@ def main() -> None:
         bench_strassen, bench_distgemm, bench_sort, bench_dag_overhead,
         bench_roofline)
 
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    args = [a for a in sys.argv[1:] if a != "--quick"]
+    quick = "--quick" in sys.argv[1:]
+    which = args[0] if args else "all"
     suites = {
         "strassen": lambda: bench_strassen.run(),
         "distgemm": lambda: bench_distgemm.run(),
-        "sort": lambda: bench_sort.run(n_items=1_000_000),
-        "dag_overhead": lambda: bench_dag_overhead.run(),
+        "sort": lambda: bench_sort.run(n_items=100_000 if quick else 1_000_000),
+        "dag_overhead": lambda: bench_dag_overhead.run(quick=quick),
         "roofline": lambda: bench_roofline.run(mesh=None),
     }
     if which != "all":
@@ -53,8 +59,13 @@ def main() -> None:
     print(f"\nwrote {len(all_rows)} rows -> {out}")
 
     dag_rows = [r for r in all_rows
-                if r.get("bench") in ("dag_overhead", "versioning_memory")]
-    if dag_rows:
+                if r.get("bench") in ("dag_overhead", "backend_parallel",
+                                      "versioning_memory")]
+    if quick and dag_rows:
+        # quick numbers are smoke signals, never trajectory data — keep the
+        # committed BENCH_dag_overhead.json untouched
+        print("(--quick: skipping BENCH_dag_overhead.json update)")
+    elif dag_rows:
         dag_out = os.path.join(os.path.dirname(__file__),
                                "BENCH_dag_overhead.json")
         with open(dag_out, "w") as f:

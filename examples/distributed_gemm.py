@@ -18,23 +18,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def bind_version() -> None:
-    from repro import core as bind
-    from repro.linalg.distributed import (
-        distributed_gemm_listing1, make_distributed_inputs)
+    from repro.launch.mesh import make_topology
+    from repro.linalg.distributed import run_distributed_gemm
 
     rng = np.random.default_rng(0)
     NP = NQ = 2
     A = rng.normal(size=(128, 128))
     B = rng.normal(size=(128, 128))
-    ex = bind.LocalExecutor(NP * NQ, collective_mode="tree")
-    with bind.Workflow(n_nodes=NP * NQ, executor=ex) as wf:
-        a, b, c = make_distributed_inputs(wf, A, B, ib=32, NP=NP, NQ=NQ)
-        distributed_gemm_listing1(wf, a, b, c, NP, NQ)
-        out = c.to_array()
-    np.testing.assert_allclose(out, A @ B, rtol=1e-9)
-    print(f"[bind]  4 nodes: {ex.stats.message_count} implicit transfers, "
-          f"{ex.stats.bytes_transferred/1e6:.2f} MB, "
-          f"critical path {ex.stats.critical_path}")
+    topo = make_topology("ring", NP * NQ)
+    for backend in ("serial", "threads", "fused"):
+        out, stats, est = run_distributed_gemm(
+            A, B, ib=32, NP=NP, NQ=NQ, backend=backend, topology=topo)
+        np.testing.assert_allclose(out, A @ B, rtol=1e-9)
+        print(f"[bind]  4 nodes, backend={backend:7s}: "
+              f"{stats.message_count} implicit transfers, "
+              f"{stats.bytes_transferred/1e6:.2f} MB, "
+              f"critical path {stats.critical_path}, "
+              f"est. comm makespan {est*1e6:.1f} us on a ring")
 
 
 def shardmap_version() -> None:

@@ -20,9 +20,11 @@ def main() -> None:
     n = 2_000_000
     vals = rng.integers(0, 2**31 - 1, size=n, dtype=np.int64)
 
-    print(f"sorting {n/1e6:.0f}M uniform int32s (paper: 1B on 64 nodes)")
+    backend = sys.argv[1] if len(sys.argv) > 1 else "serial"
+    print(f"sorting {n/1e6:.0f}M uniform int32s (paper: 1B on 64 nodes) "
+          f"[backend={backend}]")
     for nodes in (1, 4, 8):
-        ex = bind.LocalExecutor(nodes, collective_mode="tree")
+        ex = bind.LocalExecutor(nodes, collective_mode="tree", backend=backend)
         t0 = time.perf_counter()
         out, stats = sort_integers(vals, n_nodes=nodes, executor=ex)
         dt = time.perf_counter() - t0

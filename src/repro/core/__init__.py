@@ -37,6 +37,14 @@ from .plan import (
     segment_signature,
 )
 from .executable_cache import EXEC_CACHE, ExecutableCache
+from .backends import (
+    BACKENDS,
+    Backend,
+    FusedBatchBackend,
+    SerialPlanBackend,
+    ThreadPoolBackend,
+    get_backend,
+)
 from . import lowering
 
 __all__ = [
@@ -47,4 +55,6 @@ __all__ = [
     "reduce_tree", "ExecutionStats", "LocalExecutor", "TransferEvent", "lowering",
     "ExecutionPlan", "PLAN_CACHE_STATS", "build_plan", "clear_plan_cache",
     "plan_for", "segment_signature", "EXEC_CACHE", "ExecutableCache",
+    "BACKENDS", "Backend", "SerialPlanBackend", "ThreadPoolBackend",
+    "FusedBatchBackend", "get_backend",
 ]

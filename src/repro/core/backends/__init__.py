@@ -1,0 +1,54 @@
+"""Pluggable execution backends for compiled-plan replay.
+
+The :class:`~repro.core.scheduler.LocalExecutor` frontend owns the
+simulated-machine *semantics* — per-rank stores, version locations,
+transfers, live-footprint accounting, stats.  A **backend** owns only the
+*dispatch strategy* for a compiled :class:`~repro.core.plan.ExecutionPlan`:
+
+* ``"serial"``  — :class:`SerialPlanBackend`: wavefront-ordered one-op-at-a-
+  time replay, the reference semantics (and the fastest option for chains
+  with no intra-level parallelism);
+* ``"threads"`` — :class:`ThreadPoolBackend`: each wavefront level's ops are
+  dispatched concurrently over a worker pool (the plan guarantees they share
+  no version dependencies), overlapping comm-free op bodies on multi-core
+  hosts;
+* ``"fused"``   — :class:`FusedBatchBackend`: same-signature ops of one
+  level are stacked and dispatched as a single ``jax.vmap``-ed jitted call
+  through the :class:`~repro.core.executable_cache.ExecutableCache`,
+  collapsing N small XLA dispatches into one.
+
+All backends replay the same plan against the same frontend state, so
+payload values and the transfer event stream are identical across backends;
+only wall-clock (and, for concurrent backends, the moment a level's
+in-flight payloads peak) differs.
+"""
+
+from __future__ import annotations
+
+from .base import Backend
+from .serial import SerialPlanBackend
+from .threadpool import ThreadPoolBackend
+from .fused import FusedBatchBackend
+
+BACKENDS: dict[str, type] = {
+    SerialPlanBackend.name: SerialPlanBackend,
+    ThreadPoolBackend.name: ThreadPoolBackend,
+    FusedBatchBackend.name: FusedBatchBackend,
+}
+
+
+def get_backend(spec) -> Backend:
+    """Resolve a backend name (or pass through a ready instance)."""
+    if isinstance(spec, Backend):
+        return spec
+    try:
+        cls = BACKENDS[spec]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown execution backend {spec!r}; "
+            f"available: {sorted(BACKENDS)}") from None
+    return cls()
+
+
+__all__ = ["Backend", "SerialPlanBackend", "ThreadPoolBackend",
+           "FusedBatchBackend", "BACKENDS", "get_backend"]

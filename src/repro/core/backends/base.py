@@ -1,0 +1,130 @@
+"""Backend protocol + the shared per-op replay primitives.
+
+A backend's :meth:`Backend.execute` replays one compiled
+:class:`~repro.core.plan.ExecutionPlan` against a ``LocalExecutor``'s live
+state.  The four primitives here are the *only* ways a backend touches that
+state, and they must be applied **in plan order** for everything except the
+op body itself:
+
+* :func:`apply_ships`  — replay an op's precomputed transfer schedule;
+* :func:`gather_args`  — resolve an op's payload arguments from the stores;
+* :func:`resolve_call` — memoised executable-cache resolution for the body;
+* :func:`commit`       — place written payloads, sample live peaks, run GC.
+
+The frontend↔backend contract: during ``execute`` the executor's
+``_round_counter`` still holds the segment's base round (the frontend
+advances it by ``plan.n_rounds`` afterwards), and ``ops_executed`` /
+``copies_elided`` / ``wavefronts`` accounting is the frontend's job.
+Concurrent backends may reorder/overlap **op bodies** freely within one
+wavefront level (the plan guarantees level-mates share no version
+dependencies) but must keep ships and commits in plan order so the transfer
+event stream stays byte-identical across backends.
+"""
+
+from __future__ import annotations
+
+from ..stats import TransferEvent, _nbytes
+
+
+class Backend:
+    """Dispatch strategy for a compiled plan (see package docstring)."""
+
+    name = "base"
+
+    def execute(self, ex, wf, plan) -> None:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} name={self.name!r}>"
+
+
+def apply_ships(ex, p) -> None:
+    """Replay ``p``'s precomputed ship schedule (plan order, main thread)."""
+    stores, where = ex._stores, ex._where
+    events = ex.stats.transfers
+    base_round = ex._round_counter
+    for vkey, root, transfers in p.ships:
+        payload = stores[root][vkey]
+        nb = _nbytes(payload)
+        ranks = where[vkey]
+        for src, dst, kind, rel in transfers:
+            stores[dst][vkey] = payload
+            ranks.add(dst)
+            ex._live_entries += 1
+            events.append(
+                TransferEvent(vkey, src, dst, nb, base_round + rel, kind))
+
+
+def gather_args(ex, p, node) -> list:
+    """Resolve ``p``'s call arguments (payloads from stores, constants inline)."""
+    if ex.n_nodes == 1:
+        store0 = ex._stores[0]
+        return [store0[k] if k is not None else a[1]
+                for k, a in zip(p.arg_keys, node.args)]
+    stores, where = ex._stores, ex._where
+    return [stores[next(iter(where[k]))][k] if k is not None else a[1]
+            for k, a in zip(p.arg_keys, node.args)]
+
+
+def resolve_call(ex, p, args):
+    """Executable-cache resolution with the plan-op's type memo (main thread)."""
+    types = tuple(map(type, args))
+    if types == p.cached_types:
+        return p.cached_call
+    call = ex._exec_cache.lookup(p.fn, args)
+    if call is p.fn:   # Python path: valid for any shapes
+        # call before types: plans are shared process-wide, and a concurrent
+        # replayer must never see matching types with the callable unset.
+        p.cached_call = call
+        p.cached_types = types
+    else:              # jit path: shape-keyed, re-resolve per run
+        p.cached_types = None
+    return call
+
+
+def commit(ex, p, node, result, nbytes=None) -> None:
+    """Place ``p``'s written payloads, sample live peaks, apply GC.
+
+    ``nbytes`` may carry a precomputed payload size for the simple-write
+    case — fused buckets share one shape/dtype, so the (surprisingly
+    costly) jax ``.nbytes`` property is paid once per bucket, not per op.
+    """
+    stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
+    stats = ex.stats
+    if p.simple_write and not isinstance(result, tuple):
+        # dominant case: one payload, one executing rank
+        wk = p.write_keys[0]
+        nb = _nbytes(result) if nbytes is None else nbytes
+        key_bytes[wk] = nb
+        ex._live_bytes += nb
+        rank = p.exec_ranks[0]
+        where[wk] = {rank}
+        stores[rank][wk] = result
+        ex._live_entries += 1
+    else:
+        if not isinstance(result, tuple):
+            result = (result,)
+        assert len(result) == p.n_writes, (
+            f"{node.name} returned {len(result)} payloads for "
+            f"{p.n_writes} written args"
+        )
+        for wk, payload in zip(p.write_keys, result):
+            nb = _nbytes(payload)
+            key_bytes[wk] = nb
+            ex._live_bytes += nb
+            holders = set(p.exec_ranks)
+            where[wk] = holders
+            for rank in holders:
+                stores[rank][wk] = payload
+            ex._live_entries += len(holders)
+    if ex._live_bytes > stats.peak_live_bytes:
+        stats.peak_live_bytes = ex._live_bytes
+    if ex._live_entries > stats.peak_live_payloads:
+        stats.peak_live_payloads = ex._live_entries
+    if p.gc_keys:
+        for dk in p.gc_keys:
+            ranks = where.pop(dk)
+            for r in ranks:
+                del stores[r][dk]
+            ex._live_entries -= len(ranks)
+            ex._live_bytes -= key_bytes.pop(dk, 0)

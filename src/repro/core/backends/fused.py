@@ -1,0 +1,310 @@
+"""Fused-batch dispatch: same-signature level-mates become one vmapped call.
+
+Tiled linalg and MapReduce wavefronts are dominated by N ops sharing one
+``(fn, shapes, dtypes)`` signature — N leaf GEMMs, N per-tile adds, N bucket
+sorts.  The serial backend pays N XLA dispatches; this backend dispatches
+each such *bucket* as a single ``jit(vmap(fn))`` call through the
+:class:`~repro.core.executable_cache.ExecutableCache`'s batched entries.
+
+jax dispatch cost on host backends is dominated by *per-buffer* argument /
+result handling, not by the call itself — so fusing N ops into one call
+with N inputs and N outputs saves nothing.  The win comes from **batched
+residency**: a bucket's result stays one stacked device buffer, and each
+member op's payload is a lazy :class:`BatchSlice` view into it.  When the
+next level's bucket consumes exactly those members (the ubiquitous
+chain-of-wavefronts shape), the whole buffer is passed through as ONE
+argument and returned as ONE result — a level of N ops costs one dispatch
+and two buffers instead of ~3N.  Slices materialise only at the boundaries:
+a non-fused consumer, a transfer, or a user ``fetch()``.
+
+Eligibility is decided in two halves:
+
+* **static** (plan time, :attr:`ExecutionPlan.level_groups`): level-mates
+  sharing ``(fn, constant-position mask)`` with a single written version;
+* **dynamic** (replay time, here): bucket members must agree on payload
+  shape/dtype and constant values, and every payload must already be a
+  ``jax.Array`` (or a :class:`BatchSlice` of one) — NumPy payloads are
+  never silently promoted to JAX (that would flip float64 → float32 under
+  default jax config), they take the per-op path instead.
+
+Ops that fail either half — and every op of a ``fn`` whose vmap trace ever
+raised — fall back to per-op dispatch, so the backend degrades to serial
+semantics, never to an error.  Plans with no fusion groups at all delegate
+to :class:`~.serial.SerialPlanBackend` wholesale (zero overhead on chains).
+
+Ships and commits stay in plan order (see :mod:`.base`), so the transfer
+stream is byte-identical to serial; like the thread backend, ``peak_live_*``
+may report the higher true-concurrency peak of a whole level in flight.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..stats import _nbytes
+from .base import Backend, apply_ships, commit, gather_args, resolve_call
+from .serial import SerialPlanBackend
+
+_PENDING = object()     # "not produced by a fused bucket" sentinel
+
+# per-position layouts of a batched executable's flat argument list
+FLAT = "flat"           # n_batch consecutive member payloads, stacked inside
+STACKED = "stacked"     # one pre-stacked buffer (batched residency pass-through)
+CONST = "const"         # one shared constant, broadcast by vmap
+
+
+class BatchSlice:
+    """Lazy view of row ``index`` of a fused bucket's stacked result buffer.
+
+    Stored in the executor's stores like any payload; ``nbytes`` reports the
+    member's (row's) size so transfer and live-set accounting stay identical
+    to per-op execution.  ``materialize()`` pays the one slice dispatch when
+    a boundary actually needs the row.
+
+    Caveat: a surviving row keeps the whole stacked buffer alive until it
+    materialises or dies, so actual process residency can exceed the
+    simulator's ``peak_live_bytes`` (which prices rows individually) by up
+    to the batch width for long-lived fused outputs.  Accounting-faithful
+    eager row materialisation on bucket-mate GC is a ROADMAP follow-up.
+    """
+
+    __slots__ = ("buffer", "index", "_nb", "aval")
+
+    def __init__(self, buffer, index: int, nb: int, aval):
+        self.buffer = buffer
+        self.index = index
+        self._nb = nb
+        self.aval = aval        # element aval: the row's ShapedArray
+
+    @property
+    def nbytes(self) -> int:
+        return self._nb
+
+    @property
+    def shape(self):
+        return self.aval.shape
+
+    @property
+    def dtype(self):
+        return self.aval.dtype
+
+    def materialize(self):
+        return self.buffer[self.index]
+
+    def __repr__(self) -> str:
+        return f"BatchSlice({self.aval.str_short()}, row {self.index})"
+
+
+def materialize(payload):
+    """Resolve a possibly-lazy payload to a concrete array."""
+    if type(payload) is BatchSlice:
+        return payload.materialize()
+    return payload
+
+
+def _bucket_key(p, args):
+    """Dynamic fusion signature of one staged op, or None if ineligible."""
+    parts = []
+    for i, k in enumerate(p.arg_keys):
+        a = args[i]
+        if k is not None:
+            # aval is a cached, hashable ShapedArray — cheaper than the
+            # .shape/.dtype properties and exactly the batching contract
+            if type(a) is BatchSlice:
+                parts.append(a.aval)
+            elif isinstance(a, jax.Array):
+                parts.append(a.aval)
+            else:
+                return None
+        else:
+            try:
+                hash(a)
+            except TypeError:
+                return None
+            # type included: 2, 2.0 and True compare/hash equal but must
+            # not share a bucket (member 0's constant would impose its
+            # dtype on the whole batch)
+            parts.append(("const", type(a), a))
+    return tuple(parts)
+
+
+def _common_buffer(column):
+    """The shared stacked buffer behind a bucket's argument column, if any.
+
+    Returns the buffer when every member's payload is a :class:`BatchSlice`
+    of one buffer covering rows ``0..n-1`` in member order (the chain case);
+    None otherwise.
+    """
+    first = column[0]
+    if type(first) is not BatchSlice or first.index != 0:
+        return None
+    buf = first.buffer
+    n = len(column)
+    if buf.shape[0] != n:
+        return None
+    for i in range(1, n):
+        a = column[i]
+        if type(a) is not BatchSlice or a.buffer is not buf or a.index != i:
+            return None
+    return buf
+
+
+class FusedBatchBackend(Backend):
+    """Bucket same-signature ops per wavefront; one vmapped dispatch each."""
+
+    name = "fused"
+
+    def __init__(self, min_batch: int = 2):
+        self.min_batch = max(2, int(min_batch))
+        self._serial = SerialPlanBackend()
+        self._no_fuse: set = set()      # fns whose vmap trace failed
+        self._lazy_rows = False         # any BatchSlice ever committed
+        self.batches_dispatched = 0
+        self.ops_fused = 0
+
+    def execute(self, ex, wf, plan) -> None:
+        if not plan.has_fusion_groups and not self._lazy_rows:
+            # wholesale delegation is only safe while the stores cannot hold
+            # lazy rows — the serial loop feeds payloads to op bodies (and
+            # ships them cross-rank) without materialising.  After any
+            # fusion, stay on the level loop below, which materialises at
+            # every boundary.
+            self._serial.execute(ex, wf, plan)
+            return
+        ops = wf.ops
+        schedule = plan.schedule
+        for (lo, hi), groups in zip(plan.levels, plan.level_groups):
+            # stage the level on the main thread, plan order (ships first)
+            staged = []
+            for idx in range(lo, hi):
+                p = schedule[idx]
+                if p.ships:
+                    self._materialize_shipped(ex, p)
+                    apply_ships(ex, p)
+                node = ops[p.op_id]
+                staged.append((p, node, gather_args(ex, p, node)))
+            results = [_PENDING] * (hi - lo)
+            result_nbytes = [None] * (hi - lo)
+            for group in groups:
+                if schedule[group[0]].fn in self._no_fuse:
+                    continue
+                buckets: dict[tuple, list[int]] = {}
+                for idx in group:
+                    off = idx - lo
+                    p, _node, args = staged[off]
+                    key = _bucket_key(p, args)
+                    if key is not None:
+                        buckets.setdefault(key, []).append(off)
+                for members in buckets.values():
+                    if len(members) >= self.min_batch:
+                        self._run_bucket(ex, staged, members, results,
+                                         result_nbytes)
+            # commit in plan order; non-fused ops execute per-op here.  The
+            # dominant simple-write case is inlined over locals (the same
+            # discipline as the serial backend's tight loop) — commit() per
+            # op costs ~µs of attribute traffic that would eat the fusion
+            # win on dispatch-bound workloads.
+            stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
+            stats = ex.stats
+            live_b, live_c = ex._live_bytes, ex._live_entries
+            peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
+            for off, (p, node, args) in enumerate(staged):
+                result = results[off]
+                if result is _PENDING:
+                    if any(type(a) is BatchSlice for a in args):
+                        args = [materialize(a) for a in args]
+                    result = resolve_call(ex, p, args)(*args)
+                if p.simple_write and not isinstance(result, tuple):
+                    wk = p.write_keys[0]
+                    nb = result_nbytes[off]
+                    if nb is None:
+                        nb = _nbytes(result)
+                    key_bytes[wk] = nb
+                    live_b += nb
+                    rank = p.exec_ranks[0]
+                    where[wk] = {rank}
+                    stores[rank][wk] = result
+                    live_c += 1
+                else:
+                    # flush locals (incl. peaks — commit() samples against
+                    # stats, and an earlier same-level peak must not be lost)
+                    ex._live_bytes, ex._live_entries = live_b, live_c
+                    stats.peak_live_bytes = peak_b
+                    stats.peak_live_payloads = peak_c
+                    commit(ex, p, node, result)
+                    live_b, live_c = ex._live_bytes, ex._live_entries
+                    peak_b, peak_c = (stats.peak_live_bytes,
+                                      stats.peak_live_payloads)
+                    continue
+                if live_b > peak_b:
+                    peak_b = live_b
+                if live_c > peak_c:
+                    peak_c = live_c
+                if p.gc_keys:
+                    for dk in p.gc_keys:
+                        ranks = where.pop(dk)
+                        for r in ranks:
+                            del stores[r][dk]
+                        live_c -= len(ranks)
+                        live_b -= key_bytes.pop(dk, 0)
+            ex._live_bytes, ex._live_entries = live_b, live_c
+            stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c
+
+    def _materialize_shipped(self, ex, p) -> None:
+        """Concretise lazy slices about to travel (boundary: transfers)."""
+        for vkey, root, _transfers in p.ships:
+            payload = ex._stores[root][vkey]
+            if type(payload) is BatchSlice:
+                concrete = payload.materialize()
+                for r in ex._where[vkey]:
+                    ex._stores[r][vkey] = concrete
+
+    def _run_bucket(self, ex, staged, members, results, result_nbytes) -> None:
+        p0, _node0, args0 = staged[members[0]]
+        if p0.fn in self._no_fuse:
+            # an earlier bucket of this fn (same level) failed its trace —
+            # don't re-pay the failing trace for the remaining buckets
+            return
+        n = len(members)
+        # flat layout (see ExecutableCache.lookup_vmapped): pass a chained
+        # bucket's stacked buffer through whole; otherwise n member payloads
+        layout = []
+        call_args = []
+        sig_args = []
+        for i, k in enumerate(p0.arg_keys):
+            if k is None:
+                layout.append(CONST)
+                call_args.append(args0[i])
+                sig_args.append(args0[i])
+                continue
+            column = [staged[m][2][i] for m in members]
+            buf = _common_buffer(column)
+            if buf is not None:
+                layout.append(STACKED)
+                call_args.append(buf)
+                sig_args.append(buf)
+            else:
+                column = [materialize(a) for a in column]
+                layout.append(FLAT)
+                call_args.extend(column)
+                sig_args.append(column[0])
+        call = ex._exec_cache.lookup_vmapped(
+            p0.fn, tuple(layout), n, sig_args)
+        try:
+            out = call(*call_args)
+        except (jax.errors.JAXTypeError, TypeError, ValueError):
+            # not vmap-traceable (data-dependent control flow, host-only
+            # types): pin this fn to the per-op path for the process — op
+            # bodies are pure by the model's contract, so re-execution is
+            # safe.
+            self._no_fuse.add(p0.fn)
+            return
+        self.batches_dispatched += 1
+        self.ops_fused += n
+        self._lazy_rows = True
+        # batched residency: one stacked buffer, n lazy row views
+        elt_aval = out.aval.update(shape=out.shape[1:])
+        nb = int(out.nbytes) // n       # one shape/dtype per bucket
+        for bi, m in enumerate(members):
+            results[m] = BatchSlice(out, bi, nb, elt_aval)
+            result_nbytes[m] = nb

@@ -1,0 +1,151 @@
+"""Reference planned replay: one op at a time, wavefront-level-major.
+
+This is PR 1's ``LocalExecutor._run_planned`` hot loop extracted verbatim —
+the semantics reference every other backend must match, and the fastest
+dispatch for plans with little intra-level parallelism (a chain pays zero
+coordination overhead here).  State is mirrored into locals for the tight
+loop and written back once at the end; the structured per-op primitives in
+:mod:`.base` compute the exact same transitions.
+"""
+
+from __future__ import annotations
+
+from ..stats import TransferEvent, _nbytes
+from .base import Backend
+
+
+class SerialPlanBackend(Backend):
+    """Sequential plan replay with O(1) bookkeeping per step."""
+
+    name = "serial"
+
+    def execute(self, ex, wf, plan) -> None:
+        ops = wf.ops
+        stores = ex._stores
+        where = ex._where
+        key_bytes = ex._key_bytes
+        stats = ex.stats
+        events = stats.transfers
+        lookup = ex._exec_cache.lookup
+        base_round = ex._round_counter
+        single = ex.n_nodes == 1
+        store0 = stores[0]
+        live_b, live_c = ex._live_bytes, ex._live_entries
+        peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
+
+        for p in plan.schedule:
+            node = ops[p.op_id]
+            if p.ships:
+                for vkey, root, transfers in p.ships:
+                    payload = stores[root][vkey]
+                    nb = _nbytes(payload)
+                    ranks = where[vkey]
+                    for src, dst, kind, rel in transfers:
+                        stores[dst][vkey] = payload
+                        ranks.add(dst)
+                        live_c += 1
+                        events.append(
+                            TransferEvent(vkey, src, dst, nb, base_round + rel, kind))
+            if single and p.binary_simple:
+                # unrolled fast path for the dominant shape: two args, one
+                # written payload, one rank — skips list/zip construction
+                k0, k1 = p.arg_keys
+                a0 = store0[k0] if k0 is not None else node.args[0][1]
+                a1 = store0[k1] if k1 is not None else node.args[1][1]
+                types = (type(a0), type(a1))
+                if types == p.cached_types:
+                    call = p.cached_call
+                else:
+                    call = lookup(p.fn, (a0, a1))
+                    if call is p.fn:
+                        # call before types: plans are shared process-wide,
+                        # and a concurrent replayer must never see matching
+                        # types with the callable still unset.
+                        p.cached_call = call
+                        p.cached_types = types
+                    else:          # jit path: shape-keyed, re-resolve per run
+                        p.cached_types = None
+                result = call(a0, a1)
+                if not isinstance(result, tuple):
+                    wk = p.write_keys[0]
+                    nb = _nbytes(result)
+                    key_bytes[wk] = nb
+                    live_b += nb
+                    rank = p.exec_ranks[0]
+                    where[wk] = {rank}
+                    stores[rank][wk] = result
+                    live_c += 1
+                    if live_b > peak_b:
+                        peak_b = live_b
+                    if live_c > peak_c:
+                        peak_c = live_c
+                    if p.gc_keys:
+                        for dk in p.gc_keys:
+                            ranks = where.pop(dk)
+                            for r in ranks:
+                                del stores[r][dk]
+                            live_c -= len(ranks)
+                            live_b -= key_bytes.pop(dk, 0)
+                    continue
+                # a tuple result for one write: generic handling below
+            else:
+                if single:
+                    args = [store0[k] if k is not None else a[1]
+                            for k, a in zip(p.arg_keys, node.args)]
+                else:
+                    args = [stores[next(iter(where[k]))][k] if k is not None else a[1]
+                            for k, a in zip(p.arg_keys, node.args)]
+                types = tuple(map(type, args))
+                if types == p.cached_types:
+                    call = p.cached_call
+                else:
+                    call = lookup(p.fn, args)
+                    if call is p.fn:   # Python path: valid for any shapes
+                        # call before types: plans are shared process-wide,
+                        # and a concurrent replayer must never see matching
+                        # types with the callable still unset.
+                        p.cached_call = call
+                        p.cached_types = types
+                    else:          # jit path: shape-keyed, re-resolve per run
+                        p.cached_types = None
+                result = call(*args)
+            if p.simple_write and not isinstance(result, tuple):
+                # dominant case: one payload, one executing rank
+                wk = p.write_keys[0]
+                nb = _nbytes(result)
+                key_bytes[wk] = nb
+                live_b += nb
+                rank = p.exec_ranks[0]
+                where[wk] = {rank}
+                stores[rank][wk] = result
+                live_c += 1
+            else:
+                if not isinstance(result, tuple):
+                    result = (result,)
+                assert len(result) == p.n_writes, (
+                    f"{node.name} returned {len(result)} payloads for "
+                    f"{p.n_writes} written args"
+                )
+                for wk, payload in zip(p.write_keys, result):
+                    nb = _nbytes(payload)
+                    key_bytes[wk] = nb
+                    live_b += nb
+                    holders = set(p.exec_ranks)
+                    where[wk] = holders
+                    for rank in holders:
+                        stores[rank][wk] = payload
+                    live_c += len(holders)
+            if live_b > peak_b:
+                peak_b = live_b
+            if live_c > peak_c:
+                peak_c = live_c
+            if p.gc_keys:
+                for dk in p.gc_keys:
+                    ranks = where.pop(dk)
+                    for r in ranks:
+                        del stores[r][dk]
+                    live_c -= len(ranks)
+                    live_b -= key_bytes.pop(dk, 0)
+
+        ex._live_bytes, ex._live_entries = live_b, live_c
+        stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c

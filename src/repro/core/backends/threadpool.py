@@ -1,0 +1,99 @@
+"""Parallel wavefront replay: each level's op bodies run on a thread pool.
+
+The plan's wavefront levels are exactly the sets of ops with no mutual
+version dependencies, so their *bodies* may run concurrently — NumPy BLAS
+calls and jitted XLA executables both release the GIL, giving real
+comm/compute overlap on multi-core hosts for levels wider than one op.
+
+Determinism discipline (see :mod:`.base`): per level, all ships, argument
+gathering and callable resolution happen on the main thread in plan order;
+only the op bodies are submitted to the pool; results are then committed in
+plan order.  The transfer event stream is therefore byte-identical to the
+serial backend's — the only legitimate difference is ``peak_live_*``, which
+may report *higher* (true-concurrency) peaks because a whole level's inputs
+are in flight at once.
+
+Singleton levels bypass the pool entirely, so chain-shaped plans pay no
+coordination overhead.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+from .base import Backend, apply_ships, commit, gather_args, resolve_call
+
+# Default-sized backends share one process-wide pool: executors are created
+# per run/test/driver-step, and a pool per backend instance would leak its
+# idle worker threads for the process lifetime.
+_SHARED_POOL: Optional[ThreadPoolExecutor] = None
+_SHARED_POOL_LOCK = threading.Lock()
+
+
+def _shared_pool() -> ThreadPoolExecutor:
+    global _SHARED_POOL
+    if _SHARED_POOL is None:
+        with _SHARED_POOL_LOCK:
+            if _SHARED_POOL is None:
+                _SHARED_POOL = ThreadPoolExecutor(
+                    max_workers=min(32, (os.cpu_count() or 4)),
+                    thread_name_prefix="bind-wavefront",
+                )
+    return _SHARED_POOL
+
+
+class ThreadPoolBackend(Backend):
+    """Dispatch each wavefront level's independent ops over a worker pool."""
+
+    name = "threads"
+
+    def __init__(self, max_workers: Optional[int] = None):
+        self.max_workers = max_workers
+        self._pool: Optional[ThreadPoolExecutor] = None   # dedicated only
+
+    def _get_pool(self) -> ThreadPoolExecutor:
+        if self.max_workers is None:
+            return _shared_pool()
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.max_workers,
+                thread_name_prefix="bind-wavefront",
+            )
+        return self._pool
+
+    def close(self) -> None:
+        """Shut down a dedicated (max_workers=...) pool; the shared default
+        pool is process-wide and lives until interpreter exit."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def execute(self, ex, wf, plan) -> None:
+        ops = wf.ops
+        schedule = plan.schedule
+        for lo, hi in plan.levels:
+            if hi - lo == 1:                      # chain fast path: no pool
+                p = schedule[lo]
+                if p.ships:
+                    apply_ships(ex, p)
+                node = ops[p.op_id]
+                args = gather_args(ex, p, node)
+                commit(ex, p, node, resolve_call(ex, p, args)(*args))
+                continue
+            # stage the whole level on the main thread, plan order
+            staged = []
+            for idx in range(lo, hi):
+                p = schedule[idx]
+                if p.ships:
+                    apply_ships(ex, p)
+                node = ops[p.op_id]
+                args = gather_args(ex, p, node)
+                staged.append((p, node, resolve_call(ex, p, args), args))
+            pool = self._get_pool()
+            futures = [pool.submit(call, *args) for _, _, call, args in staged]
+            # commit in plan order (futures may complete in any order)
+            for (p, node, _, _), fut in zip(staged, futures):
+                commit(ex, p, node, fut.result())

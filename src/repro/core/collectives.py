@@ -38,6 +38,22 @@ class TreeSchedule:
     def total_messages(self) -> int:
         return sum(len(r) for r in self.rounds)
 
+    def estimated_time(self, topology, nbytes: int) -> float:
+        """Simulated seconds to run this schedule under a topology cost model.
+
+        Transfers of one round fly concurrently (a round costs the max of
+        its hops); rounds serialise.  ``topology`` is anything exposing
+        ``transfer_time(src, dst, nbytes)`` — normally
+        :class:`repro.launch.mesh.Topology`.  This is the per-collective
+        counterpart of ``ExecutionStats.estimated_makespan``: it prices a
+        log-depth tree against the ``depth == len(ranks) - 1`` schedule a
+        naive runtime would use, in time instead of message counts.
+        """
+        return sum(
+            max(topology.transfer_time(src, dst, nbytes) for src, dst in round_)
+            for round_ in self.rounds if round_
+        )
+
 
 def broadcast_tree(root: int, ranks: Sequence[int]) -> TreeSchedule:
     """Binary broadcast tree from ``root`` over ``ranks`` (root included).

@@ -87,6 +87,68 @@ class ExecutableCache:
         self._entries[key] = entry
         return entry
 
+    def lookup_vmapped(self, fn: Callable, layout: tuple, n_batch: int,
+                       sig_args) -> Callable:
+        """Resolve the *batched* executable for ``n_batch`` fused ops.
+
+        ``layout`` describes each argument position of the flat call list:
+        ``"flat"`` — ``n_batch`` consecutive member payloads, stacked inside
+        the jitted body; ``"stacked"`` — one pre-stacked buffer passed
+        through whole (the fused backend's batched-residency fast path);
+        ``"const"`` — one shared constant, broadcast by vmap.  The entry
+        runs ``vmap(fn)`` over the batch and returns the **stacked** result
+        buffer — callers keep per-member rows as lazy views, so a fused
+        level costs one dispatch and one result buffer, not N.
+
+        ``sig_args`` holds one representative per position (first member
+        payload / buffer / constant); constants stay call arguments, so
+        buckets differing only in constant *values* share the executable.
+
+        Tracing failures are the caller's problem (it falls back to per-op
+        dispatch and should stop requesting batches for that ``fn``); the
+        entry is evicted so a broken executable is never replayed.
+        """
+        key = (fn, layout, n_batch) + tuple(_abstract(a) for a in sig_args)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            return entry
+        self.misses += 1
+        if len(self._entries) >= MAX_ENTRIES:
+            self._entries.clear()
+        in_axes = tuple(None if lay == "const" else 0 for lay in layout)
+
+        def stacked_call(*flat):
+            args = []
+            pos = 0
+            for lay in layout:
+                if lay == "flat":
+                    args.append(jax.numpy.stack(flat[pos:pos + n_batch]))
+                    pos += n_batch
+                else:               # "stacked" buffer or "const"
+                    args.append(flat[pos])
+                    pos += 1
+            out = jax.vmap(fn, in_axes=in_axes)(*args)
+            if isinstance(out, tuple):
+                out = out[0]    # fused ops write exactly one payload
+            return out
+
+        batched = jax.jit(stacked_call)
+        cache = self
+
+        def first_batched_call(*call_args):
+            try:
+                out = batched(*call_args)
+            except Exception:
+                cache._entries.pop(key, None)
+                raise
+            cache.compiles += 1
+            cache._entries[key] = batched
+            return out
+
+        self._entries[key] = first_batched_call
+        return first_batched_call
+
     # -- entry construction ---------------------------------------------------
     def _build(self, key: tuple, fn: Callable, args) -> Callable:
         array_args = [a for a in args

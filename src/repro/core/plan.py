@@ -59,7 +59,7 @@ class PlanOp:
 
     __slots__ = ("op_id", "fn", "arg_keys", "write_keys", "exec_ranks",
                  "ships", "gc_keys", "level", "n_writes", "simple_write",
-                 "cached_types", "cached_call")
+                 "binary_simple", "cached_types", "cached_call")
 
     def __init__(self, op_id, fn, arg_keys, write_keys, exec_ranks, ships,
                  gc_keys, level):
@@ -74,15 +74,30 @@ class PlanOp:
         self.n_writes = len(write_keys)
         # dominant case: one written version, one executing rank
         self.simple_write = len(write_keys) == 1 and len(exec_ranks) == 1
+        # the replay fast path unrolls the ubiquitous binary-op shape
+        self.binary_simple = self.simple_write and len(arg_keys) == 2
         self.cached_types = None
         self.cached_call = None
 
 
 class ExecutionPlan:
-    """A compiled segment: wavefront-ordered :class:`PlanOp` schedule."""
+    """A compiled segment: wavefront-ordered :class:`PlanOp` schedule.
+
+    ``levels`` are ``(lo, hi)`` index slices into ``schedule`` — the ops of
+    one wavefront level, guaranteed free of mutual version dependencies, so
+    a backend may dispatch them concurrently.  ``level_groups`` (one tuple
+    per level) are the *signature groups*: schedule indices within the level
+    sharing ``(fn, constant-position mask)`` with a single written version —
+    the static half of the fused-batch eligibility test (the dynamic half,
+    payload shapes/dtypes, is resolved at replay since plans are
+    shape-oblivious).  Only groups of ≥2 ops are recorded;
+    ``has_fusion_groups`` lets batch-aware backends skip group handling
+    entirely on plans with no batching opportunity.
+    """
 
     __slots__ = ("schedule", "wavefront_counts", "n_rounds", "start", "end",
-                 "n_nodes", "collective_mode", "total_writes")
+                 "n_nodes", "collective_mode", "total_writes", "levels",
+                 "level_groups", "has_fusion_groups")
 
     def __init__(self, schedule, wavefront_counts, n_rounds, start, end,
                  n_nodes, collective_mode):
@@ -94,9 +109,37 @@ class ExecutionPlan:
         self.n_nodes = n_nodes
         self.collective_mode = collective_mode
         self.total_writes = sum(p.n_writes for p in schedule)
+        self.levels = _level_slices(schedule)
+        self.level_groups = tuple(
+            _signature_groups(schedule, lo, hi) for lo, hi in self.levels)
+        self.has_fusion_groups = any(self.level_groups)
 
     def __len__(self) -> int:
         return len(self.schedule)
+
+
+def _level_slices(schedule) -> tuple[tuple[int, int], ...]:
+    """Contiguous ``(lo, hi)`` runs of equal-level ops (schedule is level-major)."""
+    slices = []
+    lo = 0
+    n = len(schedule)
+    for i in range(1, n + 1):
+        if i == n or schedule[i].level != schedule[lo].level:
+            slices.append((lo, i))
+            lo = i
+    return tuple(slices)
+
+
+def _signature_groups(schedule, lo: int, hi: int) -> tuple[tuple[int, ...], ...]:
+    """Schedule indices in ``[lo, hi)`` grouped by static fusion signature."""
+    groups: dict[tuple, list[int]] = {}
+    for idx in range(lo, hi):
+        p = schedule[idx]
+        if not p.simple_write:      # fusion covers the 1-write/1-rank case
+            continue
+        mask = tuple(k is None for k in p.arg_keys)
+        groups.setdefault((p.fn, mask), []).append(idx)
+    return tuple(tuple(g) for g in groups.values() if len(g) >= 2)
 
 
 def segment_signature(wf, start: int, end: int) -> tuple:

@@ -1,109 +1,59 @@
 """Execution engine for the transactional DAG (paper §II/III).
 
-The :class:`LocalExecutor` replays a recorded :class:`~repro.core.trace.Workflow`
-the way Bind's MPI engine would, but *simulating* the distributed machine so the
-model's behaviour is observable and testable on one host:
+The engine is split into two layers:
 
-* every payload lives in a per-rank store — an op placed on rank ``r`` can only
-  read payloads present on ``r``;
-* missing inputs trigger **implicit transfers**; versions consumed by several
-  ranks are shipped along the inferred **binary broadcast tree** (paper's
-  implicit/partial collectives) instead of naive point-to-point sends;
-* versions are **immutable** — an op's outputs become brand-new payloads, so
-  there is nothing to lock and no copy is ever made (**zero-copy**: the new
-  version simply *is* the op's return value);
-* payloads are reclaimed once their last consumer ran (the paper's "smart
-  memory reusage"), and :class:`ExecutionStats` records the peak working set.
+* :class:`LocalExecutor` — the **frontend**, owning the simulated
+  distributed machine's *semantics*: per-rank payload stores, the
+  version→holder-ranks location index, implicit transfers along inferred
+  broadcast trees, version GC, and :class:`ExecutionStats` accounting.  An
+  op placed on rank ``r`` can only read payloads present on ``r``; versions
+  are immutable (zero-copy: a new version *is* the op's return value);
+  payloads are reclaimed once their last consumer ran.
+* :mod:`repro.core.backends` — pluggable **dispatch strategies** replaying a
+  compiled :class:`~repro.core.plan.ExecutionPlan` against the frontend's
+  state:
 
-Two execution modes share identical value semantics; accounting (transfer
-order, live-set peaks) is byte-identical whenever the trace order is already
-wavefront-level-sorted — plan mode executes level-major, so a trace that
-interleaves levels may legitimately report different (higher-parallelism)
-peaks:
+  * ``backend="serial"``  (default) — wavefront-ordered one-op-at-a-time
+    replay, the reference;
+  * ``backend="threads"`` — each wavefront level's independent ops run
+    concurrently on a worker pool (comm/compute overlap on multi-core);
+  * ``backend="fused"``   — same-signature level-mates are stacked into a
+    single ``jax.vmap``-ed jitted dispatch via the
+    :class:`~repro.core.executable_cache.ExecutableCache`.
 
-* ``mode="plan"`` (default) — the segment is compiled once into an
-  :class:`~repro.core.plan.ExecutionPlan` (wavefront levels, ship schedules,
-  GC drop lists) and replayed wavefront-by-wavefront with O(1) bookkeeping
-  per step; op bodies dispatch through the process-wide
-  :class:`~repro.core.executable_cache.ExecutableCache` so repeated
-  signatures compile once.  Plans are cached process-wide, so iterative
-  drivers re-recording the same DAG pay analysis cost once.
-* ``mode="interpret"`` — the original per-op trace-order interpreter, kept as
-  the semantics reference (and the "before" side of
-  ``benchmarks/bench_dag_overhead.py``).
+All backends replay the same plan with ships and commits in plan order, so
+payload values and the transfer event stream are identical across backends;
+concurrent backends may only report *higher* ``peak_live_*`` (a whole
+level's inputs legitimately in flight at once).
 
-Payload location is tracked in a version→holder-ranks index, so ``value()``
-and holder queries are O(1) instead of O(ranks), and the live footprint
-(bytes deduplicated across replicas, payload count per replica — exactly the
-quantities the old full rescan computed) is maintained incrementally.
+``mode="interpret"`` bypasses planning entirely: the original per-op
+trace-order interpreter, kept as the semantics reference (and the "before"
+side of ``benchmarks/bench_dag_overhead.py``).  Accounting is byte-identical
+to planned replay whenever the trace order is already wavefront-level-sorted;
+a trace that interleaves levels may legitimately report different
+(higher-parallelism) peaks under plan mode, which executes level-major.
+
+With a topology cost model (:func:`repro.launch.mesh.make_topology`),
+``stats.estimated_makespan(topo)`` converts the transfer stream into
+simulated seconds — the unit in which tree-vs-naive collectives and
+backend-vs-backend ablations are compared.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from itertools import islice
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
-import numpy as np
-
+from .backends import get_backend
+from .backends.fused import BatchSlice
 from .collectives import broadcast_tree
 from .executable_cache import EXEC_CACHE, ExecutableCache
-from .placement import placement_rank, placement_ranks
+from .placement import placement_ranks
 from .plan import plan_for, wavefront_levels
+from .stats import ExecutionStats, TransferEvent, _nbytes
 from .trace import OpNode, Workflow
 
-
-def _nbytes(x: Any) -> int:
-    n = getattr(x, "nbytes", None)
-    if n is not None:
-        return int(n)
-    return 0
-
-
-@dataclasses.dataclass
-class TransferEvent:
-    """One point-to-point hop of an implicit transfer."""
-
-    version_key: tuple[int, int]
-    src: int
-    dst: int
-    nbytes: int
-    round_id: int          # rounds of one collective may fly concurrently
-    collective: str        # "p2p" | "broadcast" | "reduce"
-
-
-@dataclasses.dataclass
-class ExecutionStats:
-    """Observable behaviour of one workflow execution."""
-
-    ops_executed: int = 0
-    transfers: list[TransferEvent] = dataclasses.field(default_factory=list)
-    copies_elided: int = 0          # InOut writes that classical by-value would copy
-    peak_live_bytes: int = 0
-    peak_live_payloads: int = 0
-    # Wavefront decomposition: level -> number of ops runnable concurrently.
-    wavefronts: list[int] = dataclasses.field(default_factory=list)
-
-    @property
-    def bytes_transferred(self) -> int:
-        return sum(t.nbytes for t in self.transfers)
-
-    @property
-    def message_count(self) -> int:
-        return len(self.transfers)
-
-    def transfer_depth(self, version_key: tuple[int, int]) -> int:
-        """Number of *rounds* (latency hops) used to move one version."""
-        rounds = {t.round_id for t in self.transfers if t.version_key == version_key}
-        return len(rounds)
-
-    @property
-    def critical_path(self) -> int:
-        return len(self.wavefronts)
-
-    @property
-    def max_parallelism(self) -> int:
-        return max(self.wavefronts) if self.wavefronts else 0
+__all__ = ["ExecutionStats", "TransferEvent", "LocalExecutor"]
 
 
 class LocalExecutor:
@@ -116,18 +66,26 @@ class LocalExecutor:
         non-collective-aware runtime would do; kept for the ablation).
 
     ``mode``:
-      * ``"plan"``      — compiled-plan replay (default, fast path);
+      * ``"plan"``      — compiled-plan replay through an execution backend
+        (default);
       * ``"interpret"`` — per-op trace-order interpreter (reference).
+
+    ``backend`` selects the plan-replay dispatch strategy: a name from
+    :data:`repro.core.backends.BACKENDS` (``"serial"`` | ``"threads"`` |
+    ``"fused"``) or a ready :class:`~repro.core.backends.Backend` instance.
+    Ignored under ``mode="interpret"``.
     """
 
     def __init__(self, n_nodes: int = 1, collective_mode: str = "tree",
                  mode: str = "plan",
-                 executable_cache: Optional[ExecutableCache] = None):
+                 executable_cache: Optional[ExecutableCache] = None,
+                 backend: Union[str, Any, None] = None):
         assert collective_mode in ("tree", "naive")
         assert mode in ("plan", "interpret")
         self.n_nodes = n_nodes
         self.collective_mode = collective_mode
         self.mode = mode
+        self.backend = get_backend(backend if backend is not None else "serial")
         # payload stores: rank -> version_key -> payload
         self._stores: dict[int, dict[tuple[int, int], Any]] = {
             r: {} for r in range(n_nodes)
@@ -146,11 +104,21 @@ class LocalExecutor:
 
     # -- payload access ------------------------------------------------------
     def value(self, version) -> Any:
-        """Fetch a version's payload from whichever rank holds it (O(1))."""
+        """Fetch a version's payload from whichever rank holds it (O(1)).
+
+        Lazy fused-batch rows (:class:`~repro.core.backends.fused.BatchSlice`)
+        materialise here — the user-visible boundary — and the concrete row
+        is written back so repeated fetches slice once.
+        """
         ranks = self._where.get(version.key)
         if not ranks:
             raise KeyError(f"no payload for {version!r}")
-        return self._stores[next(iter(ranks))][version.key]
+        payload = self._stores[next(iter(ranks))][version.key]
+        if type(payload) is BatchSlice:
+            payload = payload.materialize()
+            for r in ranks:
+                self._stores[r][version.key] = payload
+        return payload
 
     def _holders(self, vkey) -> list[int]:
         return sorted(self._where.get(vkey, ()))
@@ -260,98 +228,16 @@ class LocalExecutor:
     def _run_planned(self, wf: Workflow, start: int) -> ExecutionStats:
         plan = plan_for(wf, start, len(wf.ops), self.n_nodes,
                         self.collective_mode, self._where, self._pinned(wf))
-        ops = wf.ops
-        stores = self._stores
-        where = self._where
-        key_bytes = self._key_bytes
-        stats = self.stats
-        events = stats.transfers
-        lookup = self._exec_cache.lookup
         base_round = self._round_counter
-        single = self.n_nodes == 1
-        store0 = stores[0]
-        live_b, live_c = self._live_bytes, self._live_entries
-        peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
-
-        for p in plan.schedule:
-            node = ops[p.op_id]
-            if p.ships:
-                for vkey, root, transfers in p.ships:
-                    payload = stores[root][vkey]
-                    nb = _nbytes(payload)
-                    ranks = where[vkey]
-                    for src, dst, kind, rel in transfers:
-                        stores[dst][vkey] = payload
-                        ranks.add(dst)
-                        live_c += 1
-                        events.append(
-                            TransferEvent(vkey, src, dst, nb, base_round + rel, kind))
-            if single:
-                args = [store0[k] if k is not None else a[1]
-                        for k, a in zip(p.arg_keys, node.args)]
-            else:
-                args = [stores[next(iter(where[k]))][k] if k is not None else a[1]
-                        for k, a in zip(p.arg_keys, node.args)]
-            types = tuple(map(type, args))
-            if types == p.cached_types:
-                call = p.cached_call
-            else:
-                call = lookup(p.fn, args)
-                if call is p.fn:   # Python path: valid for any shapes
-                    # call before types: plans are shared process-wide, and a
-                    # concurrent replayer must never see matching types with
-                    # the callable still unset.
-                    p.cached_call = call
-                    p.cached_types = types
-                else:              # jit path: shape-keyed, re-resolve per run
-                    p.cached_types = None
-            result = call(*args)
-            if p.simple_write and not isinstance(result, tuple):
-                # dominant case: one payload, one executing rank
-                wk = p.write_keys[0]
-                nb = _nbytes(result)
-                key_bytes[wk] = nb
-                live_b += nb
-                rank = p.exec_ranks[0]
-                where[wk] = {rank}
-                stores[rank][wk] = result
-                live_c += 1
-            else:
-                if not isinstance(result, tuple):
-                    result = (result,)
-                assert len(result) == p.n_writes, (
-                    f"{node.name} returned {len(result)} payloads for "
-                    f"{p.n_writes} written args"
-                )
-                for wk, payload in zip(p.write_keys, result):
-                    nb = _nbytes(payload)
-                    key_bytes[wk] = nb
-                    live_b += nb
-                    holders = set(p.exec_ranks)
-                    where[wk] = holders
-                    for rank in holders:
-                        stores[rank][wk] = payload
-                    live_c += len(holders)
-            if live_b > peak_b:
-                peak_b = live_b
-            if live_c > peak_c:
-                peak_c = live_c
-            if p.gc_keys:
-                for dk in p.gc_keys:
-                    ranks = where.pop(dk)
-                    for r in ranks:
-                        del stores[r][dk]
-                    live_c -= len(ranks)
-                    live_b -= key_bytes.pop(dk, 0)
-
-        self._live_bytes, self._live_entries = live_b, live_c
-        stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c
+        self.backend.execute(self, wf, plan)
+        stats = self.stats
         stats.ops_executed += len(plan.schedule)
         # zero-copy accounting: every InOut write in pass-by-value C++
         # semantics would deep-copy; versioning just re-points.
         stats.copies_elided += plan.total_writes
         self._round_counter = base_round + plan.n_rounds
-        stats.wavefronts = list(plan.wavefront_counts)
+        # wavefronts accumulate across incremental run() segments
+        stats.wavefronts.extend(plan.wavefront_counts)
         return stats
 
     # -- reference interpreter (trace order, per-op) --------------------------
@@ -409,5 +295,6 @@ class LocalExecutor:
                 if readers[v.key] <= 0 and v.key not in pinned:
                     self._drop(v.key)
 
-        self.stats.wavefronts = self.wavefronts(wf, start=start)
+        # wavefronts accumulate across incremental run() segments
+        self.stats.wavefronts.extend(self.wavefronts(wf, start=start))
         return self.stats

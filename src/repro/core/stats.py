@@ -1,0 +1,99 @@
+"""Execution accounting shared by the executor frontend and all backends.
+
+:class:`ExecutionStats` is the observable behaviour of one workflow
+execution — transfers (with round ids: transfers of one collective round fly
+concurrently), live-set peaks, wavefront decomposition.  It is backend- and
+mode-agnostic: every execution backend appends the same event stream.
+
+With a topology cost model (:class:`repro.launch.mesh.Topology` or anything
+exposing ``transfer_time(src, dst, nbytes)``) the stats convert message
+counts into *estimated simulated time*: :meth:`ExecutionStats.estimated_makespan`
+charges each transfer round the maximum of its concurrent hops, which makes
+``tree`` vs ``naive`` collectives and backend-vs-backend ablations comparable
+in seconds, not just message counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+def _nbytes(x: Any) -> int:
+    n = getattr(x, "nbytes", None)
+    if n is not None:
+        return int(n)
+    return 0
+
+
+@dataclasses.dataclass
+class TransferEvent:
+    """One point-to-point hop of an implicit transfer."""
+
+    version_key: tuple[int, int]
+    src: int
+    dst: int
+    nbytes: int
+    round_id: int          # rounds of one collective may fly concurrently
+    collective: str        # "p2p" | "broadcast" | "reduce"
+
+
+@dataclasses.dataclass
+class ExecutionStats:
+    """Observable behaviour of one workflow execution."""
+
+    ops_executed: int = 0
+    transfers: list[TransferEvent] = dataclasses.field(default_factory=list)
+    copies_elided: int = 0          # InOut writes that classical by-value would copy
+    peak_live_bytes: int = 0
+    peak_live_payloads: int = 0
+    # Wavefront decomposition: level -> number of ops runnable concurrently.
+    # Accumulated across incremental ``run()`` segments (one entry per level
+    # of every executed segment, in execution order).
+    wavefronts: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def bytes_transferred(self) -> int:
+        return sum(t.nbytes for t in self.transfers)
+
+    @property
+    def message_count(self) -> int:
+        return len(self.transfers)
+
+    def transfer_depth(self, version_key: tuple[int, int]) -> int:
+        """Number of *rounds* (latency hops) used to move one version."""
+        rounds = {t.round_id for t in self.transfers if t.version_key == version_key}
+        return len(rounds)
+
+    @property
+    def critical_path(self) -> int:
+        return len(self.wavefronts)
+
+    @property
+    def max_parallelism(self) -> int:
+        return max(self.wavefronts) if self.wavefronts else 0
+
+    def estimated_comm_time(self, topology) -> float:
+        """Simulated seconds spent communicating under ``topology``.
+
+        Transfers sharing a ``round_id`` fly concurrently (one round of a
+        broadcast/reduce tree), so a round costs the *max* of its hops;
+        rounds are serialised.  Naive collectives emit one round per message,
+        so the same formula prices the tree-vs-naive ablation fairly.
+        """
+        rounds: dict[int, float] = {}
+        for t in self.transfers:
+            dt = topology.transfer_time(t.src, t.dst, t.nbytes)
+            if dt > rounds.get(t.round_id, -1.0):
+                rounds[t.round_id] = dt
+        return sum(rounds.values())
+
+    def estimated_makespan(self, topology, op_time_s: float = 0.0) -> float:
+        """Estimated simulated makespan: comm rounds + wavefront compute.
+
+        ``op_time_s`` is the (uniform) cost charged per wavefront level —
+        levels execute their ops concurrently on an ideal machine, so the
+        compute term is ``critical_path * op_time_s``.  With the default 0
+        this is the pure communication makespan.
+        """
+        return self.estimated_comm_time(topology) + self.critical_path * op_time_s

@@ -79,6 +79,29 @@ def make_distributed_inputs(
     return a, b, c
 
 
+def run_distributed_gemm(
+    A: np.ndarray, B: np.ndarray, *, ib: int, NP: int, NQ: int,
+    collective_mode: str = "tree", backend: str = "serial",
+    topology=None,
+) -> tuple[np.ndarray, "bind.ExecutionStats", float]:
+    """Record + execute Listing 1 end-to-end on a chosen execution backend.
+
+    Convenience driver for ablations: returns ``(C, stats, est_makespan)``
+    where ``est_makespan`` is the simulated communication makespan under
+    ``topology`` (``0.0`` when no topology is given).  ``backend`` is a
+    :mod:`repro.core.backends` name — all backends produce identical values
+    and transfer streams, so this is the knob for timing comparisons only.
+    """
+    ex = bind.LocalExecutor(NP * NQ, collective_mode=collective_mode,
+                            backend=backend)
+    with bind.Workflow(n_nodes=NP * NQ, executor=ex) as wf:
+        a, b, c = make_distributed_inputs(wf, A, B, ib=ib, NP=NP, NQ=NQ)
+        distributed_gemm_listing1(wf, a, b, c, NP, NQ)
+        out = c.to_array()
+    est = ex.stats.estimated_makespan(topology) if topology is not None else 0.0
+    return out, ex.stats, est
+
+
 # ---------------------------------------------------------------------------
 # TPU lowering
 # ---------------------------------------------------------------------------

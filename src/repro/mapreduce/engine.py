@@ -30,8 +30,14 @@ def _extract_bucket(keys, vals, lo, hi):
     return vals[sel]
 
 
-def _reduce_bucket(reduce_fn, bucket_id, *pieces):
-    merged = np.concatenate(pieces) if pieces else np.empty(0)
+def _reduce_bucket(reduce_fn, bucket_id, dtype, *pieces):
+    # dtype-stable even for empty buckets: an int64 job must never leak a
+    # float64 empty (np.empty(0) defaults to float64 and would poison the
+    # dtype promotion in collect()).
+    if pieces:
+        merged = np.concatenate(pieces)
+    else:
+        merged = np.empty(0, dtype=np.dtype(dtype) if dtype is not None else None)
     return reduce_fn(bucket_id, merged)
 
 
@@ -76,16 +82,23 @@ class _Mapped:
         n_buckets: int,
         owner: Optional[Callable[[int], int]] = None,
         combine_fn: Optional[Callable] = None,
+        dtype=None,
     ) -> "Reduced":
         """Group by key into ``n_buckets``, ship each bucket to its owner node
         (the *implicit shuffle*), then apply ``reduce_fn(bucket_id, values)``.
 
         ``combine_fn`` (optional, the paper's ``combine``) pre-reduces each
         mapper-local bucket *on the mapper's node* before it travels —
-        shrinking shuffle bytes exactly like Hadoop's combiner.
+        shrinking shuffle bytes exactly like Hadoop's combiner.  ``dtype``
+        pins the value dtype of buckets that receive no data at all.
         """
         wf = self.wf
-        n_nodes = max(self.mapped) + 1 if self.mapped else 1
+        # world size comes from the executor (the authority on how many
+        # ranks exist), falling back to the workflow's declared size — not
+        # from max(mapped)+1, which miscounts sparse rank dicts (mappers on
+        # ranks {0, 5} must still spread reducers over the whole machine).
+        executor = wf._executor
+        n_nodes = executor.n_nodes if executor is not None else wf.n_nodes
         if owner is None:
             owner = lambda b: b * n_nodes // n_buckets  # contiguous ranges
 
@@ -109,7 +122,7 @@ class _Mapped:
         for b in range(n_buckets):
             with bind.node(owner(b)):
                 buckets[b] = wf.apply(
-                    _reduce_bucket, (reduce_fn, b, *pieces[b]),
+                    _reduce_bucket, (reduce_fn, b, dtype, *pieces[b]),
                     name=f"reduce[{b}]",
                 )
         return Reduced(wf, buckets)
@@ -124,5 +137,8 @@ class Reduced:
         """Gather buckets in key order to the host (implies sync)."""
         outs = [np.asarray(self.wf.fetch(self.buckets[b]))
                 for b in sorted(self.buckets)]
-        outs = [o for o in outs if o.size]
-        return np.concatenate(outs) if outs else np.empty(0)
+        filled = [o for o in outs if o.size]
+        if filled:
+            return np.concatenate(filled)
+        # keep the reducers' dtype even when every bucket came back empty
+        return np.empty(0, dtype=outs[0].dtype) if outs else np.empty(0)

@@ -17,11 +17,14 @@ def sort_integers(
     n_nodes: int,
     log_bins: int | None = None,
     executor: bind.LocalExecutor | None = None,
+    backend: str = "serial",
 ) -> tuple[np.ndarray, bind.ExecutionStats]:
     """Sort ``values`` (int32/int64 ≥ 0) across ``n_nodes`` simulated nodes.
 
-    Returns (sorted array, execution stats of the whole workflow — shuffle
-    bytes, rounds, wavefronts — for the Fig. 5/6 scaling benchmark).
+    ``backend`` selects the execution backend (``"serial"`` | ``"threads"``
+    | ``"fused"``) when no ``executor`` is supplied.  Returns (sorted array,
+    execution stats of the whole workflow — shuffle bytes, rounds,
+    wavefronts — for the Fig. 5/6 scaling benchmark).
     """
     if log_bins is None:
         log_bins = max(1, int(np.ceil(np.log2(max(n_nodes, 2)))))
@@ -35,13 +38,15 @@ def sort_integers(
         return np.sort(vals)
 
     parts = np.array_split(values, n_nodes)
-    executor = executor or bind.LocalExecutor(n_nodes, collective_mode="tree")
+    executor = executor or bind.LocalExecutor(
+        n_nodes, collective_mode="tree", backend=backend)
     with bind.Workflow(n_nodes=n_nodes, executor=executor) as wf:
         result = (
             KVPairs.from_arrays(wf, parts)
             .map(map_fn)
             .reduce(reduce_fn, n_buckets=n_bins,
-                    owner=lambda b: b * n_nodes // n_bins)
+                    owner=lambda b: b * n_nodes // n_bins,
+                    dtype=values.dtype)
         )
         out = result.collect()
     return out, executor.stats

@@ -1,0 +1,339 @@
+"""Pluggable execution backends: parity, fusion, topology cost model.
+
+The backend contract (see ``repro/core/backends/``): every backend replays
+the same compiled plan against the same frontend semantics, so payload
+values and transfer accounting must agree with the ``mode="interpret"``
+reference on the three canonical workflows — Listing-1 distributed GEMM,
+tiled Strassen, and MapReduce integer sort — including ``n_nodes > 1``.
+"""
+
+import numpy as np
+import pytest
+
+from repro import core as bind
+from repro.launch.mesh import make_topology
+from repro.linalg import Tiled, gemm_strassen
+from repro.linalg.distributed import (
+    distributed_gemm_listing1, make_distributed_inputs, run_distributed_gemm)
+from repro.mapreduce import KVPairs, sort_integers
+
+PLAN_BACKENDS = ["serial", "threads", "fused"]
+ALL_MODES = [("interpret", "serial")] + [("plan", b) for b in PLAN_BACKENDS]
+
+
+@bind.op
+def scale(a: bind.InOut, s: bind.In):
+    return a * s
+
+
+@bind.op
+def gemm(a: bind.In, b: bind.In, c: bind.InOut):
+    return c + a @ b
+
+
+def _executor(mode, backend, n_nodes, collective_mode="tree"):
+    return bind.LocalExecutor(n_nodes, collective_mode=collective_mode,
+                              mode=mode, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Reference workflows
+# ---------------------------------------------------------------------------
+
+def _run_gemm(mode, backend):
+    rng = np.random.default_rng(7)
+    A = rng.normal(size=(32, 32))
+    B = rng.normal(size=(32, 32))
+    NP = NQ = 2
+    ex = _executor(mode, backend, NP * NQ)
+    with bind.Workflow(n_nodes=NP * NQ, executor=ex) as wf:
+        a, b, c = make_distributed_inputs(wf, A, B, ib=8, NP=NP, NQ=NQ)
+        distributed_gemm_listing1(wf, a, b, c, NP, NQ)
+        out = c.to_array()
+    np.testing.assert_allclose(out, A @ B, rtol=1e-9)
+    return out, ex.stats
+
+
+def _run_strassen(mode, backend):
+    rng = np.random.default_rng(11)
+    M = rng.normal(size=(64, 64))
+    ex = _executor(mode, backend, 1)
+    with bind.Workflow(executor=ex) as wf:
+        ta = Tiled.from_array(wf, M, ib=16)
+        tb = Tiled.from_array(wf, M, ib=16)
+        tc = Tiled.zeros(wf, 4, 4, 16)
+        gemm_strassen(ta, tb, tc)
+        out = tc.to_array()
+    np.testing.assert_allclose(out, M @ M, rtol=1e-9)
+    return out, ex.stats
+
+
+def _run_sort(mode, backend):
+    rng = np.random.default_rng(13)
+    vals = rng.integers(0, 2**31 - 1, size=6_000, dtype=np.int64)
+    ex = _executor(mode, backend, 4)
+    out, stats = sort_integers(vals, n_nodes=4, log_bins=3, executor=ex)
+    np.testing.assert_array_equal(out, np.sort(vals))
+    return out, stats
+
+
+_WORKFLOWS = {"gemm": _run_gemm, "strassen": _run_strassen, "sort": _run_sort}
+
+
+# ---------------------------------------------------------------------------
+# Parity: values + transfer byte totals across every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", sorted(_WORKFLOWS))
+def test_backend_parity_values_and_transfer_bytes(workload):
+    """interpret / serial / threads / fused agree on payload values and on
+    transfer totals (bytes + messages) — the model's observable behaviour."""
+    runs = {(m, b): _WORKFLOWS[workload](m, b) for m, b in ALL_MODES}
+    ref_out, ref_stats = runs[("interpret", "serial")]
+    for key, (out, stats) in runs.items():
+        np.testing.assert_array_equal(out, ref_out, err_msg=str(key))
+        assert stats.bytes_transferred == ref_stats.bytes_transferred, key
+        assert stats.message_count == ref_stats.message_count, key
+        assert stats.ops_executed == ref_stats.ops_executed, key
+        assert stats.copies_elided == ref_stats.copies_elided, key
+
+
+@pytest.mark.parametrize("workload", sorted(_WORKFLOWS))
+def test_plan_backends_share_exact_transfer_stream(workload):
+    """Among plan backends the full event stream (src, dst, bytes, round,
+    kind, order) is byte-identical — concurrency must not leak into
+    accounting."""
+    ref = _WORKFLOWS[workload]("plan", "serial")[1]
+    for backend in ("threads", "fused"):
+        stats = _WORKFLOWS[workload]("plan", backend)[1]
+        assert stats.transfers == ref.transfers, backend
+        assert stats.wavefronts == ref.wavefronts, backend
+
+
+def test_backend_instances_and_unknown_name():
+    assert isinstance(bind.get_backend("threads"), bind.ThreadPoolBackend)
+    inst = bind.FusedBatchBackend()
+    assert bind.get_backend(inst) is inst
+    ex = bind.LocalExecutor(1, backend=bind.SerialPlanBackend())
+    assert ex.backend.name == "serial"
+    with pytest.raises(ValueError, match="unknown execution backend"):
+        bind.LocalExecutor(1, backend="gpu-cluster")
+
+
+# ---------------------------------------------------------------------------
+# Fused batching (jax payloads)
+# ---------------------------------------------------------------------------
+
+def test_fused_batches_same_signature_jax_ops():
+    jnp = pytest.importorskip("jax.numpy")
+    bind.clear_plan_cache()
+    cache = bind.ExecutableCache()
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb, executable_cache=cache)
+    n = 8
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.full((4, 4), float(i + 1), jnp.float32), f"x{i}")
+              for i in range(n)]
+        for x in xs:
+            scale(x, 3.0)
+        outs = [np.asarray(wf.fetch(x)) for x in xs]
+    for i, out in enumerate(outs):
+        np.testing.assert_allclose(out, np.full((4, 4), 3.0 * (i + 1)))
+    # one wavefront of n same-signature ops -> one vmapped dispatch
+    assert fb.batches_dispatched == 1
+    assert fb.ops_fused == n
+
+
+def test_fused_never_promotes_numpy_to_jax():
+    """NumPy float64 payloads must come back as NumPy float64 — fusion only
+    fires for jax.Array payloads (jax would silently downcast to float32)."""
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(np.ones((4, 4)), f"x{i}") for i in range(6)]
+        for x in xs:
+            scale(x, 2.0)
+        outs = [wf.fetch(x) for x in xs]
+    assert fb.batches_dispatched == 0
+    for out in outs:
+        assert isinstance(out, np.ndarray) and out.dtype == np.float64
+        np.testing.assert_array_equal(out, np.full((4, 4), 2.0))
+
+
+def test_fused_buckets_split_on_constant_type():
+    """2 and 2.0 hash/compare equal but must not share a bucket — member
+    0's constant would impose its dtype on the whole batch."""
+    jnp = pytest.importorskip("jax.numpy")
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    consts = [2, 2, 2.0, 2.0]
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.full((3, 3), i + 1, jnp.int32), f"x{i}")
+              for i in range(4)]
+        for x, c in zip(xs, consts):
+            scale(x, c)
+        outs = [wf.fetch(x) for x in xs]
+    ref = bind.LocalExecutor(1, backend="serial")
+    with bind.Workflow(executor=ref) as wf:
+        xs = [wf.array(jnp.full((3, 3), i + 1, jnp.int32), f"x{i}")
+              for i in range(4)]
+        for x, c in zip(xs, consts):
+            scale(x, c)
+        expect = [wf.fetch(x) for x in xs]
+    for got, want in zip(outs, expect):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_incremental_sync_materializes_lazy_rows():
+    """A fused segment leaves lazy BatchSlice rows in the stores; a later
+    segment with no fusion groups must still consume them correctly (the
+    wholesale serial delegation would feed raw BatchSlice to op bodies)."""
+    jnp = pytest.importorskip("jax.numpy")
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.full((3, 3), float(i + 1), jnp.float32), f"x{i}")
+              for i in range(4)]
+        for x in xs:
+            scale(x, 2.0)
+        wf.sync()                       # fuses: stores now hold lazy rows
+        assert fb.batches_dispatched == 1
+        scale(xs[0], 3.0)               # chain segment: no fusion groups
+        wf.sync()
+        outs = [np.asarray(wf.fetch(x)) for x in xs]
+    np.testing.assert_allclose(outs[0], np.full((3, 3), 6.0))
+    for i in range(1, 4):
+        np.testing.assert_allclose(outs[i], np.full((3, 3), 2.0 * (i + 1)))
+
+
+def test_fused_falls_back_on_untraceable_fn():
+    jnp = pytest.importorskip("jax.numpy")
+
+    def branchy(a, s):
+        if float(a.sum()) > 0:      # data-dependent host branch: not traceable
+            return a * s
+        return a
+
+    branchy.__bind_intents__ = (bind.InOut, bind.In)
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.ones((3, 3), jnp.float32), f"x{i}") for i in range(4)]
+        for x in xs:
+            wf.call(branchy, (x, 2.0), name="branchy")
+        outs = [np.asarray(wf.fetch(x)) for x in xs]
+    assert fb.batches_dispatched == 0 and branchy in fb._no_fuse
+    for out in outs:
+        np.testing.assert_allclose(out, np.full((3, 3), 2.0))
+
+
+def test_plan_exposes_levels_and_signature_groups():
+    with bind.Workflow() as wf:
+        xs = [wf.array(np.ones((4, 4)), f"x{i}") for i in range(5)]
+        for x in xs:
+            scale(x, 1.5)
+        scale(xs[0], 2.0)           # level 2: singleton, no group
+        wf._synced_upto = len(wf.ops)  # record only
+    plan = bind.build_plan(wf, 0, len(wf.ops), 1, "tree",
+                           {v: {r} for v, (_, r) in wf.initial.items()}, set())
+    assert [hi - lo for lo, hi in plan.levels] == [5, 1]
+    assert plan.has_fusion_groups
+    assert [len(g) for g in plan.level_groups[0]] == [5]
+    assert plan.level_groups[1] == ()
+
+
+# ---------------------------------------------------------------------------
+# Satellite regression: wavefronts accumulate across incremental run()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,backend", ALL_MODES)
+def test_wavefronts_accumulate_across_incremental_syncs(mode, backend):
+    ex = _executor(mode, backend, 1)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((4, 4)), "a")
+        for _ in range(3):
+            scale(a, 1.1)
+        wf.sync()
+        assert ex.stats.wavefronts == [1, 1, 1]
+        for _ in range(2):
+            scale(a, 1.1)
+        wf.sync()
+        # earlier segments' levels must survive the second run()
+        assert ex.stats.wavefronts == [1, 1, 1, 1, 1]
+    assert ex.stats.critical_path == 5
+
+
+# ---------------------------------------------------------------------------
+# Topology cost model
+# ---------------------------------------------------------------------------
+
+def test_topology_hop_counts():
+    ring = make_topology("ring", 8)
+    assert ring.hops(0, 1) == 1 and ring.hops(0, 7) == 1 and ring.hops(0, 4) == 4
+    assert ring.diameter == 4
+    flat = make_topology("flat", 8)
+    assert flat.hops(2, 5) == 1 and flat.hops(3, 3) == 0 and flat.diameter == 1
+    ft = make_topology("fat-tree", 16, arity=4)
+    assert ft.hops(0, 3) == 2        # same leaf switch
+    assert ft.hops(0, 5) == 4        # one level up
+    assert ft.hops(0, 0) == 0
+    assert ft.diameter == 4
+
+
+def test_topology_transfer_time_alpha_beta():
+    t = make_topology("ring", 8, latency_s=1e-6, bandwidth_Bps=1e9)
+    assert t.transfer_time(0, 0, 10**9) == 0.0
+    np.testing.assert_allclose(t.transfer_time(0, 4, 10**9), 4e-6 + 1.0)
+
+
+def test_tree_beats_naive_in_simulated_time():
+    """Same payloads, same byte totals — but the broadcast tree's log-depth
+    rounds finish sooner than naive serialised sends on any topology."""
+    topo = make_topology("flat", 9, latency_s=1e-5)
+    times = {}
+    for cm in ("tree", "naive"):
+        ex = bind.LocalExecutor(9, collective_mode=cm)
+        with bind.Workflow(n_nodes=9, executor=ex) as wf:
+            x = wf.array(np.ones(1 << 14), "x")
+            outs = [wf.array(np.zeros(1 << 14)) for _ in range(8)]
+            with bind.node(0):
+                scale(x, 2.0)
+            for r in range(8):
+                with bind.node(r + 1):
+                    wf.call(_consume, (x, outs[r]), name="consume")
+        times[cm] = (ex.stats.bytes_transferred,
+                     ex.stats.estimated_makespan(topo))
+    assert times["tree"][0] == times["naive"][0]
+    assert times["tree"][1] < times["naive"][1]
+
+
+def _consume(x, out):
+    return out + x
+
+
+_consume.__bind_intents__ = (bind.In, bind.InOut)
+
+
+def test_tree_schedule_estimated_time():
+    topo = make_topology("flat", 8, latency_s=1e-6, bandwidth_Bps=1e9)
+    sched = bind.broadcast_tree(0, list(range(8)))
+    per_round = 1e-6 + 1024 / 1e9
+    np.testing.assert_allclose(sched.estimated_time(topo, 1024),
+                               sched.depth * per_round)
+    assert sched.depth == 3          # log2(8) rounds
+
+
+def test_run_distributed_gemm_driver_reports_makespan():
+    rng = np.random.default_rng(3)
+    A = rng.normal(size=(16, 16))
+    B = rng.normal(size=(16, 16))
+    topo = make_topology("ring", 4)
+    outs = {}
+    for backend in PLAN_BACKENDS:
+        out, stats, est = run_distributed_gemm(
+            A, B, ib=8, NP=2, NQ=2, backend=backend, topology=topo)
+        np.testing.assert_allclose(out, A @ B, rtol=1e-9)
+        assert est > 0.0
+        outs[backend] = (stats.bytes_transferred, est)
+    assert len(set(outs.values())) == 1   # accounting identical across backends

@@ -50,6 +50,47 @@ def test_shuffle_is_implicit_and_distributed(rng):
     assert stats.bytes_transferred >= vals.nbytes // 2
 
 
+def test_reduce_world_size_comes_from_executor(rng):
+    """With the world size only declared on the executor (Workflow left at
+    its n_nodes=1 default), reducers must still spread over all ranks."""
+    vals = rng.integers(0, 2**31 - 1, size=4_000, dtype=np.int64)
+
+    def map_fn(v):
+        return (v >> 29).astype(np.int64), v      # 4 buckets
+
+    ex = bind.LocalExecutor(4)
+    with bind.Workflow(executor=ex) as wf:
+        parts = np.array_split(vals, 4)
+        res = KVPairs.from_arrays(wf, parts).map(map_fn).reduce(
+            lambda _b, v: np.sort(v), n_buckets=4, dtype=vals.dtype)
+        reducer_ranks = {op.placement for op in wf.ops
+                         if op.name.startswith("reduce[")}
+        out = res.collect()
+    np.testing.assert_array_equal(out, np.sort(vals))
+    assert reducer_ranks == {0, 1, 2, 3}
+
+
+def test_empty_buckets_keep_dtype(rng):
+    """Buckets that receive no rows must come back with the job's dtype,
+    not float64 (np.empty(0) default) — and collect() must preserve it."""
+    vals = np.arange(32, dtype=np.int64)          # all keys land in bucket 0
+
+    def map_fn(v):
+        return np.zeros_like(v), v
+
+    ex = bind.LocalExecutor(2)
+    with bind.Workflow(executor=ex) as wf:
+        parts = np.array_split(vals, 2)
+        res = KVPairs.from_arrays(wf, parts).map(map_fn).reduce(
+            lambda _b, v: np.sort(v), n_buckets=4, dtype=vals.dtype)
+        fetched = {b: np.asarray(wf.fetch(arr)) for b, arr in res.buckets.items()}
+        out = res.collect()
+    for b, arr in fetched.items():
+        assert arr.dtype == np.int64, (b, arr.dtype)
+    assert out.dtype == np.int64
+    np.testing.assert_array_equal(out, vals)
+
+
 def test_combiner_reduces_shuffle_bytes(rng):
     """The paper's ``combine`` stage pre-shrinks mapper-local buckets; with a
     dedup combiner on highly duplicated data, shuffle bytes must drop."""
