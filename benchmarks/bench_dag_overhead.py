@@ -25,7 +25,15 @@
    overlaps op bodies and the fused backend collapses each level into one
    vmapped XLA dispatch — µs/op per backend plus the fused batch counters;
 
-3. multi-versioning memory overhead: peak live payloads vs the
+3. chain fusion (``bench="chain_fused"``): a *deep* single-signature jax
+   chain (64 aligned levels) where per-level fused dispatch pays one
+   vmapped call per level and chain fusion collapses the whole run into a
+   single ``jit(lax.scan)`` dispatch — warm µs/op for serial, per-level
+   fused (``min_chain_levels=0``) and chain fused, plus the chain counters.
+   The acceptance bar for the chain executor is ``chain_vs_level_speedup ≥
+   1.3`` on this shape;
+
+4. multi-versioning memory overhead: peak live payloads vs the
    single-version working set, with and without version GC (checked in
    both executor modes).
 """
@@ -167,9 +175,15 @@ def run(quick: bool = False) -> list[dict]:
         })
 
     # 2. backend wavefront scaling: wide levels of same-signature jax ops.
+    # The fused backend runs with chain fusion disabled here so the row
+    # keeps measuring *per-level* batched dispatch (the chain executor gets
+    # its own bench below — this workload is a single signature chain and
+    # would otherwise collapse into one scan call).
     width, depth, tile = (8, 10, 16) if quick else (32, 20, 16)
     reps = 2 if quick else 3
-    backends = {n: bind.get_backend(n) for n in ("serial", "threads", "fused")}
+    backends = {"serial": bind.get_backend("serial"),
+                "threads": bind.get_backend("threads"),
+                "fused": bind.FusedBatchBackend(min_chain_levels=0)}
     for backend in backends.values():              # warm caches per backend
         _wide_exec_time(backend, 4, 2, tile)
         _wide_exec_time(backend, width, depth, tile)
@@ -196,7 +210,48 @@ def run(quick: bool = False) -> list[dict]:
             row["batches_dispatched"], row["ops_fused"] = fused_counts
         rows.append(row)
 
-    # 3. versioning memory: GC keeps the working set O(1), not O(#versions) —
+    # 3. chain fusion: a deep single-signature jax chain (the chain
+    #    executor's target shape).  Per-level fused dispatch pays one
+    #    vmapped call per level; chain fusion pays ONE jit(lax.scan) call
+    #    for the whole run.  Warm numbers (executables and plans cached).
+    width_c, depth_c, tile_c = 8, 64, 16
+    chain_variants = {
+        "serial": bind.get_backend("serial"),
+        "fused_levels": bind.FusedBatchBackend(min_chain_levels=0),
+        "fused_chain": bind.FusedBatchBackend(),
+    }
+    reps_c = 2 if quick else 4
+    for backend in chain_variants.values():        # warm compiles + caches
+        _wide_exec_time(backend, width_c, depth_c, tile_c)
+    t_chain = {n: float("inf") for n in chain_variants}
+    chain_counts = (0, 0)
+    for _ in range(reps_c):                        # interleaved rounds again
+        for n, backend in chain_variants.items():
+            if n == "fused_chain":
+                c0, o0 = backend.chains_dispatched, backend.ops_chained
+            t_chain[n] = min(t_chain[n],
+                             _wide_exec_time(backend, width_c, depth_c, tile_c))
+            if n == "fused_chain":
+                chain_counts = (backend.chains_dispatched - c0,
+                                backend.ops_chained - o0)
+    n_ops_c = width_c * depth_c
+    level_us = t_chain["fused_levels"] / n_ops_c * 1e6
+    chain_us = t_chain["fused_chain"] / n_ops_c * 1e6
+    for name in chain_variants:
+        row = {
+            "bench": "chain_fused", "variant": name,
+            "width": width_c, "depth": depth_c, "tile": tile_c,
+            "ops": n_ops_c,
+            "exec_us_per_op": round(t_chain[name] / n_ops_c * 1e6, 2),
+        }
+        if name == "fused_chain":
+            row["chains_dispatched"], row["ops_chained"] = chain_counts
+            # acceptance bar for the chain executor: >= 1.3x over per-level
+            row["chain_vs_level_speedup"] = round(
+                level_us / max(chain_us, 1e-9), 2)
+        rows.append(row)
+
+    # 4. versioning memory: GC keeps the working set O(1), not O(#versions) —
     #    in both executor modes.
     n_versions = 64
     for mode in ("plan", "interpret"):

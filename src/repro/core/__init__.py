@@ -29,12 +29,14 @@ from .collectives import (
 )
 from .scheduler import ExecutionStats, LocalExecutor, TransferEvent
 from .plan import (
+    ChainSlice,
     ExecutionPlan,
     PLAN_CACHE_STATS,
     build_plan,
     clear_plan_cache,
     plan_for,
     segment_signature,
+    wavefront_flops,
 )
 from .executable_cache import EXEC_CACHE, ExecutableCache
 from .backends import (
@@ -53,8 +55,9 @@ __all__ = [
     "Ref", "Version", "VersionStore", "InferredCollective", "TreeSchedule",
     "allreduce_tree", "broadcast_tree", "infer_broadcasts", "infer_reductions",
     "reduce_tree", "ExecutionStats", "LocalExecutor", "TransferEvent", "lowering",
-    "ExecutionPlan", "PLAN_CACHE_STATS", "build_plan", "clear_plan_cache",
-    "plan_for", "segment_signature", "EXEC_CACHE", "ExecutableCache",
+    "ChainSlice", "ExecutionPlan", "PLAN_CACHE_STATS", "build_plan",
+    "clear_plan_cache", "plan_for", "segment_signature", "wavefront_flops",
+    "EXEC_CACHE", "ExecutableCache",
     "BACKENDS", "Backend", "SerialPlanBackend", "ThreadPoolBackend",
     "FusedBatchBackend", "get_backend",
 ]

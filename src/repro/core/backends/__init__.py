@@ -15,7 +15,10 @@ transfers, live-footprint accounting, stats.  A **backend** owns only the
 * ``"fused"``   — :class:`FusedBatchBackend`: same-signature ops of one
   level are stacked and dispatched as a single ``jax.vmap``-ed jitted call
   through the :class:`~repro.core.executable_cache.ExecutableCache`,
-  collapsing N small XLA dispatches into one.
+  collapsing N small XLA dispatches into one; whole *signature chains*
+  (consecutive levels of one aligned signature, detected at plan time as
+  :class:`~repro.core.plan.ChainSlice`) collapse further into a single
+  ``jit(lax.scan)`` dispatch per chain.
 
 All backends replay the same plan against the same frontend state, so
 payload values and the transfer event stream are identical across backends;
@@ -25,7 +28,7 @@ in-flight payloads peak) differs.
 
 from __future__ import annotations
 
-from .base import Backend
+from .base import Backend, BatchBucket, BatchSlice, spill_dead_buckets
 from .serial import SerialPlanBackend
 from .threadpool import ThreadPoolBackend
 from .fused import FusedBatchBackend
@@ -50,5 +53,6 @@ def get_backend(spec) -> Backend:
     return cls()
 
 
-__all__ = ["Backend", "SerialPlanBackend", "ThreadPoolBackend",
-           "FusedBatchBackend", "BACKENDS", "get_backend"]
+__all__ = ["Backend", "BatchBucket", "BatchSlice", "SerialPlanBackend",
+           "ThreadPoolBackend", "FusedBatchBackend", "BACKENDS",
+           "get_backend", "spill_dead_buckets"]

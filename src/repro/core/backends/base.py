@@ -38,6 +38,120 @@ class Backend:
         return f"<{type(self).__name__} name={self.name!r}>"
 
 
+class BatchBucket:
+    """Residency bookkeeping for one fused dispatch's stacked result buffer.
+
+    ``live`` holds the row indices whose store payload is still a lazy
+    :class:`BatchSlice` of this buffer; ``rows`` maps each committed row to
+    its version key.  Every path that removes a lazy row from the stores —
+    GC, ship/fetch materialisation, spill — must :meth:`BatchSlice.release`
+    it, so :func:`spill_dead_buckets` can tell a fully-consumed bucket (the
+    chain-of-wavefronts case: drop the registry entry, nothing to do) from a
+    partially-GC'd one whose survivors are pinning the whole buffer.
+    """
+
+    __slots__ = ("buffer", "n", "live", "rows")
+
+    def __init__(self, buffer, n: int):
+        self.buffer = buffer
+        self.n = n
+        self.live = set(range(n))
+        self.rows: dict = {}            # row index -> version key
+
+
+class BatchSlice:
+    """Lazy view of row ``index`` of a fused bucket's stacked result buffer.
+
+    Stored in the executor's stores like any payload; ``nbytes`` reports the
+    member's (row's) size so transfer and live-set accounting stay identical
+    to per-op execution.  ``materialize()`` pays the one slice dispatch when
+    a boundary actually needs the row; ``release()`` tells the owning
+    :class:`BatchBucket` the row no longer pins the stacked buffer (the
+    caller has dropped or concretised its store entries).
+    """
+
+    __slots__ = ("buffer", "index", "_nb", "aval", "bucket")
+
+    def __init__(self, buffer, index: int, nb: int, aval, bucket=None):
+        self.buffer = buffer
+        self.index = index
+        self._nb = nb
+        self.aval = aval        # element aval: the row's ShapedArray
+        self.bucket = bucket
+
+    @property
+    def nbytes(self) -> int:
+        return self._nb
+
+    @property
+    def shape(self):
+        return self.aval.shape
+
+    @property
+    def dtype(self):
+        return self.aval.dtype
+
+    def materialize(self):
+        return self.buffer[self.index]
+
+    def release(self) -> None:
+        if self.bucket is not None:
+            self.bucket.live.discard(self.index)
+
+    def __repr__(self) -> str:
+        return f"BatchSlice({self.aval.str_short()}, row {self.index})"
+
+
+def materialize(payload):
+    """Resolve a possibly-lazy payload to a concrete array."""
+    if type(payload) is BatchSlice:
+        return payload.materialize()
+    return payload
+
+
+def spill_dead_buckets(ex) -> int:
+    """Eagerly materialise surviving rows of partially-dead buckets.
+
+    Once any of a bucket's rows have been GC'd (or fetched/shipped), a
+    surviving lazy row would pin the *whole* stacked buffer — process
+    residency exceeding ``stats.peak_live_bytes`` (which prices rows
+    individually) by up to the batch width.  This pass concretises every
+    surviving row of such a bucket and drops the buffer, making actual
+    residency match the accounting; fully-live buckets are left lazy (the
+    chain pass-through case) and fully-dead ones just leave the registry.
+    Called by the fused backend at each level boundary and by the executor
+    frontend at segment end.  Returns the number of rows spilled.
+    """
+    buckets = ex._lazy_buckets
+    if not buckets:
+        return 0
+    stores, where = ex._stores, ex._where
+    spilled = 0
+    for bucket in list(buckets):
+        live = bucket.live
+        if len(live) == bucket.n:       # untouched: stays one lazy buffer
+            continue
+        if live:
+            buffer = bucket.buffer
+            for idx in sorted(live):
+                vkey = bucket.rows.get(idx)
+                ranks = where.get(vkey) if vkey is not None else None
+                if not ranks:
+                    continue
+                concrete = None
+                for r in ranks:
+                    payload = stores[r].get(vkey)
+                    if type(payload) is BatchSlice and payload.bucket is bucket:
+                        if concrete is None:
+                            concrete = buffer[idx]
+                        stores[r][vkey] = concrete
+                if concrete is not None:
+                    spilled += 1
+            live.clear()
+        buckets.discard(bucket)
+    return spilled
+
+
 def apply_ships(ex, p) -> None:
     """Replay ``p``'s precomputed ship schedule (plan order, main thread)."""
     stores, where = ex._stores, ex._where
@@ -125,6 +239,8 @@ def commit(ex, p, node, result, nbytes=None) -> None:
         for dk in p.gc_keys:
             ranks = where.pop(dk)
             for r in ranks:
-                del stores[r][dk]
+                payload = stores[r].pop(dk)
+                if type(payload) is BatchSlice:
+                    payload.release()
             ex._live_entries -= len(ranks)
             ex._live_bytes -= key_bytes.pop(dk, 0)

@@ -1,4 +1,5 @@
-"""Fused-batch dispatch: same-signature level-mates become one vmapped call.
+"""Fused-batch dispatch: same-signature level-mates become one vmapped call,
+and whole signature *chains* become one ``jit(lax.scan)`` call.
 
 Tiled linalg and MapReduce wavefronts are dominated by N ops sharing one
 ``(fn, shapes, dtypes)`` signature — N leaf GEMMs, N per-tile adds, N bucket
@@ -17,24 +18,42 @@ argument and returned as ONE result — a level of N ops costs one dispatch
 and two buffers instead of ~3N.  Slices materialise only at the boundaries:
 a non-fused consumer, a transfer, or a user ``fetch()``.
 
+**Chain fusion** goes one step further: when the plan detects a
+:class:`~repro.core.plan.ChainSlice` — consecutive levels of one signature
+whose dataflow is elementwise-aligned and whose interior versions live and
+die inside the run — the whole chain dispatches as a single
+``jit(lax.scan)`` executable (``vmap`` inside for width > 1): one dispatch
+per chain *segment* instead of per level, and interior levels never
+materialise at all.  The interior ops' commit/GC accounting is still
+replayed (virtually), so live-set stats stay byte-identical to serial.
+
 Eligibility is decided in two halves:
 
-* **static** (plan time, :attr:`ExecutionPlan.level_groups`): level-mates
-  sharing ``(fn, constant-position mask)`` with a single written version;
-* **dynamic** (replay time, here): bucket members must agree on payload
+* **static** (plan time, :attr:`ExecutionPlan.level_groups` /
+  :attr:`ExecutionPlan.chains`): level-mates sharing ``(fn,
+  constant-position mask)`` with a single written version; chains
+  additionally need one payload argument, aligned dataflow, and chain-local
+  interior lifetimes;
+* **dynamic** (replay time, here): members must agree on payload
   shape/dtype and constant values, and every payload must already be a
   ``jax.Array`` (or a :class:`BatchSlice` of one) — NumPy payloads are
   never silently promoted to JAX (that would flip float64 → float32 under
   default jax config), they take the per-op path instead.
 
-Ops that fail either half — and every op of a ``fn`` whose vmap trace ever
-raised — fall back to per-op dispatch, so the backend degrades to serial
-semantics, never to an error.  Plans with no fusion groups at all delegate
-to :class:`~.serial.SerialPlanBackend` wholesale (zero overhead on chains).
+Ops that fail either half — and every op of a ``fn`` whose vmap/scan trace
+ever raised — fall back to per-op (or per-level) dispatch, so the backend
+degrades to serial semantics, never to an error.  Plans with no fusion
+opportunity at all delegate to :class:`~.serial.SerialPlanBackend` wholesale
+(zero overhead on non-jax chains).
 
 Ships and commits stay in plan order (see :mod:`.base`), so the transfer
 stream is byte-identical to serial; like the thread backend, ``peak_live_*``
 may report the higher true-concurrency peak of a whole level in flight.
+**Batched residency matches the accounting**: once any of a bucket's rows
+are GC'd, the survivors are eagerly materialised at the next level boundary
+(:func:`~.base.spill_dead_buckets`) and the stacked buffer released, so
+actual process residency never exceeds ``stats.peak_live_bytes`` by more
+than one in-flight bucket.
 """
 
 from __future__ import annotations
@@ -42,64 +61,17 @@ from __future__ import annotations
 import jax
 
 from ..stats import _nbytes
-from .base import Backend, apply_ships, commit, gather_args, resolve_call
+from .base import (Backend, BatchBucket, BatchSlice, apply_ships, commit,
+                   gather_args, materialize, resolve_call, spill_dead_buckets)
 from .serial import SerialPlanBackend
 
 _PENDING = object()     # "not produced by a fused bucket" sentinel
 
-# per-position layouts of a batched executable's flat argument list
+# per-position layouts of a batched/chained executable's flat argument list
 FLAT = "flat"           # n_batch consecutive member payloads, stacked inside
 STACKED = "stacked"     # one pre-stacked buffer (batched residency pass-through)
 CONST = "const"         # one shared constant, broadcast by vmap
-
-
-class BatchSlice:
-    """Lazy view of row ``index`` of a fused bucket's stacked result buffer.
-
-    Stored in the executor's stores like any payload; ``nbytes`` reports the
-    member's (row's) size so transfer and live-set accounting stay identical
-    to per-op execution.  ``materialize()`` pays the one slice dispatch when
-    a boundary actually needs the row.
-
-    Caveat: a surviving row keeps the whole stacked buffer alive until it
-    materialises or dies, so actual process residency can exceed the
-    simulator's ``peak_live_bytes`` (which prices rows individually) by up
-    to the batch width for long-lived fused outputs.  Accounting-faithful
-    eager row materialisation on bucket-mate GC is a ROADMAP follow-up.
-    """
-
-    __slots__ = ("buffer", "index", "_nb", "aval")
-
-    def __init__(self, buffer, index: int, nb: int, aval):
-        self.buffer = buffer
-        self.index = index
-        self._nb = nb
-        self.aval = aval        # element aval: the row's ShapedArray
-
-    @property
-    def nbytes(self) -> int:
-        return self._nb
-
-    @property
-    def shape(self):
-        return self.aval.shape
-
-    @property
-    def dtype(self):
-        return self.aval.dtype
-
-    def materialize(self):
-        return self.buffer[self.index]
-
-    def __repr__(self) -> str:
-        return f"BatchSlice({self.aval.str_short()}, row {self.index})"
-
-
-def materialize(payload):
-    """Resolve a possibly-lazy payload to a concrete array."""
-    if type(payload) is BatchSlice:
-        return payload.materialize()
-    return payload
+SINGLE = "single"       # one array: a width-1 chain's carry
 
 
 def _bucket_key(p, args):
@@ -150,105 +122,167 @@ def _common_buffer(column):
 
 
 class FusedBatchBackend(Backend):
-    """Bucket same-signature ops per wavefront; one vmapped dispatch each."""
+    """Bucket same-signature ops per wavefront (one vmapped dispatch each)
+    and dispatch whole signature chains as one ``jit(lax.scan)`` call."""
 
     name = "fused"
 
-    def __init__(self, min_batch: int = 2):
+    def __init__(self, min_batch: int = 2, min_chain_levels: int = 2):
         self.min_batch = max(2, int(min_batch))
+        # minimum chain depth worth a scan dispatch; 0/None disables chain
+        # fusion entirely (per-level dispatch only)
+        self.min_chain_levels = (0 if not min_chain_levels
+                                 else max(2, int(min_chain_levels)))
         self._serial = SerialPlanBackend()
         self._no_fuse: set = set()      # fns whose vmap trace failed
-        self._lazy_rows = False         # any BatchSlice ever committed
+        self._no_chain: set = set()     # fns whose scan trace failed
         self.batches_dispatched = 0
         self.ops_fused = 0
+        self.chains_dispatched = 0
+        self.ops_chained = 0
+
+    def _chain_input(self, ex, plan, chain):
+        """The first chain member's current payload, or None if not yet
+        materialised (the chain starts mid-segment)."""
+        p = plan.schedule[chain.members[0][0]]
+        k = p.arg_keys[chain.arg_pos]
+        if ex.n_nodes == 1:
+            return ex._stores[0].get(k)
+        ranks = ex._where.get(k)
+        return ex._stores[next(iter(ranks))][k] if ranks else None
+
+    def _chain_maybe_viable(self, ex, plan, chain) -> bool:
+        """Cheap replay-time probe: could this chain possibly dispatch?
+
+        A chain whose input payload is already resident and *not* a jax
+        array can never pass the dynamic eligibility check (NumPy is never
+        promoted), so plans holding only such chains keep the wholesale
+        serial delegation — "zero overhead on non-jax chains".  An input
+        that does not exist yet (produced mid-segment) counts as viable.
+        """
+        if (chain.n_levels < self.min_chain_levels
+                or chain.fn in self._no_chain):
+            return False
+        a = self._chain_input(ex, plan, chain)
+        return a is None or type(a) is BatchSlice or isinstance(a, jax.Array)
 
     def execute(self, ex, wf, plan) -> None:
-        if not plan.has_fusion_groups and not self._lazy_rows:
+        min_chain = self.min_chain_levels
+        if not plan.has_fusion_groups and not ex._lazy_buckets:
             # wholesale delegation is only safe while the stores cannot hold
             # lazy rows — the serial loop feeds payloads to op bodies (and
-            # ships them cross-rank) without materialising.  After any
-            # fusion, stay on the level loop below, which materialises at
-            # every boundary.
-            self._serial.execute(ex, wf, plan)
-            return
+            # ships them cross-rank) without materialising.  While any
+            # bucket has live rows, stay on the level loop below, which
+            # materialises at every boundary.
+            if not min_chain or not any(
+                    self._chain_maybe_viable(ex, plan, c)
+                    for c in plan.chains):
+                self._serial.execute(ex, wf, plan)
+                return
         ops = wf.ops
         schedule = plan.schedule
-        for (lo, hi), groups in zip(plan.levels, plan.level_groups):
-            # stage the level on the main thread, plan order (ships first)
-            staged = []
-            for idx in range(lo, hi):
-                p = schedule[idx]
-                if p.ships:
-                    self._materialize_shipped(ex, p)
-                    apply_ships(ex, p)
-                node = ops[p.op_id]
-                staged.append((p, node, gather_args(ex, p, node)))
-            results = [_PENDING] * (hi - lo)
-            result_nbytes = [None] * (hi - lo)
-            for group in groups:
-                if schedule[group[0]].fn in self._no_fuse:
-                    continue
-                buckets: dict[tuple, list[int]] = {}
-                for idx in group:
-                    off = idx - lo
-                    p, _node, args = staged[off]
-                    key = _bucket_key(p, args)
-                    if key is not None:
-                        buckets.setdefault(key, []).append(off)
-                for members in buckets.values():
-                    if len(members) >= self.min_batch:
-                        self._run_bucket(ex, staged, members, results,
-                                         result_nbytes)
-            # commit in plan order; non-fused ops execute per-op here.  The
-            # dominant simple-write case is inlined over locals (the same
-            # discipline as the serial backend's tight loop) — commit() per
-            # op costs ~µs of attribute traffic that would eat the fusion
-            # win on dispatch-bound workloads.
-            stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
-            stats = ex.stats
-            live_b, live_c = ex._live_bytes, ex._live_entries
-            peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
-            for off, (p, node, args) in enumerate(staged):
-                result = results[off]
-                if result is _PENDING:
-                    if any(type(a) is BatchSlice for a in args):
-                        args = [materialize(a) for a in args]
-                    result = resolve_call(ex, p, args)(*args)
-                if p.simple_write and not isinstance(result, tuple):
-                    wk = p.write_keys[0]
-                    nb = result_nbytes[off]
-                    if nb is None:
-                        nb = _nbytes(result)
-                    key_bytes[wk] = nb
-                    live_b += nb
-                    rank = p.exec_ranks[0]
-                    where[wk] = {rank}
-                    stores[rank][wk] = result
-                    live_c += 1
-                else:
-                    # flush locals (incl. peaks — commit() samples against
-                    # stats, and an earlier same-level peak must not be lost)
-                    ex._live_bytes, ex._live_entries = live_b, live_c
-                    stats.peak_live_bytes = peak_b
-                    stats.peak_live_payloads = peak_c
-                    commit(ex, p, node, result)
-                    live_b, live_c = ex._live_bytes, ex._live_entries
-                    peak_b, peak_c = (stats.peak_live_bytes,
-                                      stats.peak_live_payloads)
-                    continue
-                if live_b > peak_b:
-                    peak_b = live_b
-                if live_c > peak_c:
-                    peak_c = live_c
-                if p.gc_keys:
-                    for dk in p.gc_keys:
-                        ranks = where.pop(dk)
-                        for r in ranks:
-                            del stores[r][dk]
-                        live_c -= len(ranks)
-                        live_b -= key_bytes.pop(dk, 0)
-            ex._live_bytes, ex._live_entries = live_b, live_c
-            stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c
+        levels = plan.levels
+        groups = plan.level_groups
+        chain_at = ({c.first_level: c for c in plan.chains}
+                    if plan.chains and min_chain else None)
+        li = 0
+        n_levels = len(levels)
+        while li < n_levels:
+            chain = chain_at.get(li) if chain_at else None
+            if (chain is not None and chain.n_levels >= min_chain
+                    and chain.fn not in self._no_chain
+                    and self._run_chain(ex, ops, plan, chain)):
+                spill_dead_buckets(ex)
+                li += chain.n_levels
+                continue
+            lo, hi = levels[li]
+            self._run_level(ex, ops, schedule, lo, hi, groups[li])
+            spill_dead_buckets(ex)
+            li += 1
+
+    # -- per-level fused dispatch ---------------------------------------------
+    def _run_level(self, ex, ops, schedule, lo, hi, groups) -> None:
+        # stage the level on the main thread, plan order (ships first)
+        staged = []
+        for idx in range(lo, hi):
+            p = schedule[idx]
+            if p.ships:
+                self._materialize_shipped(ex, p)
+                apply_ships(ex, p)
+            node = ops[p.op_id]
+            staged.append((p, node, gather_args(ex, p, node)))
+        results = [_PENDING] * (hi - lo)
+        result_nbytes = [None] * (hi - lo)
+        for group in groups:
+            if schedule[group[0]].fn in self._no_fuse:
+                continue
+            buckets: dict[tuple, list[int]] = {}
+            for idx in group:
+                off = idx - lo
+                p, _node, args = staged[off]
+                key = _bucket_key(p, args)
+                if key is not None:
+                    buckets.setdefault(key, []).append(off)
+            for members in buckets.values():
+                if len(members) >= self.min_batch:
+                    self._run_bucket(ex, staged, members, results,
+                                     result_nbytes)
+        # commit in plan order; non-fused ops execute per-op here.  The
+        # dominant simple-write case is inlined over locals (the same
+        # discipline as the serial backend's tight loop) — commit() per
+        # op costs ~µs of attribute traffic that would eat the fusion
+        # win on dispatch-bound workloads.
+        stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
+        lazy_buckets = ex._lazy_buckets
+        stats = ex.stats
+        live_b, live_c = ex._live_bytes, ex._live_entries
+        peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
+        for off, (p, node, args) in enumerate(staged):
+            result = results[off]
+            if result is _PENDING:
+                if any(type(a) is BatchSlice for a in args):
+                    args = [materialize(a) for a in args]
+                result = resolve_call(ex, p, args)(*args)
+            if p.simple_write and not isinstance(result, tuple):
+                wk = p.write_keys[0]
+                nb = result_nbytes[off]
+                if nb is None:
+                    nb = _nbytes(result)
+                else:               # fused row: register batched residency
+                    result.bucket.rows[result.index] = wk
+                    lazy_buckets.add(result.bucket)
+                key_bytes[wk] = nb
+                live_b += nb
+                rank = p.exec_ranks[0]
+                where[wk] = {rank}
+                stores[rank][wk] = result
+                live_c += 1
+            else:
+                # flush locals (incl. peaks — commit() samples against
+                # stats, and an earlier same-level peak must not be lost)
+                ex._live_bytes, ex._live_entries = live_b, live_c
+                stats.peak_live_bytes = peak_b
+                stats.peak_live_payloads = peak_c
+                commit(ex, p, node, result)
+                live_b, live_c = ex._live_bytes, ex._live_entries
+                peak_b, peak_c = (stats.peak_live_bytes,
+                                  stats.peak_live_payloads)
+                continue
+            if live_b > peak_b:
+                peak_b = live_b
+            if live_c > peak_c:
+                peak_c = live_c
+            if p.gc_keys:
+                for dk in p.gc_keys:
+                    ranks = where.pop(dk)
+                    for r in ranks:
+                        dead = stores[r].pop(dk)
+                        if type(dead) is BatchSlice:
+                            dead.release()
+                    live_c -= len(ranks)
+                    live_b -= key_bytes.pop(dk, 0)
+        ex._live_bytes, ex._live_entries = live_b, live_c
+        stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c
 
     def _materialize_shipped(self, ex, p) -> None:
         """Concretise lazy slices about to travel (boundary: transfers)."""
@@ -256,6 +290,7 @@ class FusedBatchBackend(Backend):
             payload = ex._stores[root][vkey]
             if type(payload) is BatchSlice:
                 concrete = payload.materialize()
+                payload.release()
                 for r in ex._where[vkey]:
                     ex._stores[r][vkey] = concrete
 
@@ -301,10 +336,169 @@ class FusedBatchBackend(Backend):
             return
         self.batches_dispatched += 1
         self.ops_fused += n
-        self._lazy_rows = True
         # batched residency: one stacked buffer, n lazy row views
         elt_aval = out.aval.update(shape=out.shape[1:])
         nb = int(out.nbytes) // n       # one shape/dtype per bucket
+        bucket = BatchBucket(out, n)
         for bi, m in enumerate(members):
-            results[m] = BatchSlice(out, bi, nb, elt_aval)
+            results[m] = BatchSlice(out, bi, nb, elt_aval, bucket)
             result_nbytes[m] = nb
+
+    # -- whole-chain fused dispatch -------------------------------------------
+    def _run_chain(self, ex, ops, plan, chain) -> bool:
+        """Dispatch a :class:`~repro.core.plan.ChainSlice` as one scan call.
+
+        Returns False (with **no state mutated**) when the dynamic half of
+        eligibility fails — non-jax payloads, mismatched member avals, or
+        unequal/unhashable constants — or when the scan trace raises (the
+        ``fn`` is then pinned to per-level dispatch); the caller falls back
+        to the per-level path for these levels.  On success, first-level
+        ships, the final level's commits, and every interior op's virtual
+        commit/GC accounting are replayed in plan order, so the transfer
+        stream and live-set stats are byte-identical to serial replay.
+        """
+        schedule = plan.schedule
+        width = chain.width
+        arg_pos = chain.arg_pos
+        first = chain.members[0]
+        # --- dynamic eligibility (pure reads; fall back leaves no trace) ---
+        # cheap first probe before staging the whole level: a resident
+        # non-jax input can never dispatch (NumPy is never promoted)
+        a0 = self._chain_input(ex, plan, chain)
+        if not (type(a0) is BatchSlice or isinstance(a0, jax.Array)):
+            return False
+        staged = []
+        for idx in first:
+            p = schedule[idx]
+            staged.append(gather_args(ex, p, ops[p.op_id]))
+        aval0 = None
+        column = []
+        for args in staged:
+            a = args[arg_pos]
+            if type(a) is BatchSlice or isinstance(a, jax.Array):
+                av = a.aval
+            else:
+                return False            # NumPy et al: never promoted to jax
+            if aval0 is None:
+                aval0 = av
+            elif av != aval0:
+                return False
+            column.append(a)
+        # constants must agree across every op of the chain: they are
+        # scan-invariant (and vmap-broadcast) in the executable.  Read from
+        # the live ops — plans are cached across constant changes.
+        consts0 = None
+        for level in chain.members:
+            for idx in level:
+                node = ops[schedule[idx].op_id]
+                consts = tuple((type(a[1]), a[1]) for a in node.args
+                               if a[0] is None)
+                if consts0 is None:
+                    try:
+                        hash(consts)
+                    except TypeError:
+                        return False
+                    consts0 = consts
+                elif consts != consts0:
+                    return False
+        # --- resolve + dispatch (state untouched until the call succeeds) ---
+        p0 = schedule[first[0]]
+        args0 = staged[0]
+        layout = []
+        call_args = []
+        sig_args = []
+        for i, k in enumerate(p0.arg_keys):
+            if k is None:
+                layout.append(CONST)
+                call_args.append(args0[i])
+                sig_args.append(args0[i])
+            elif width == 1:
+                a = materialize(column[0])
+                layout.append(SINGLE)
+                call_args.append(a)
+                sig_args.append(a)
+            else:
+                buf = _common_buffer(column)
+                if buf is not None:
+                    layout.append(STACKED)
+                    call_args.append(buf)
+                    sig_args.append(buf)
+                else:
+                    concrete = [materialize(a) for a in column]
+                    layout.append(FLAT)
+                    call_args.extend(concrete)
+                    sig_args.append(concrete[0])
+        call = ex._exec_cache.lookup_chain(
+            chain.fn, tuple(layout), width, chain.n_levels, sig_args)
+        try:
+            out = call(*call_args)
+        except (jax.errors.JAXTypeError, TypeError, ValueError):
+            # not scan-traceable: data-dependent control flow, or the carry
+            # aval is not loop-invariant (fn changes shape/dtype).  Pin the
+            # fn to per-level dispatch — op bodies are pure, re-execution
+            # (per level) is safe.
+            self._no_chain.add(chain.fn)
+            return False
+        self.chains_dispatched += 1
+        self.ops_chained += width * chain.n_levels
+        # --- first-level ships (interior levels are ship-free by plan) ---
+        for idx in first:
+            p = schedule[idx]
+            if p.ships:
+                self._materialize_shipped(ex, p)
+                apply_ships(ex, p)
+        # --- replay commit/GC accounting in plan order -------------------
+        # Interior writes never materialise, but their (uniform: the scan
+        # carry aval is loop-invariant) sizes flow through the same
+        # commit-then-GC arithmetic serial replay performs, so peaks and
+        # final live totals are byte-identical.
+        nb = int(out.nbytes) // width
+        bucket = BatchBucket(out, width) if width > 1 else None
+        elt_aval = out.aval.update(shape=out.shape[1:]) if width > 1 else None
+        last = chain.members[-1]
+        row_of = {idx: j for j, idx in enumerate(last)}
+        interior = chain.interior_keys
+        stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
+        stats = ex.stats
+        live_b, live_c = ex._live_bytes, ex._live_entries
+        peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
+        first_ord = chain.first_level
+        lo = plan.levels[first_ord][0]
+        final_lo, hi = plan.levels[first_ord + chain.n_levels - 1]
+        for idx in range(lo, hi):
+            p = schedule[idx]
+            if idx >= final_lo:          # final level: real commit
+                wk = p.write_keys[0]
+                if bucket is None:
+                    payload = out
+                else:
+                    row = row_of[idx]
+                    payload = BatchSlice(out, row, nb, elt_aval, bucket)
+                    bucket.rows[row] = wk
+                key_bytes[wk] = nb
+                rank = p.exec_ranks[0]
+                where[wk] = {rank}
+                stores[rank][wk] = payload
+            live_b += nb
+            live_c += 1
+            if live_b > peak_b:
+                peak_b = live_b
+            if live_c > peak_c:
+                peak_c = live_c
+            for dk in p.gc_keys:
+                if dk in interior:       # virtual row: lived inside the scan
+                    live_b -= nb
+                    live_c -= 1
+                else:
+                    ranks = where.pop(dk)
+                    for r in ranks:
+                        dead = stores[r].pop(dk)
+                        if type(dead) is BatchSlice:
+                            dead.release()
+                    live_c -= len(ranks)
+                    live_b -= key_bytes.pop(dk, 0)
+        if bucket is not None:
+            ex._lazy_buckets.add(bucket)
+        ex._live_bytes, ex._live_entries = live_b, live_c
+        stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c
+        return True

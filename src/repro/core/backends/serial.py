@@ -6,12 +6,18 @@ dispatch for plans with little intra-level parallelism (a chain pays zero
 coordination overhead here).  State is mirrored into locals for the tight
 loop and written back once at the end; the structured per-op primitives in
 :mod:`.base` compute the exact same transitions.
+
+Drop-list parity: both GC sites below apply the exact drop-list semantics
+the fused backend's batched residency relies on — a dropped payload that is
+a lazy :class:`~.base.BatchSlice` row is released from its bucket, so the
+segment-end spill pass (:func:`~.base.spill_dead_buckets`) sees the same
+row-liveness regardless of which backend executed the drop.
 """
 
 from __future__ import annotations
 
 from ..stats import TransferEvent, _nbytes
-from .base import Backend
+from .base import Backend, BatchSlice
 
 
 class SerialPlanBackend(Backend):
@@ -83,7 +89,9 @@ class SerialPlanBackend(Backend):
                         for dk in p.gc_keys:
                             ranks = where.pop(dk)
                             for r in ranks:
-                                del stores[r][dk]
+                                dead = stores[r].pop(dk)
+                                if type(dead) is BatchSlice:
+                                    dead.release()
                             live_c -= len(ranks)
                             live_b -= key_bytes.pop(dk, 0)
                     continue
@@ -143,7 +151,9 @@ class SerialPlanBackend(Backend):
                 for dk in p.gc_keys:
                     ranks = where.pop(dk)
                     for r in ranks:
-                        del stores[r][dk]
+                        dead = stores[r].pop(dk)
+                        if type(dead) is BatchSlice:
+                            dead.release()
                     live_c -= len(ranks)
                     live_b -= key_bytes.pop(dk, 0)
 

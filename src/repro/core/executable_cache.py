@@ -149,6 +149,79 @@ class ExecutableCache:
         self._entries[key] = first_batched_call
         return first_batched_call
 
+    def lookup_chain(self, fn: Callable, layout: tuple, n_batch: int,
+                     n_levels: int, sig_args) -> Callable:
+        """Resolve the *chain* executable: ``n_levels`` consecutive
+        applications of ``fn`` fused into one ``jit(lax.scan)`` dispatch.
+
+        The chain carry is the single payload position of ``layout`` —
+        ``"single"`` (one array, ``n_batch == 1``), ``"flat"`` (``n_batch``
+        member payloads stacked inside the jitted body) or ``"stacked"``
+        (one pre-stacked buffer passed through whole).  ``"const"``
+        positions are scan-invariant: they stay call arguments (buckets
+        differing only in constant *values* share the executable) and are
+        closed over by the scan body, broadcast by ``vmap`` when
+        ``n_batch > 1``.  The entry returns the **final** level's stacked
+        result — a chain of ``n_levels × n_batch`` ops costs exactly one
+        dispatch, and interior levels never materialise.
+
+        ``lax.scan`` requires the carry aval to be loop-invariant, so a
+        chain whose ``fn`` changes shape/dtype (or is not traceable) raises
+        at trace time — the caller falls back to per-level dispatch and the
+        entry is evicted so a broken executable is never replayed.
+        """
+        key = ((fn, "chain", layout, n_batch, n_levels)
+               + tuple(_abstract(a) for a in sig_args))
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            return entry
+        self.misses += 1
+        if len(self._entries) >= MAX_ENTRIES:
+            self._entries.clear()
+        payload_pos = next(i for i, lay in enumerate(layout) if lay != "const")
+        in_axes = tuple(None if lay == "const" else 0 for lay in layout)
+        body = fn if n_batch == 1 else jax.vmap(fn, in_axes=in_axes)
+
+        def chain_call(*flat):
+            args = []
+            pos = 0
+            for lay in layout:
+                if lay == "flat":
+                    args.append(jax.numpy.stack(flat[pos:pos + n_batch]))
+                    pos += n_batch
+                else:            # "single" array, "stacked" buffer or "const"
+                    args.append(flat[pos])
+                    pos += 1
+
+            def step(carry, _):
+                call_args = list(args)
+                call_args[payload_pos] = carry
+                out = body(*call_args)
+                if isinstance(out, tuple):
+                    out = out[0]    # chain ops write exactly one payload
+                return out, None
+
+            final, _ = jax.lax.scan(step, args[payload_pos], None,
+                                    length=n_levels)
+            return final
+
+        chained = jax.jit(chain_call)
+        cache = self
+
+        def first_chain_call(*call_args):
+            try:
+                out = chained(*call_args)
+            except Exception:
+                cache._entries.pop(key, None)
+                raise
+            cache.compiles += 1
+            cache._entries[key] = chained
+            return out
+
+        self._entries[key] = first_chain_call
+        return first_chain_call
+
     # -- entry construction ---------------------------------------------------
     def _build(self, key: tuple, fn: Callable, args) -> Callable:
         array_args = [a for a in args

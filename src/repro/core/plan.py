@@ -80,6 +80,51 @@ class PlanOp:
         self.cached_call = None
 
 
+class ChainSlice:
+    """A *signature chain*: ≥2 consecutive wavefront levels fusible into one
+    dispatch.
+
+    The static (plan-time) half of chain-fusion eligibility: every level of
+    the run holds exactly ``width`` ops sharing one ``(fn, constant-position
+    mask)`` signature with a single payload argument (``arg_pos``), and the
+    level-to-level dataflow is *elementwise aligned* — op ``j`` of level
+    ``i+1`` reads exactly the version written by op ``j`` of level ``i`` and
+    is its sole (final) reader, so every interior version lives and dies
+    inside the chain.  Interior levels are guaranteed ship-free (an aligned
+    producer/consumer pair always shares a rank).
+
+    ``members`` holds the aligned schedule indices, one tuple per level:
+    ``members[i+1][j]`` consumes ``members[i][j]``.  ``interior_keys`` are
+    the version keys written by all but the last level — a chain-aware
+    backend never materialises them, but must still replay their (virtual)
+    commit/GC accounting so live-set stats stay byte-identical to serial
+    replay.  The dynamic half (payload avals, constant equality, scan
+    traceability) is resolved at replay time, since plans are
+    shape-oblivious and constants are read from the live ops.
+    """
+
+    __slots__ = ("members", "width", "first_level", "fn", "arg_pos",
+                 "interior_keys")
+
+    def __init__(self, members, width, first_level, fn, arg_pos,
+                 interior_keys):
+        self.members = members
+        self.width = width
+        self.first_level = first_level   # ordinal into ExecutionPlan.levels
+        self.fn = fn
+        self.arg_pos = arg_pos
+        self.interior_keys = interior_keys
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.members)
+
+    def __repr__(self) -> str:
+        return (f"ChainSlice({getattr(self.fn, '__name__', self.fn)!r}, "
+                f"{self.n_levels} levels x {self.width} ops "
+                f"from level {self.first_level})")
+
+
 class ExecutionPlan:
     """A compiled segment: wavefront-ordered :class:`PlanOp` schedule.
 
@@ -93,14 +138,20 @@ class ExecutionPlan:
     shape-oblivious).  Only groups of ≥2 ops are recorded;
     ``has_fusion_groups`` lets batch-aware backends skip group handling
     entirely on plans with no batching opportunity.
+
+    ``chains`` are the :class:`ChainSlice` runs — maximal sequences of
+    consecutive levels a chain-aware backend may dispatch as a single
+    ``jit(lax.scan)`` executable.  ``level_flops`` carries, per level, the
+    critical-path compute (max over ranks of the summed ``OpNode.flops``
+    placed on that rank) consumed by the topology cost model.
     """
 
     __slots__ = ("schedule", "wavefront_counts", "n_rounds", "start", "end",
                  "n_nodes", "collective_mode", "total_writes", "levels",
-                 "level_groups", "has_fusion_groups")
+                 "level_groups", "has_fusion_groups", "chains", "level_flops")
 
     def __init__(self, schedule, wavefront_counts, n_rounds, start, end,
-                 n_nodes, collective_mode):
+                 n_nodes, collective_mode, level_flops=()):
         self.schedule = schedule
         self.wavefront_counts = wavefront_counts
         self.n_rounds = n_rounds
@@ -113,6 +164,9 @@ class ExecutionPlan:
         self.level_groups = tuple(
             _signature_groups(schedule, lo, hi) for lo, hi in self.levels)
         self.has_fusion_groups = any(self.level_groups)
+        self.chains = _signature_chains(schedule, self.levels)
+        self.level_flops = tuple(level_flops) if level_flops else \
+            (0,) * len(self.levels)
 
     def __len__(self) -> int:
         return len(self.schedule)
@@ -140,6 +194,112 @@ def _signature_groups(schedule, lo: int, hi: int) -> tuple[tuple[int, ...], ...]
         mask = tuple(k is None for k in p.arg_keys)
         groups.setdefault((p.fn, mask), []).append(idx)
     return tuple(tuple(g) for g in groups.values() if len(g) >= 2)
+
+
+def _chain_level_info(schedule, lo: int, hi: int):
+    """``(fn, const-mask, payload-arg position)`` if the whole level shares
+    one chain-eligible signature, else None.
+
+    Chain-eligible: every op is ``simple_write`` with exactly one payload
+    argument (the chain carry) and the same ``(fn, constant-position mask)``.
+    """
+    p0 = schedule[lo]
+    if not p0.simple_write:
+        return None
+    mask = tuple(k is None for k in p0.arg_keys)
+    payload_positions = [i for i, is_const in enumerate(mask) if not is_const]
+    if len(payload_positions) != 1:
+        return None
+    fn = p0.fn
+    for idx in range(lo + 1, hi):
+        p = schedule[idx]
+        if (not p.simple_write or p.fn is not fn
+                or tuple(k is None for k in p.arg_keys) != mask):
+            return None
+    return fn, mask, payload_positions[0]
+
+
+def _signature_chains(schedule, levels) -> tuple:
+    """Maximal :class:`ChainSlice` runs over consecutive levels.
+
+    Greedy left-to-right scan: a chain starts at any level whose ops all
+    share one single-payload signature, and extends while the next level
+    (same signature, same width, no ships) is elementwise-aligned with it —
+    op ``j`` reads the version written by aligned op ``j`` of the previous
+    level *and* carries it on its GC drop list (sole final reader), so every
+    interior version is private to the chain.
+    """
+    chains = []
+    n = len(levels)
+    li = 0
+    while li < n - 1:
+        info = _chain_level_info(schedule, *levels[li])
+        if info is None:
+            li += 1
+            continue
+        fn, mask, arg_pos = info
+        lo, hi = levels[li]
+        width = hi - lo
+        members = [tuple(range(lo, hi))]
+        lj = li + 1
+        while lj < n:
+            nlo, nhi = levels[lj]
+            if nhi - nlo != width:
+                break
+            nxt = _chain_level_info(schedule, nlo, nhi)
+            if nxt is None or nxt[0] is not fn or nxt[1] != mask:
+                break
+            prev = members[-1]
+            wk_pos = {schedule[m].write_keys[0]: j for j, m in enumerate(prev)}
+            aligned: list = [None] * width
+            ok = True
+            for idx in range(nlo, nhi):
+                p = schedule[idx]
+                k = p.arg_keys[arg_pos]
+                pos = wk_pos.get(k)
+                if (p.ships or pos is None or aligned[pos] is not None
+                        or k not in p.gc_keys):
+                    ok = False
+                    break
+                aligned[pos] = idx
+            if not ok:
+                break
+            members.append(tuple(aligned))
+            lj += 1
+        if len(members) >= 2:
+            interior = frozenset(
+                schedule[m].write_keys[0]
+                for lvl in members[:-1] for m in lvl)
+            chains.append(ChainSlice(tuple(members), width, li, fn, arg_pos,
+                                     interior))
+            li = lj
+        else:
+            li += 1
+    return tuple(chains)
+
+
+def _flops_per_level(ops, level_of: dict, n_levels: int) -> list[int]:
+    """Critical-path compute per level: max over ranks of summed op flops.
+
+    Ops of one level run concurrently across ranks but serialise on a rank,
+    so a level's compute cost is the busiest rank's total.  Single source of
+    truth for both execution modes (plan stores it; the interpreter calls
+    :func:`wavefront_flops`) — the cost model must price them identically.
+    """
+    acc: dict[int, dict[int, int]] = {}
+    for node in ops:
+        if node.flops:
+            per_rank = acc.setdefault(level_of[node.op_id], {})
+            for r in placement_ranks(node.placement):
+                per_rank[r] = per_rank.get(r, 0) + node.flops
+    return [max(acc[lv].values()) if lv in acc else 0
+            for lv in range(1, n_levels + 1)]
+
+
+def wavefront_flops(wf, start: int, end: int) -> list[int]:
+    """Per-level critical-path flops for a segment (see :func:`_flops_per_level`)."""
+    level, counts = wavefront_levels(wf, start, end)
+    return _flops_per_level(wf.ops[start:end], level, len(counts))
 
 
 def segment_signature(wf, start: int, end: int) -> tuple:
@@ -267,7 +427,8 @@ def build_plan(wf, start: int, end: int, n_nodes: int, collective_mode: str,
             level=level[node.op_id],
         ))
     return ExecutionPlan(tuple(schedule), wavefront_counts, rel_round,
-                         start, end, n_nodes, collective_mode)
+                         start, end, n_nodes, collective_mode,
+                         _flops_per_level(ops, level, len(wavefront_counts)))
 
 
 # ---------------------------------------------------------------------------

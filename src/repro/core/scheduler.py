@@ -19,7 +19,9 @@ The engine is split into two layers:
     concurrently on a worker pool (comm/compute overlap on multi-core);
   * ``backend="fused"``   — same-signature level-mates are stacked into a
     single ``jax.vmap``-ed jitted dispatch via the
-    :class:`~repro.core.executable_cache.ExecutableCache`.
+    :class:`~repro.core.executable_cache.ExecutableCache`; whole signature
+    chains (plan-detected :class:`~repro.core.plan.ChainSlice` runs)
+    collapse further into one ``jit(lax.scan)`` dispatch per chain.
 
 All backends replay the same plan with ships and commits in plan order, so
 payload values and the transfer event stream are identical across backends;
@@ -45,11 +47,11 @@ from itertools import islice
 from typing import Any, Optional, Union
 
 from .backends import get_backend
-from .backends.fused import BatchSlice
+from .backends.base import BatchSlice, spill_dead_buckets
 from .collectives import broadcast_tree
 from .executable_cache import EXEC_CACHE, ExecutableCache
 from .placement import placement_ranks
-from .plan import plan_for, wavefront_levels
+from .plan import plan_for, wavefront_flops, wavefront_levels
 from .stats import ExecutionStats, TransferEvent, _nbytes
 from .trace import OpNode, Workflow
 
@@ -98,6 +100,9 @@ class LocalExecutor:
         self._live_bytes = 0
         self._live_entries = 0
         self._init_seen = 0            # wf.initial items already materialised
+        # fused-batch residency registry: BatchBuckets with lazy rows still
+        # resident in the stores (see backends.base.spill_dead_buckets)
+        self._lazy_buckets: set = set()
         self._exec_cache = executable_cache if executable_cache is not None else EXEC_CACHE
         self.stats = ExecutionStats()
         self._round_counter = 0
@@ -115,9 +120,11 @@ class LocalExecutor:
             raise KeyError(f"no payload for {version!r}")
         payload = self._stores[next(iter(ranks))][version.key]
         if type(payload) is BatchSlice:
-            payload = payload.materialize()
+            concrete = payload.materialize()
+            payload.release()
             for r in ranks:
-                self._stores[r][version.key] = payload
+                self._stores[r][version.key] = concrete
+            payload = concrete
         return payload
 
     def _holders(self, vkey) -> list[int]:
@@ -215,21 +222,27 @@ class LocalExecutor:
 
     # -- planned replay (default) ---------------------------------------------
     def _pinned(self, wf: Workflow) -> set:
-        # Heads of *user-created* arrays are pinned (user may fetch() them);
-        # op-created temporaries are reclaimed after their last reader, and
-        # any version no op ever reads survives by construction (GC only
-        # fires on reads).
-        return {
-            wf.refs[ref_id].head.key
-            for (ref_id, _idx) in wf.initial.keys()
-            if ref_id in wf.refs
-        }
+        # Every ref's *head* (latest version as of this sync) is pinned: the
+        # user may fetch() it, and — under incremental sync — ops recorded
+        # after this segment may still read it (the conformance fuzzer found
+        # the original user-arrays-only policy reclaiming an apply-created
+        # head that a later segment consumed).  Superseded versions can
+        # never gain new readers (recording always reads the then-current
+        # head), so they remain reclaimable after their last recorded
+        # reader; a pinned head becomes reclaimable in the segment that
+        # supersedes it.
+        return {ref.head.key for ref in wf.refs.values()}
 
     def _run_planned(self, wf: Workflow, start: int) -> ExecutionStats:
         plan = plan_for(wf, start, len(wf.ops), self.n_nodes,
                         self.collective_mode, self._where, self._pinned(wf))
         base_round = self._round_counter
         self.backend.execute(self, wf, plan)
+        # segment-end residency pass: whatever backend ran, partially-dead
+        # fused buckets must not outlive the segment (drop-list parity —
+        # serial/threads release rows they GC, the spill concretises the
+        # survivors so process residency matches the live-set accounting).
+        spill_dead_buckets(self)
         stats = self.stats
         stats.ops_executed += len(plan.schedule)
         # zero-copy accounting: every InOut write in pass-by-value C++
@@ -238,6 +251,7 @@ class LocalExecutor:
         self._round_counter = base_round + plan.n_rounds
         # wavefronts accumulate across incremental run() segments
         stats.wavefronts.extend(plan.wavefront_counts)
+        stats.wavefront_flops.extend(plan.level_flops)
         return stats
 
     # -- reference interpreter (trace order, per-op) --------------------------
@@ -297,4 +311,6 @@ class LocalExecutor:
 
         # wavefronts accumulate across incremental run() segments
         self.stats.wavefronts.extend(self.wavefronts(wf, start=start))
+        self.stats.wavefront_flops.extend(
+            wavefront_flops(wf, start, len(wf.ops)))
         return self.stats

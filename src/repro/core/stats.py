@@ -51,6 +51,10 @@ class ExecutionStats:
     # Accumulated across incremental ``run()`` segments (one entry per level
     # of every executed segment, in execution order).
     wavefronts: list[int] = dataclasses.field(default_factory=list)
+    # Critical-path compute per level (max over ranks of the summed
+    # ``OpNode.flops`` placed on that rank) — aligned with ``wavefronts``,
+    # accumulated the same way; priced by ``Topology.flops_per_s``.
+    wavefront_flops: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def bytes_transferred(self) -> int:
@@ -88,12 +92,32 @@ class ExecutionStats:
                 rounds[t.round_id] = dt
         return sum(rounds.values())
 
+    def estimated_compute_time(self, topology) -> float:
+        """Simulated seconds spent computing under ``topology``.
+
+        Levels serialise along the critical path; within a level, ops run
+        concurrently across ranks but serialise on a rank, so each level is
+        charged its busiest rank's summed ``OpNode.flops`` (accumulated in
+        ``wavefront_flops``) at the topology's ``flops_per_s`` rate.  A
+        topology without a positive ``flops_per_s`` (the default) prices
+        compute at zero — communication-only makespans, the pre-flops
+        behaviour.
+        """
+        rate = getattr(topology, "flops_per_s", 0.0) or 0.0
+        if rate <= 0.0 or not self.wavefront_flops:
+            return 0.0
+        return sum(f / rate for f in self.wavefront_flops)
+
     def estimated_makespan(self, topology, op_time_s: float = 0.0) -> float:
         """Estimated simulated makespan: comm rounds + wavefront compute.
 
-        ``op_time_s`` is the (uniform) cost charged per wavefront level —
-        levels execute their ops concurrently on an ideal machine, so the
-        compute term is ``critical_path * op_time_s``.  With the default 0
-        this is the pure communication makespan.
+        The compute term prices each level's critical-path flops when the
+        topology declares a ``flops_per_s`` rate (see
+        :meth:`estimated_compute_time`); ``op_time_s`` additionally charges
+        a uniform per-level cost (levels execute their ops concurrently on
+        an ideal machine, so that term is ``critical_path * op_time_s``).
+        With the defaults this is the pure communication makespan.
         """
-        return self.estimated_comm_time(topology) + self.critical_path * op_time_s
+        return (self.estimated_comm_time(topology)
+                + self.estimated_compute_time(topology)
+                + self.critical_path * op_time_s)

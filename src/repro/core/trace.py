@@ -337,7 +337,7 @@ class Workflow:
         for v in node.writes:
             producers[v.key] = node
         self._op_sigs.append(_intern_sig((
-            node.fn, node.name, node.placement,
+            node.fn, node.name, node.placement, node.flops,
             tuple((v.key if ref is not None else None)
                   for ref, v, _ in node.args),
             tuple(v.key for v in node.writes),

@@ -35,7 +35,11 @@ class Topology:
 
     ``latency_s`` is charged per hop, ``bandwidth_Bps`` per byte end-to-end
     (links are full-duplex and non-blocking; contention is modelled only
-    through the round structure of the transfer stream).
+    through the round structure of the transfer stream).  ``flops_per_s``
+    is each rank's compute rate: when positive,
+    ``ExecutionStats.estimated_makespan`` prices every wavefront level's
+    critical-path ``OpNode.flops`` in seconds alongside the communication
+    rounds; the default 0 keeps makespans communication-only.
     """
 
     kind: str
@@ -43,6 +47,7 @@ class Topology:
     latency_s: float = 1e-6
     bandwidth_Bps: float = 10e9
     arity: int = 4
+    flops_per_s: float = 0.0
 
     def __post_init__(self):
         assert self.kind in ("flat", "ring", "fat-tree"), self.kind
@@ -86,10 +91,11 @@ class Topology:
 
 def make_topology(kind: str = "flat", n_nodes: int = 1, *,
                   latency_s: float = 1e-6, bandwidth_Bps: float = 10e9,
-                  arity: int = 4) -> Topology:
+                  arity: int = 4, flops_per_s: float = 0.0) -> Topology:
     """Build a :class:`Topology` cost model (see class docstring for kinds)."""
     return Topology(kind=kind, n_nodes=n_nodes, latency_s=latency_s,
-                    bandwidth_Bps=bandwidth_Bps, arity=arity)
+                    bandwidth_Bps=bandwidth_Bps, arity=arity,
+                    flops_per_s=flops_per_s)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

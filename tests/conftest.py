@@ -88,6 +88,15 @@ except ImportError:  # pragma: no cover
     _install_hypothesis_stub()
 
 
+def pytest_addoption(parser):
+    # Base seed for the randomized backend-conformance suite
+    # (tests/test_conformance.py): every generated workflow derives from it,
+    # so a CI failure reproduces locally with the same --seed value.
+    parser.addoption(
+        "--seed", action="store", type=int, default=0,
+        help="base seed for randomized conformance workflows (default 0)")
+
+
 @pytest.fixture
 def rng():
     import numpy as np

@@ -1,0 +1,422 @@
+"""Cross-level chain fusion + eager BatchSlice spill (fused backend).
+
+The plan detects *signature chains* — consecutive wavefront levels of one
+aligned ``(fn, layout)`` signature whose interior versions live and die
+inside the run — and the fused backend dispatches each as a single
+``jit(lax.scan)`` executable.  These tests pin the static detection, the
+dynamic fallbacks (a chain broken by a ship, by a dtype change, by an
+untraceable fn), exact stats parity with serial replay, and the batched
+residency contract: once a ``BatchSlice`` row's bucket-mates are GC'd, the
+survivor is eagerly materialised so actual process residency matches
+``stats.peak_live_bytes``.
+"""
+
+import numpy as np
+import pytest
+
+from repro import core as bind
+from repro.core.backends.base import BatchSlice
+from repro.launch.mesh import make_topology
+
+jnp = pytest.importorskip("jax.numpy")
+
+
+@bind.op
+def scale(a: bind.InOut, s: bind.In):
+    return a * s
+
+
+@bind.op
+def shift(a: bind.InOut, s: bind.In):
+    return a + s
+
+
+def _actual_residency(ex) -> int:
+    """Bytes the stores actually pin: stacked buffers deduplicated."""
+    seen: set = set()
+    total = 0
+    for store in ex._stores.values():
+        for payload in store.values():
+            if type(payload) is BatchSlice:
+                if id(payload.buffer) not in seen:
+                    seen.add(id(payload.buffer))
+                    total += int(payload.buffer.nbytes)
+            elif id(payload) not in seen:
+                seen.add(id(payload))
+                total += int(getattr(payload, "nbytes", 0))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Chain detection (static half, plan time)
+# ---------------------------------------------------------------------------
+
+def test_plan_detects_signature_chain():
+    width, depth = 4, 6
+    with bind.Workflow() as wf:
+        xs = [wf.array(np.ones((4, 4)), f"x{i}") for i in range(width)]
+        for _ in range(depth):
+            for x in xs:
+                scale(x, 1.5)
+        wf._synced_upto = len(wf.ops)   # record only
+    plan = bind.build_plan(wf, 0, len(wf.ops), 1, "tree",
+                           {v: {r} for v, (_, r) in wf.initial.items()},
+                           {x.ref.head.key for x in xs})
+    assert len(plan.chains) == 1
+    chain = plan.chains[0]
+    assert chain.width == width and chain.n_levels == depth
+    assert chain.first_level == 0
+    assert len(chain.interior_keys) == width * (depth - 1)
+    # aligned columns: member j of level i+1 consumes member j of level i
+    sched = plan.schedule
+    for lvl, nxt in zip(chain.members, chain.members[1:]):
+        for prev_idx, next_idx in zip(lvl, nxt):
+            p = sched[next_idx]
+            k = sched[prev_idx].write_keys[0]
+            assert p.arg_keys[chain.arg_pos] == k and k in p.gc_keys
+
+
+def test_chain_broken_by_signature_change_mid_run():
+    """A different fn in the middle level splits the run into two chains."""
+    with bind.Workflow() as wf:
+        a = wf.array(np.ones((4, 4)), "a")
+        for _ in range(3):
+            scale(a, 1.5)
+        shift(a, 1.0)
+        for _ in range(3):
+            scale(a, 1.5)
+        wf._synced_upto = len(wf.ops)
+    plan = bind.build_plan(wf, 0, len(wf.ops), 1, "tree",
+                           {v: {r} for v, (_, r) in wf.initial.items()},
+                           {a.ref.head.key})
+    assert [c.n_levels for c in plan.chains] == [3, 3]
+
+
+def test_chain_broken_by_ship():
+    """An interior op placed on another rank needs a transfer — the chain
+    must not swallow it (transfers are boundaries)."""
+    ex = bind.LocalExecutor(2, backend="fused")
+    with bind.Workflow(n_nodes=2, executor=ex) as wf:
+        a = wf.array(jnp.ones((4, 4), jnp.float32), "a")
+        with bind.node(0):
+            for _ in range(3):
+                scale(a, 2.0)
+        with bind.node(1):                  # hop: ships a's version to rank 1
+            for _ in range(3):
+                scale(a, 2.0)
+        out = np.asarray(wf.fetch(a))
+    np.testing.assert_allclose(out, np.full((4, 4), 2.0**6))
+    fb = ex.backend
+    # two rank-local chains, never one spanning the transfer
+    assert fb.chains_dispatched == 2
+    assert ex.stats.message_count == 1      # the single cross-rank hop
+
+
+def test_chain_broken_by_dtype_change():
+    """int payload * float const changes the carry dtype — lax.scan rejects
+    the trace and the backend falls back per level, values intact."""
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((3, 3), jnp.int32), "a")
+        for _ in range(5):
+            scale(a, 2.5)
+        out = np.asarray(wf.fetch(a))
+    ref = np.ones((3, 3), np.float32)
+    for _ in range(5):
+        ref = (ref * np.float32(2.5)).astype(np.float32)
+    np.testing.assert_allclose(out, ref)
+    assert fb.chains_dispatched == 0
+    assert scale.__wrapped__ in fb._no_chain
+
+
+def test_chain_broken_by_untraceable_fn():
+    def branchy(a, s):
+        if float(np.asarray(a).sum()) > 0:  # host branch: not traceable
+            return a * s
+        return a
+
+    branchy.__bind_intents__ = (bind.InOut, bind.In)
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((3, 3), jnp.float32), "a")
+        for _ in range(4):
+            wf.call(branchy, (a, 2.0), name="branchy")
+        out = np.asarray(wf.fetch(a))
+    np.testing.assert_allclose(out, np.full((3, 3), 16.0))
+    assert fb.chains_dispatched == 0 and branchy in fb._no_chain
+
+
+def test_chain_ineligible_for_numpy_payloads():
+    """NumPy payloads are never promoted to jax — the chain falls back to
+    wholesale serial delegation and float64 survives."""
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((4, 4)), "a")
+        for _ in range(6):
+            scale(a, 1.5)
+        out = wf.fetch(a)
+    assert isinstance(out, np.ndarray) and out.dtype == np.float64
+    assert fb.chains_dispatched == 0
+    np.testing.assert_allclose(out, np.full((4, 4), 1.5**6))
+
+
+# ---------------------------------------------------------------------------
+# Chain dispatch: one executable per chain, stats parity with serial
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [1, 8])
+def test_chain_dispatches_once_and_matches_serial_stats(width):
+    depth = 16
+
+    def run(backend):
+        ex = bind.LocalExecutor(1, backend=backend)
+        with bind.Workflow(executor=ex) as wf:
+            xs = [wf.array(jnp.full((4, 4), float(i + 1), jnp.float32),
+                           f"x{i}") for i in range(width)]
+            for _ in range(depth):
+                for x in xs:
+                    scale(x, 1.01)
+            outs = [np.asarray(wf.fetch(x)) for x in xs]
+        return outs, ex.stats, ex
+
+    fb = bind.FusedBatchBackend()
+    fused_outs, fused_stats, fused_ex = run(fb)
+    serial_outs, serial_stats, serial_ex = run("serial")
+    assert fb.chains_dispatched == 1
+    assert fb.ops_chained == width * depth
+    for a, b in zip(fused_outs, serial_outs):
+        np.testing.assert_array_equal(a, b)
+    # interior levels never materialise, yet the accounting is byte-identical
+    assert fused_stats.peak_live_bytes == serial_stats.peak_live_bytes
+    assert fused_stats.peak_live_payloads == serial_stats.peak_live_payloads
+    assert fused_ex._live_bytes == serial_ex._live_bytes
+    assert fused_ex._live_entries == serial_ex._live_entries
+    assert fused_stats.transfers == serial_stats.transfers
+    assert fused_stats.wavefronts == serial_stats.wavefronts
+
+
+def test_chain_fusion_disabled_by_min_chain_levels():
+    fb = bind.FusedBatchBackend(min_chain_levels=0)
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((4, 4), jnp.float32), "a")
+        for _ in range(8):
+            scale(a, 1.5)
+        out = np.asarray(wf.fetch(a))
+    np.testing.assert_allclose(out, np.full((4, 4), 1.5**8), rtol=1e-5)
+    assert fb.chains_dispatched == 0
+
+
+def test_chain_feeds_following_bucket_via_stacked_buffer():
+    """A chain's final BatchSlice rows pass through whole into the next
+    fused bucket (batched residency survives the chain boundary)."""
+    width, depth = 4, 5
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.full((4, 4), float(i + 1), jnp.float32), f"x{i}")
+              for i in range(width)]
+        for _ in range(depth):
+            for x in xs:
+                scale(x, 2.0)
+        for x in xs:
+            shift(x, 1.0)       # different fn: bucket level after the chain
+        outs = [np.asarray(wf.fetch(x)) for x in xs]
+    assert fb.chains_dispatched == 1 and fb.batches_dispatched == 1
+    for i, out in enumerate(outs):
+        np.testing.assert_allclose(out, np.full((4, 4), (i + 1) * 32.0 + 1.0))
+
+
+def test_chain_executable_shared_across_constant_values():
+    """Plans (and chain executables) are cached across constant *values*:
+    a structurally identical re-recording with a different scale factor
+    must hit the caches and still compute with its own constant."""
+    def run(const):
+        fb = bind.FusedBatchBackend()
+        ex = bind.LocalExecutor(1, backend=fb)
+        with bind.Workflow(executor=ex) as wf:
+            a = wf.array(jnp.ones((4, 4), jnp.float32), "a")
+            for _ in range(6):
+                scale(a, const)
+            out = np.asarray(wf.fetch(a))
+        assert fb.chains_dispatched == 1
+        return out
+
+    np.testing.assert_allclose(run(1.5), np.full((4, 4), 1.5**6), rtol=1e-5)
+    np.testing.assert_allclose(run(2.0), np.full((4, 4), 2.0**6), rtol=1e-5)
+
+
+def test_chain_with_varying_constants_falls_back_per_level():
+    """Constants are scan-invariant in the chain executable; a chain whose
+    levels use different constant values must fall back (values first)."""
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    consts = [1.5, 2.0, 3.0, 0.5]
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((3, 3), jnp.float32), "a")
+        for c in consts:
+            scale(a, c)
+        out = np.asarray(wf.fetch(a))
+    np.testing.assert_allclose(out, np.full((3, 3), float(np.prod(consts))),
+                               rtol=1e-5)
+    assert fb.chains_dispatched == 0
+
+
+def test_bucket_feeds_chain_via_stacked_buffer():
+    """A fused bucket's stacked result passes through whole as the chain's
+    carry (batched residency survives the bucket→chain boundary)."""
+    width, depth = 4, 5
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.full((4, 4), float(i + 1), jnp.float32), f"x{i}")
+              for i in range(width)]
+        for x in xs:
+            shift(x, 1.0)       # bucket level
+        for _ in range(depth):
+            for x in xs:
+                scale(x, 2.0)   # chain, fed by the bucket's stacked buffer
+        outs = [np.asarray(wf.fetch(x)) for x in xs]
+    assert fb.batches_dispatched == 1 and fb.chains_dispatched == 1
+    for i, out in enumerate(outs):
+        np.testing.assert_allclose(out, np.full((4, 4), (i + 2) * 32.0))
+
+
+# ---------------------------------------------------------------------------
+# Eager spill: batched residency matches the live-set accounting
+# ---------------------------------------------------------------------------
+
+def test_surviving_batch_row_spills_to_match_accounting():
+    """The tentpole's residency bug: one long-lived BatchSlice row used to
+    pin its whole stacked buffer, so actual residency exceeded
+    ``peak_live_bytes`` by the batch width.  After its bucket-mates are
+    GC'd the survivor must be a concrete array and the buffer released."""
+    n = 6
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.full((8, 8), float(i + 1), jnp.float32), f"x{i}")
+              for i in range(n)]
+        for x in xs:
+            scale(x, 2.0)       # one bucket of n lazy rows
+        for x in xs[1:]:
+            shift(x, 1.0)       # consumes rows 1..n-1; row 0 survives
+        wf.sync()
+        assert fb.batches_dispatched == 2
+        # the survivor was eagerly materialised...
+        head = ex._stores[0][xs[0].ref.head.key]
+        assert type(head) is not BatchSlice
+        # ...so actual residency equals the accounted live set
+        assert _actual_residency(ex) == ex._live_bytes
+        assert ex._live_bytes <= ex.stats.peak_live_bytes
+        outs = [np.asarray(wf.fetch(x)) for x in xs]
+    np.testing.assert_allclose(outs[0], np.full((8, 8), 2.0))
+    for i in range(1, n):
+        np.testing.assert_allclose(outs[i], np.full((8, 8), 2.0 * (i + 1) + 1.0))
+
+
+def test_fully_live_bucket_stays_lazy():
+    """No bucket-mates died — the stacked buffer is exactly the accounted
+    bytes and must NOT spill (the chain pass-through case)."""
+    n = 4
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.full((4, 4), float(i + 1), jnp.float32), f"x{i}")
+              for i in range(n)]
+        for x in xs:
+            scale(x, 3.0)
+        wf.sync()
+        rows = [ex._stores[0][x.ref.head.key] for x in xs]
+        assert all(type(r) is BatchSlice for r in rows)
+        assert _actual_residency(ex) == ex._live_bytes
+        outs = [np.asarray(wf.fetch(x)) for x in xs]
+    for i, out in enumerate(outs):
+        np.testing.assert_allclose(out, np.full((4, 4), 3.0 * (i + 1)))
+
+
+def test_fetch_releases_row_then_segment_spill_drops_buffer():
+    """A user fetch() mid-stream concretises one row; the segment-end spill
+    after the next sync must release the buffer for the rest."""
+    n = 4
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        xs = [wf.array(jnp.full((4, 4), float(i + 1), jnp.float32), f"x{i}")
+              for i in range(n)]
+        for x in xs:
+            scale(x, 2.0)
+        np.testing.assert_allclose(np.asarray(wf.fetch(xs[0])),
+                                   np.full((4, 4), 2.0))
+        scale(xs[0], 1.0)                   # second segment
+        wf.sync()
+        assert not ex._lazy_buckets
+        for payload in ex._stores[0].values():
+            assert type(payload) is not BatchSlice
+        assert _actual_residency(ex) == ex._live_bytes
+
+
+# ---------------------------------------------------------------------------
+# Satellite: OpNode.flops price compute in the topology cost model
+# ---------------------------------------------------------------------------
+
+def _flop_op(a, s):
+    return a * s
+
+
+_flop_op.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _absorb(b, a):
+    return b + a
+
+
+_absorb.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _run_flops_workflow(flops_per_op: int, mode: str = "plan"):
+    ex = bind.LocalExecutor(2, mode=mode)
+    with bind.Workflow(n_nodes=2, executor=ex) as wf:
+        a = wf.array(np.ones((64, 64)), "a")
+        b = wf.array(np.ones((64, 64)), "b", rank=1)
+        with bind.node(1):
+            wf.call(_absorb, (b, a))    # ships a to rank 1: real comm cost
+        for _ in range(4):
+            with bind.node(0):
+                wf.call(_flop_op, (a, 1.01), flops=flops_per_op)
+            with bind.node(1):
+                wf.call(_flop_op, (b, 1.01), flops=flops_per_op)
+        wf.sync()
+    return ex.stats
+
+
+def test_flops_feed_estimated_makespan():
+    topo = make_topology("flat", 2, flops_per_s=1e9)
+    comm_bound = _run_flops_workflow(flops_per_op=0)
+    compute_bound = _run_flops_workflow(flops_per_op=10_000_000)
+    # identical transfer streams, but compute-bound levels now cost time
+    assert comm_bound.bytes_transferred == compute_bound.bytes_transferred
+    est_comm = comm_bound.estimated_makespan(topo)
+    est_compute = compute_bound.estimated_makespan(topo)
+    # each level charges its busiest rank: 1e7 flops / 1e9 flops/s per level
+    expected_compute = sum(compute_bound.wavefront_flops) / 1e9
+    np.testing.assert_allclose(est_compute - est_comm, expected_compute)
+    assert est_compute > est_comm
+    # a rate-less topology prices compute at zero (pre-flops behaviour)
+    legacy = make_topology("flat", 2)
+    np.testing.assert_allclose(compute_bound.estimated_makespan(legacy),
+                               est_comm)
+
+
+def test_wavefront_flops_identical_across_modes_and_backends():
+    runs = [_run_flops_workflow(5_000, mode="interpret"),
+            _run_flops_workflow(5_000, mode="plan")]
+    ref = runs[0]
+    assert ref.wavefront_flops and any(ref.wavefront_flops)
+    for stats in runs[1:]:
+        assert stats.wavefront_flops == ref.wavefront_flops
+    # busiest-rank semantics: two 5k-flop ops on different ranks per level
+    assert all(f == 5_000 for f in ref.wavefront_flops)

@@ -1,0 +1,283 @@
+"""Differential backend-conformance fuzzing.
+
+Bind's core claim is that one recorded partitioned global workflow can be
+replayed by any dispatch strategy without changing program semantics.  This
+suite generates *seeded random workflows* — random DAG shapes, mixed
+jax/NumPy payloads, random ``n_nodes`` and placements (ships), random
+incremental ``run()`` segment boundaries, fns that defeat vmap/scan tracing
+— and replays each across ``interpret`` / ``serial`` / ``threads`` /
+``fused``, asserting the conformance contract:
+
+* **value parity** — every fetched payload identical (values *and* dtypes;
+  a version GC'd in one backend must be GC'd in all);
+* **transfer accounting** — plan backends produce a *byte-identical*
+  transfer event stream (src, dst, bytes, round, kind, order); the
+  interpreter (trace-order, so round ids legitimately differ) matches as a
+  multiset of hops and in byte/message totals;
+* **stats invariants** — ``ops_executed`` / ``copies_elided`` /
+  ``wavefronts`` / ``wavefront_flops`` agree everywhere (wavefronts
+  accumulate across incremental segments); final live bytes never exceed
+  ``peak_live_bytes`` (the live-set peak is monotone under GC); concurrent
+  backends may only report *higher* peaks than serial.
+
+Hypothesis drives extra exploration when installed; without it the
+``@given`` test skips via the stub in ``conftest.py`` and the fixed-seed
+sweep below still runs everywhere.  The base seed comes from pytest's
+``--seed`` option so CI failures reproduce exactly.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import core as bind
+
+N_WORKFLOWS = 50        # fixed-seed sweep size
+SHAPE = (4, 4)
+
+PLAN_BACKENDS = ("serial", "threads", "fused")
+
+
+# ---------------------------------------------------------------------------
+# Op pool — module-level fns so identity (exec-cache signatures, fusion
+# fallback pins) is stable across replays
+# ---------------------------------------------------------------------------
+
+def _scale(a, s):
+    return a * s
+
+
+_scale.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _shift(a, s):
+    return a + s
+
+
+_shift.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _branchy(a, s):
+    # data-dependent host branch: never vmap/scan-traceable — exercises the
+    # fused backend's per-op fallback without changing semantics
+    if float(np.asarray(a).sum()) >= 0:
+        return a * s
+    return a + s
+
+
+_branchy.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _add(a, b):
+    return a + b
+
+
+_add.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _mix(a, b):
+    return a * 0.5 + b
+
+
+_mix.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _mm(a, b):
+    return a @ b
+
+
+_mm.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _combine(a, b):
+    return a + b
+
+
+UNARY = (_scale, _shift, _branchy)
+BINARY = (_add, _mix, _mm)
+CONSTS = (2, 2.0, 0.5, -1.5, True)
+
+
+# ---------------------------------------------------------------------------
+# Seeded workflow generator: a spec is pure data, applied identically for
+# every (mode, backend) replay
+# ---------------------------------------------------------------------------
+
+def make_spec(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(1, 5))
+    n_arrays = int(rng.integers(2, 6))
+    arrays = []
+    for _ in range(n_arrays):
+        arrays.append((
+            "jax" if rng.random() < 0.5 else "np",
+            int(rng.integers(0, n_nodes)),
+            rng.normal(size=SHAPE).round(3),
+        ))
+    n_ops = int(rng.integers(8, 30))
+    ops = []
+    n_handles = n_arrays
+    for _ in range(n_ops):
+        placement = int(rng.integers(0, n_nodes)) if rng.random() < 0.6 else None
+        form = rng.random()
+        target = int(rng.integers(0, n_handles))
+        if form < 0.35:         # unary with constant
+            ops.append(("unary", int(rng.integers(0, len(UNARY))), target,
+                        CONSTS[int(rng.integers(0, len(CONSTS)))], placement))
+        elif form < 0.75:       # binary over two handles
+            ops.append(("binary", int(rng.integers(0, len(BINARY))), target,
+                        int(rng.integers(0, n_handles)), placement))
+        elif form < 0.9:        # deep same-signature chain (chain fusion bait)
+            ops.append(("chain", int(rng.integers(0, 2)), target,
+                        CONSTS[int(rng.integers(0, len(CONSTS)))],
+                        int(rng.integers(3, 11)), placement))
+        else:                   # fresh output via wf.apply
+            ops.append(("apply", target, int(rng.integers(0, n_handles)),
+                        placement))
+            n_handles += 1
+    n_syncs = int(rng.integers(0, 3))
+    syncs = sorted({int(rng.integers(1, n_ops + 1)) for _ in range(n_syncs)})
+    return {"n_nodes": n_nodes, "arrays": arrays, "ops": ops, "syncs": syncs}
+
+
+def _record_op(wf, handles, spec_op) -> None:
+    form = spec_op[0]
+    placement = spec_op[-1]
+    ctx = bind.node(placement) if placement is not None else None
+    if ctx is not None:
+        ctx.__enter__()
+    try:
+        if form == "unary":
+            _, fi, target, const, _ = spec_op
+            wf.call(UNARY[fi], (handles[target], const),
+                    name=UNARY[fi].__name__)
+        elif form == "binary":
+            _, fi, target, other, _ = spec_op
+            wf.call(BINARY[fi], (handles[target], handles[other]),
+                    name=BINARY[fi].__name__)
+        elif form == "chain":
+            _, fi, target, const, depth, _ = spec_op
+            for _i in range(depth):
+                wf.call(UNARY[fi], (handles[target], const),
+                        name=UNARY[fi].__name__)
+        else:                   # apply: fresh output array
+            _, a, b, _ = spec_op
+            handles.append(wf.apply(_combine, [handles[a], handles[b]],
+                                    name="combine"))
+    finally:
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
+
+
+def run_spec(spec: dict, mode: str, backend: str):
+    import jax.numpy as jnp
+
+    ex = bind.LocalExecutor(spec["n_nodes"], mode=mode, backend=backend)
+    with bind.Workflow(n_nodes=spec["n_nodes"], executor=ex) as wf:
+        handles = []
+        for kind, rank, vals in spec["arrays"]:
+            payload = (jnp.asarray(vals, jnp.float32) if kind == "jax"
+                       else np.asarray(vals))
+            handles.append(wf.array(payload, f"a{len(handles)}", rank=rank))
+        syncs = set(spec["syncs"])
+        for i, spec_op in enumerate(spec["ops"]):
+            _record_op(wf, handles, spec_op)
+            if i + 1 in syncs:
+                wf.sync()       # incremental segment boundary
+        values = []
+        for h in handles:
+            try:
+                v = np.asarray(wf.fetch(h))
+                values.append((str(v.dtype), v))
+            except KeyError:    # version GC'd — must be GC'd in every backend
+                values.append(("<collected>", None))
+    return values, ex.stats, ex
+
+
+def _hop_multiset(stats):
+    """Transfer hops without round ids (interpreter ships in trace order)."""
+    return sorted((t.version_key, t.src, t.dst, t.nbytes, t.collective)
+                  for t in stats.transfers)
+
+
+def _assert_values_equal(ref, got, ctx: str) -> None:
+    assert len(ref) == len(got), ctx
+    for i, ((rd, rv), (gd, gv)) in enumerate(zip(ref, got)):
+        assert rd == gd, f"{ctx}: handle {i} dtype {rd} != {gd}"
+        if rv is not None:
+            np.testing.assert_array_equal(rv, gv,
+                                          err_msg=f"{ctx}: handle {i}")
+
+
+def check_conformance(seed: int) -> None:
+    spec = make_spec(seed)
+    runs = {}
+    for backend in PLAN_BACKENDS:
+        runs[backend] = run_spec(spec, "plan", backend)
+    interp_values, interp_stats, interp_ex = run_spec(spec, "interpret",
+                                                      "serial")
+    ref_values, ref_stats, _ref_ex = runs["serial"]
+
+    # -- value parity across all four replays --------------------------------
+    _assert_values_equal(ref_values, interp_values, f"seed {seed}: interpret")
+    for backend in PLAN_BACKENDS[1:]:
+        _assert_values_equal(ref_values, runs[backend][0],
+                             f"seed {seed}: {backend}")
+
+    # -- transfer stream: byte-identical among plan backends -----------------
+    for backend in PLAN_BACKENDS[1:]:
+        stats = runs[backend][1]
+        assert stats.transfers == ref_stats.transfers, (seed, backend)
+    # interpreter replays in trace order: same hops, rounds may differ
+    assert _hop_multiset(interp_stats) == _hop_multiset(ref_stats), seed
+    assert interp_stats.bytes_transferred == ref_stats.bytes_transferred
+    assert interp_stats.message_count == ref_stats.message_count
+
+    # -- stats invariants -----------------------------------------------------
+    all_runs = dict(runs, interpret=(interp_values, interp_stats, interp_ex))
+    for name, (_v, stats, ex) in all_runs.items():
+        assert stats.ops_executed == ref_stats.ops_executed, (seed, name)
+        assert stats.copies_elided == ref_stats.copies_elided, (seed, name)
+        # wavefronts accumulate across incremental run() segments and are
+        # identical in every mode (single source of truth in core.plan)
+        assert stats.wavefronts == ref_stats.wavefronts, (seed, name)
+        assert stats.wavefront_flops == ref_stats.wavefront_flops, (seed, name)
+        assert sum(stats.wavefronts) == stats.ops_executed, (seed, name)
+        # live peaks are monotone under GC: the end-state live set never
+        # exceeds the recorded peak
+        assert ex._live_bytes <= stats.peak_live_bytes, (seed, name)
+        assert ex._live_entries <= stats.peak_live_payloads, (seed, name)
+    for backend in PLAN_BACKENDS[1:]:
+        # concurrent backends stage a whole level's ships before committing,
+        # so they may only report *higher* true-concurrency peaks
+        stats = runs[backend][1]
+        assert stats.peak_live_bytes >= ref_stats.peak_live_bytes, (seed, backend)
+        assert stats.peak_live_payloads >= ref_stats.peak_live_payloads, \
+            (seed, backend)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-seed sweep (runs everywhere; base seed from pytest --seed)
+# ---------------------------------------------------------------------------
+
+def pytest_generate_tests(metafunc):
+    if "conformance_seed" in metafunc.fixturenames:
+        base = metafunc.config.getoption("--seed")
+        metafunc.parametrize(
+            "conformance_seed",
+            [base * N_WORKFLOWS + i for i in range(N_WORKFLOWS)])
+
+
+def test_conformance_fixed_seeds(conformance_seed):
+    check_conformance(conformance_seed)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis exploration (skips via the conftest stub when not installed)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_conformance_hypothesis(wf_seed):
+    check_conformance(wf_seed)
