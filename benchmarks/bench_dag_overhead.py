@@ -33,6 +33,15 @@
    The acceptance bar for the chain executor is ``chain_vs_level_speedup ≥
    1.3`` on this shape;
 
+3b. binary-op chain fusion (``bench="binop_chain_fused"``): a 64-level ×
+    8-wide *axpy* chain (``y += x * s``) with a per-level varying scale
+    constant — the multi-payload chain shape that dominates the paper's
+    Linear Algebra workloads.  The carry is the scan loop state, the
+    exterior ``x`` operands pass through whole, and the varying constants
+    are hoisted into one stacked xs array; still ONE ``jit(lax.scan)``
+    dispatch per chain.  Same ``chain_vs_level_speedup ≥ 1.3`` bar,
+    asserted by CI;
+
 4. multi-versioning memory overhead: peak live payloads vs the
    single-version working set, with and without version GC (checked in
    both executor modes).
@@ -50,6 +59,11 @@ from repro import core as bind
 @bind.op
 def scale(a: bind.InOut, s: bind.In):
     return a * s
+
+
+@bind.op
+def axpy(y: bind.InOut, x: bind.In, s: bind.In):
+    return y + x * s
 
 
 def _chain_exec_time(mode: str, tile: int, n_ops: int,
@@ -82,6 +96,28 @@ def _wide_exec_time(backend, width: int, depth: int, tile: int) -> float:
         wf.sync()
         for x in xs:            # materialise async jax results
             np.asarray(wf.fetch(x))
+        return time.perf_counter() - t0
+
+
+def _binop_chain_exec_time(backend, width: int, depth: int, tile: int) -> float:
+    """Seconds in ``sync()`` for a ``depth``-level × ``width``-wide axpy
+    chain with a per-level varying constant — the binary-op chain shape."""
+    import jax.numpy as jnp
+
+    ex = bind.LocalExecutor(1, mode="plan", backend=backend)
+    with bind.Workflow(executor=ex) as wf:
+        ys = [wf.array(jnp.ones((tile, tile), jnp.float32), f"y{i}")
+              for i in range(width)]
+        xs = [wf.array(jnp.full((tile, tile), 0.5, jnp.float32), f"x{i}")
+              for i in range(width)]
+        for lvl in range(depth):
+            s = 1.0 + 1e-4 * lvl        # varies per level: hoisted into xs
+            for y, x in zip(ys, xs):
+                axpy(y, x, s)
+        t0 = time.perf_counter()
+        wf.sync()
+        for y in ys:            # materialise async jax results
+            np.asarray(wf.fetch(y))
         return time.perf_counter() - t0
 
 
@@ -249,6 +285,46 @@ def run(quick: bool = False) -> list[dict]:
             # acceptance bar for the chain executor: >= 1.3x over per-level
             row["chain_vs_level_speedup"] = round(
                 level_us / max(chain_us, 1e-9), 2)
+        rows.append(row)
+
+    # 3b. binary-op chain fusion: the 64x8 axpy chain with per-level
+    #     varying constants.  Per-level fused dispatch pays one vmapped
+    #     call per level (constants stay call args, so every level shares
+    #     one executable); chain fusion hoists the constants into a
+    #     stacked xs array and pays ONE jit(lax.scan) call for the run.
+    binop_variants = {
+        "serial": bind.get_backend("serial"),
+        "fused_levels": bind.FusedBatchBackend(min_chain_levels=0),
+        "fused_chain": bind.FusedBatchBackend(),
+    }
+    for backend in binop_variants.values():        # warm compiles + caches
+        _binop_chain_exec_time(backend, width_c, depth_c, tile_c)
+    t_binop = {n: float("inf") for n in binop_variants}
+    binop_counts = (0, 0)
+    for _ in range(reps_c):                        # interleaved rounds again
+        for n, backend in binop_variants.items():
+            if n == "fused_chain":
+                c0, o0 = backend.chains_dispatched, backend.ops_chained
+            t_binop[n] = min(t_binop[n],
+                             _binop_chain_exec_time(backend, width_c,
+                                                    depth_c, tile_c))
+            if n == "fused_chain":
+                binop_counts = (backend.chains_dispatched - c0,
+                                backend.ops_chained - o0)
+    blevel_us = t_binop["fused_levels"] / n_ops_c * 1e6
+    bchain_us = t_binop["fused_chain"] / n_ops_c * 1e6
+    for name in binop_variants:
+        row = {
+            "bench": "binop_chain_fused", "variant": name,
+            "width": width_c, "depth": depth_c, "tile": tile_c,
+            "ops": n_ops_c,
+            "exec_us_per_op": round(t_binop[name] / n_ops_c * 1e6, 2),
+        }
+        if name == "fused_chain":
+            row["chains_dispatched"], row["ops_chained"] = binop_counts
+            # acceptance bar (CI-asserted): >= 1.3x over per-level fused
+            row["chain_vs_level_speedup"] = round(
+                blevel_us / max(bchain_us, 1e-9), 2)
         rows.append(row)
 
     # 4. versioning memory: GC keeps the working set O(1), not O(#versions) —

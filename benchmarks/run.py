@@ -60,7 +60,8 @@ def main() -> None:
 
     dag_rows = [r for r in all_rows
                 if r.get("bench") in ("dag_overhead", "backend_parallel",
-                                      "chain_fused", "versioning_memory")]
+                                      "chain_fused", "binop_chain_fused",
+                                      "versioning_memory")]
     if quick and dag_rows:
         # quick numbers are smoke signals, never trajectory data — keep the
         # committed BENCH_dag_overhead.json untouched

@@ -25,6 +25,11 @@ def scale(a: bind.InOut, s: bind.In):
     return a * s
 
 
+@bind.op
+def axpy(y: bind.InOut, x: bind.In, s: bind.In):
+    return y + x * s
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     A = rng.normal(size=(4, 4))
@@ -127,6 +132,23 @@ def main() -> None:
           f"{fb.chains_dispatched} scan dispatch(es); "
           f"peak live payloads {cex.stats.peak_live_payloads} "
           f"(interior versions never materialise)")
+
+    #     Binary-op chains fuse too: one operand is the scan carry, the
+    #     other payload rides along (passed through whole when every level
+    #     reads the same version, stacked into a scanned xs array when it
+    #     varies per level), and per-level *varying* constants are hoisted
+    #     into one stacked xs array — still ONE dispatch for the whole run.
+    fb2 = bind.FusedBatchBackend()
+    cex2 = bind.LocalExecutor(1, backend=fb2)
+    with bind.Workflow(executor=cex2) as wf:
+        y = wf.array(jnp.zeros((16, 16), jnp.float32), "y")
+        x = wf.array(jnp.ones((16, 16), jnp.float32), "x")
+        for lvl in range(64):
+            axpy(y, x, 1.0 + 0.01 * lvl)   # constant varies per level
+        np.asarray(wf.fetch(y))
+    print(f"binary-op chain: {fb2.ops_chained} axpy ops ran as "
+          f"{fb2.chains_dispatched} scan dispatch(es) "
+          f"(exterior operand passed through, constants hoisted as xs)")
 
     # 6. the topology cost model turns those transfers into simulated time,
     #    making collective/backend ablations comparable in seconds; give it

@@ -109,6 +109,29 @@ def materialize(payload):
     return payload
 
 
+def drop_versions(gc_keys, stores, where, key_bytes, live_b, live_c):
+    """Apply an op's GC drop list; returns updated ``(live_bytes, live_c)``.
+
+    The single source of the drop idiom every backend must apply: pop the
+    version from every holder rank's store, release lazy
+    :class:`BatchSlice` rows from their bucket (so
+    :func:`spill_dead_buckets` sees the same row-liveness regardless of
+    which backend executed the drop), and debit the live-footprint
+    accounting.  Callers mirroring the executor's counters into locals
+    pass and reassign them; others pass ``ex._live_bytes`` /
+    ``ex._live_entries`` directly.
+    """
+    for dk in gc_keys:
+        ranks = where.pop(dk)
+        for r in ranks:
+            dead = stores[r].pop(dk)
+            if type(dead) is BatchSlice:
+                dead.release()
+        live_c -= len(ranks)
+        live_b -= key_bytes.pop(dk, 0)
+    return live_b, live_c
+
+
 def spill_dead_buckets(ex) -> int:
     """Eagerly materialise surviving rows of partially-dead buckets.
 
@@ -236,11 +259,6 @@ def commit(ex, p, node, result, nbytes=None) -> None:
     if ex._live_entries > stats.peak_live_payloads:
         stats.peak_live_payloads = ex._live_entries
     if p.gc_keys:
-        for dk in p.gc_keys:
-            ranks = where.pop(dk)
-            for r in ranks:
-                payload = stores[r].pop(dk)
-                if type(payload) is BatchSlice:
-                    payload.release()
-            ex._live_entries -= len(ranks)
-            ex._live_bytes -= key_bytes.pop(dk, 0)
+        ex._live_bytes, ex._live_entries = drop_versions(
+            p.gc_keys, stores, where, key_bytes,
+            ex._live_bytes, ex._live_entries)

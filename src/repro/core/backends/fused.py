@@ -20,25 +20,34 @@ a non-fused consumer, a transfer, or a user ``fetch()``.
 
 **Chain fusion** goes one step further: when the plan detects a
 :class:`~repro.core.plan.ChainSlice` — consecutive levels of one signature
-whose dataflow is elementwise-aligned and whose interior versions live and
-die inside the run — the whole chain dispatches as a single
-``jit(lax.scan)`` executable (``vmap`` inside for width > 1): one dispatch
-per chain *segment* instead of per level, and interior levels never
-materialise at all.  The interior ops' commit/GC accounting is still
-replayed (virtually), so live-set stats stay byte-identical to serial.
+whose dataflow is elementwise-aligned on a carry operand and whose carried
+interior versions live and die inside the run — the whole chain dispatches
+as a single ``jit(lax.scan)`` executable (``vmap`` inside for width > 1):
+one dispatch per chain *segment* instead of per level, and interior levels
+never materialise at all.  Multi-payload signatures fuse too (binary-op
+chains — axpy runs, accumulate pipelines, residual updates): the carry is
+the loop state and the remaining operands are chain-exterior versions,
+passed through whole when every level reads the same version or stacked
+into a scanned ``xs`` array when they vary per level.  Constants that vary
+per level no longer break a chain either: uniform-typed scalar runs are
+hoisted into one stacked ``xs`` array (dtype-stable — the scan-trace carry
+invariance check rejects any hoist that would change the carry's dtype).
+The interior ops' commit/GC accounting is still replayed (virtually), so
+live-set stats stay byte-identical to serial.
 
 Eligibility is decided in two halves:
 
 * **static** (plan time, :attr:`ExecutionPlan.level_groups` /
   :attr:`ExecutionPlan.chains`): level-mates sharing ``(fn,
   constant-position mask)`` with a single written version; chains
-  additionally need one payload argument, aligned dataflow, and chain-local
-  interior lifetimes;
+  additionally need carry-aligned dataflow, chain-local carried lifetimes,
+  and chain-exterior remaining operands;
 * **dynamic** (replay time, here): members must agree on payload
-  shape/dtype and constant values, and every payload must already be a
-  ``jax.Array`` (or a :class:`BatchSlice` of one) — NumPy payloads are
-  never silently promoted to JAX (that would flip float64 → float32 under
-  default jax config), they take the per-op path instead.
+  shape/dtype, constants must be per-level-uniform and scan-invariant or
+  hoistable, and every payload must already be a ``jax.Array`` (or a
+  :class:`BatchSlice` of one) — NumPy payloads are never silently promoted
+  to JAX (that would flip float64 → float32 under default jax config),
+  they take the per-op path instead.
 
 Ops that fail either half — and every op of a ``fn`` whose vmap/scan trace
 ever raised — fall back to per-op (or per-level) dispatch, so the backend
@@ -58,11 +67,15 @@ than one in-flight bucket.
 
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
 
 from ..stats import _nbytes
 from .base import (Backend, BatchBucket, BatchSlice, apply_ships, commit,
-                   gather_args, materialize, resolve_call, spill_dead_buckets)
+                   drop_versions, gather_args, materialize, resolve_call,
+                   spill_dead_buckets)
 from .serial import SerialPlanBackend
 
 _PENDING = object()     # "not produced by a fused bucket" sentinel
@@ -71,7 +84,30 @@ _PENDING = object()     # "not produced by a fused bucket" sentinel
 FLAT = "flat"           # n_batch consecutive member payloads, stacked inside
 STACKED = "stacked"     # one pre-stacked buffer (batched residency pass-through)
 CONST = "const"         # one shared constant, broadcast by vmap
-SINGLE = "single"       # one array: a width-1 chain's carry
+SINGLE = "single"       # one array: a width-1 chain's carry or exterior
+XS = "xs"               # per-level varying exterior payloads, pre-stacked
+                        # to (n_levels, [width,] ...) and scanned as xs
+XS_CONST = "xs_const"   # per-level varying constants hoisted into one
+                        # stacked (n_levels,) array and scanned as xs
+
+# constant types eligible for xs hoisting: uniform-typed scalar runs whose
+# stacked array keeps serial's weak-promotion semantics (guarded further by
+# the scan-trace carry-invariance check at dispatch)
+_HOISTABLE = (bool, int, float, np.bool_, np.integer, np.floating)
+_I32_MIN, _I32_MAX = -(2 ** 31), 2 ** 31 - 1
+
+
+def _const_key(v):
+    """Identity of one constant for chain sharing/invariance decisions.
+
+    Type included (2, 2.0 and True compare equal but promote differently)
+    and, for float zeros, the sign bit: ``0.0 == -0.0`` yet replaying one
+    for the other diverges bitwise from serial, so signed-zero mixes must
+    read as *varying* (the hoisted xs path preserves -0.0 exactly).
+    """
+    if isinstance(v, (float, np.floating)) and v == 0.0:
+        return (type(v), v, math.copysign(1.0, v))
+    return (type(v), v)
 
 
 def _bucket_key(p, args):
@@ -141,30 +177,39 @@ class FusedBatchBackend(Backend):
         self.chains_dispatched = 0
         self.ops_chained = 0
 
-    def _chain_input(self, ex, plan, chain):
-        """The first chain member's current payload, or None if not yet
-        materialised (the chain starts mid-segment)."""
-        p = plan.schedule[chain.members[0][0]]
-        k = p.arg_keys[chain.arg_pos]
+    def _probe_payload(self, ex, k):
+        """Version ``k``'s resident payload, or None if not yet
+        materialised (produced mid-segment)."""
         if ex.n_nodes == 1:
             return ex._stores[0].get(k)
         ranks = ex._where.get(k)
         return ex._stores[next(iter(ranks))][k] if ranks else None
 
-    def _chain_maybe_viable(self, ex, plan, chain) -> bool:
+    def _chain_inputs_jax(self, ex, plan, chain) -> bool:
         """Cheap replay-time probe: could this chain possibly dispatch?
 
-        A chain whose input payload is already resident and *not* a jax
-        array can never pass the dynamic eligibility check (NumPy is never
-        promoted), so plans holding only such chains keep the wholesale
-        serial delegation — "zero overhead on non-jax chains".  An input
-        that does not exist yet (produced mid-segment) counts as viable.
+        Checks the first member's payload at *every* payload position
+        (carry and exteriors — O(arity), width-independent): a resident
+        non-jax operand can never pass the dynamic eligibility check
+        (NumPy is never promoted), so such chains skip the full
+        stage-and-gather work on every replay.  A payload that does not
+        exist yet counts as viable.
         """
-        if (chain.n_levels < self.min_chain_levels
-                or chain.fn in self._no_chain):
-            return False
-        a = self._chain_input(ex, plan, chain)
-        return a is None or type(a) is BatchSlice or isinstance(a, jax.Array)
+        p = plan.schedule[chain.members[0][0]]
+        for pos in chain.payload_positions:
+            a = self._probe_payload(ex, p.arg_keys[pos])
+            if not (a is None or type(a) is BatchSlice
+                    or isinstance(a, jax.Array)):
+                return False
+        return True
+
+    def _chain_maybe_viable(self, ex, plan, chain) -> bool:
+        """Viability gate for the wholesale-serial-delegation decision —
+        plans holding only never-dispatchable chains keep the delegation
+        ("zero overhead on non-jax chains")."""
+        return (chain.n_levels >= self.min_chain_levels
+                and chain.fn not in self._no_chain
+                and self._chain_inputs_jax(ex, plan, chain))
 
     def execute(self, ex, wf, plan) -> None:
         min_chain = self.min_chain_levels
@@ -273,14 +318,8 @@ class FusedBatchBackend(Backend):
             if live_c > peak_c:
                 peak_c = live_c
             if p.gc_keys:
-                for dk in p.gc_keys:
-                    ranks = where.pop(dk)
-                    for r in ranks:
-                        dead = stores[r].pop(dk)
-                        if type(dead) is BatchSlice:
-                            dead.release()
-                    live_c -= len(ranks)
-                    live_b -= key_bytes.pop(dk, 0)
+                live_b, live_c = drop_versions(
+                    p.gc_keys, stores, where, key_bytes, live_b, live_c)
         ex._live_bytes, ex._live_entries = live_b, live_c
         stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c
 
@@ -345,91 +384,193 @@ class FusedBatchBackend(Backend):
             result_nbytes[m] = nb
 
     # -- whole-chain fused dispatch -------------------------------------------
+    def _stored(self, ex, k):
+        """Resolve version ``k``'s payload from whichever rank holds it."""
+        if ex.n_nodes == 1:
+            return ex._stores[0][k]
+        return ex._stores[next(iter(ex._where[k]))][k]
+
+    @staticmethod
+    def _uniform_jax_aval(payloads):
+        """The common aval when every payload is jax (a ``jax.Array`` or a
+        :class:`BatchSlice` of one — NumPy et al are never promoted) and
+        all avals agree; None otherwise.  The one eligibility rule for
+        batch-stackable payload collections — carry columns, invariant
+        exterior columns and varying-exterior xs grids all go through it.
+        """
+        aval0 = None
+        for a in payloads:
+            if not (type(a) is BatchSlice or isinstance(a, jax.Array)):
+                return None
+            if aval0 is None:
+                aval0 = a.aval
+            elif a.aval != aval0:
+                return None
+        return aval0
+
+    def _payload_column(self, column):
+        """``(layout, call_args, sig_arg)`` for a width-column of payloads,
+        or None if any member is non-jax or the avals disagree."""
+        if self._uniform_jax_aval(column) is None:
+            return None
+        if len(column) == 1:
+            a = materialize(column[0])
+            return SINGLE, [a], a
+        buf = _common_buffer(column)
+        if buf is not None:
+            return STACKED, [buf], buf
+        concrete = [materialize(a) for a in column]
+        return FLAT, concrete, concrete[0]
+
     def _run_chain(self, ex, ops, plan, chain) -> bool:
         """Dispatch a :class:`~repro.core.plan.ChainSlice` as one scan call.
 
         Returns False (with **no state mutated**) when the dynamic half of
-        eligibility fails — non-jax payloads, mismatched member avals, or
-        unequal/unhashable constants — or when the scan trace raises (the
-        ``fn`` is then pinned to per-level dispatch); the caller falls back
-        to the per-level path for these levels.  On success, first-level
-        ships, the final level's commits, and every interior op's virtual
-        commit/GC accounting are replayed in plan order, so the transfer
-        stream and live-set stats are byte-identical to serial replay.
+        eligibility fails — non-jax payloads, mismatched member avals,
+        unhashable or unhoistable varying constants — or when the scan
+        trace raises (the ``fn`` is then pinned to per-level dispatch); the
+        caller falls back to the per-level path for these levels.  On
+        success, first-level ships, the final level's commits, and every
+        interior op's virtual commit/GC accounting are replayed in plan
+        order, so the transfer stream and live-set stats are byte-identical
+        to serial replay.
+
+        The carry (``chain.carry_pos``) is the scan loop state; other
+        payload positions are chain-exterior — passed through whole when
+        every level reads the same version (per member), or gathered,
+        stacked to ``(n_levels, [width,] ...)`` and scanned as ``xs`` when
+        they vary per level.  Constants that vary per level are hoisted
+        into a stacked ``xs`` array when the run is uniform-typed scalars
+        (the scan-trace carry-invariance check rejects any hoist that would
+        flip the carry dtype, so falling back is always sound).
         """
         schedule = plan.schedule
         width = chain.width
-        arg_pos = chain.arg_pos
+        carry_pos = chain.carry_pos
+        n_levels = chain.n_levels
         first = chain.members[0]
         # --- dynamic eligibility (pure reads; fall back leaves no trace) ---
         # cheap first probe before staging the whole level: a resident
-        # non-jax input can never dispatch (NumPy is never promoted)
-        a0 = self._chain_input(ex, plan, chain)
-        if not (type(a0) is BatchSlice or isinstance(a0, jax.Array)):
+        # non-jax operand at any payload position can never dispatch
+        # (NumPy is never promoted), and the carry must exist by now
+        if (not self._chain_inputs_jax(ex, plan, chain)
+                or self._probe_payload(
+                    ex, schedule[first[0]].arg_keys[carry_pos]) is None):
             return False
         staged = []
         for idx in first:
             p = schedule[idx]
             staged.append(gather_args(ex, p, ops[p.op_id]))
-        aval0 = None
-        column = []
-        for args in staged:
-            a = args[arg_pos]
-            if type(a) is BatchSlice or isinstance(a, jax.Array):
-                av = a.aval
+        # exterior payload positions: chain-invariant (every level reads the
+        # same version per member → one pass-through operand) or varying
+        # (gather the whole (level, member) grid for xs stacking)
+        exterior: dict[int, tuple] = {}     # pos -> ("inv", col) | ("xs", grid)
+        for e in chain.payload_positions:
+            if e == carry_pos:
+                continue
+            keys = [[schedule[m].arg_keys[e] for m in lvl]
+                    for lvl in chain.members]
+            if all(keys[l][j] == keys[0][j]
+                   for l in range(1, n_levels) for j in range(width)):
+                exterior[e] = ("inv", [staged[j][e] for j in range(width)])
             else:
-                return False            # NumPy et al: never promoted to jax
-            if aval0 is None:
-                aval0 = av
-            elif av != aval0:
-                return False
-            column.append(a)
-        # constants must agree across every op of the chain: they are
-        # scan-invariant (and vmap-broadcast) in the executable.  Read from
-        # the live ops — plans are cached across constant changes.
-        consts0 = None
+                exterior[e] = ("xs", [[self._stored(ex, k) for k in row]
+                                      for row in keys])
+        # constants: members of one level must agree (they are broadcast,
+        # not batched); across levels a position is scan-invariant or — if
+        # the values are uniform-typed scalars — hoisted into stacked xs.
+        # Read from the live ops: plans are cached across constant changes.
+        level_consts = []
         for level in chain.members:
+            typed0 = None
             for idx in level:
                 node = ops[schedule[idx].op_id]
-                consts = tuple((type(a[1]), a[1]) for a in node.args
-                               if a[0] is None)
-                if consts0 is None:
+                consts = tuple(a[1] for a in node.args if a[0] is None)
+                typed = tuple(_const_key(v) for v in consts)
+                if typed0 is None:
                     try:
-                        hash(consts)
+                        hash(typed)
                     except TypeError:
                         return False
-                    consts0 = consts
-                elif consts != consts0:
+                    typed0 = typed
+                    level_consts.append(consts)
+                elif typed != typed0:
+                    return False
+        hoisted: dict[int, np.ndarray] = {}     # const ordinal -> stacked xs
+        for ci in range(len(level_consts[0])):
+            v0 = level_consts[0][ci]
+            t = type(v0)
+            k0 = _const_key(v0)
+            if all(_const_key(lc[ci]) == k0 for lc in level_consts[1:]):
+                continue                        # scan-invariant: stays CONST
+            vals = [lc[ci] for lc in level_consts]
+            if not (isinstance(v0, _HOISTABLE)
+                    and all(type(v) is t for v in vals)):
+                return False
+            if (isinstance(v0, (int, np.integer))
+                    and not isinstance(v0, (bool, np.bool_))
+                    and not all(_I32_MIN <= int(v) <= _I32_MAX
+                                for v in vals)):
+                return False    # would wrap under the default int32 config
+            arr = np.asarray(vals)
+            if arr.dtype == object:
+                return False
+            hoisted[ci] = arr
+        if hoisted:
+            # a hoisted xs array must promote *into* the carry dtype —
+            # serial's weak Python scalars never upcast the carry, so a
+            # flipping hoist can only diverge (and its scan trace would
+            # raise, wrongly pinning the fn in _no_chain for chains that
+            # fuse fine with invariant constants).  Reject pre-dispatch:
+            # plain per-level fallback, no pin.
+            carry_dtype = staged[0][carry_pos].dtype
+            for arr in hoisted.values():
+                xs_dtype = jax.dtypes.canonicalize_dtype(arr.dtype)
+                if jax.numpy.promote_types(carry_dtype, xs_dtype) != \
+                        carry_dtype:
                     return False
         # --- resolve + dispatch (state untouched until the call succeeds) ---
         p0 = schedule[first[0]]
-        args0 = staged[0]
         layout = []
         call_args = []
         sig_args = []
+        ci = 0
         for i, k in enumerate(p0.arg_keys):
             if k is None:
-                layout.append(CONST)
-                call_args.append(args0[i])
-                sig_args.append(args0[i])
-            elif width == 1:
-                a = materialize(column[0])
-                layout.append(SINGLE)
-                call_args.append(a)
-                sig_args.append(a)
-            else:
-                buf = _common_buffer(column)
-                if buf is not None:
-                    layout.append(STACKED)
-                    call_args.append(buf)
-                    sig_args.append(buf)
+                if ci in hoisted:
+                    xs = jax.numpy.asarray(hoisted[ci])
+                    layout.append(XS_CONST)
+                    call_args.append(xs)
+                    sig_args.append(xs)
                 else:
-                    concrete = [materialize(a) for a in column]
-                    layout.append(FLAT)
-                    call_args.extend(concrete)
-                    sig_args.append(concrete[0])
+                    layout.append(CONST)
+                    call_args.append(level_consts[0][ci])
+                    sig_args.append(level_consts[0][ci])
+                ci += 1
+            elif i == carry_pos or exterior[i][0] == "inv":
+                column = ([staged[j][carry_pos] for j in range(width)]
+                          if i == carry_pos else exterior[i][1])
+                resolved = self._payload_column(column)
+                if resolved is None:
+                    return False
+                lay, cargs, sig = resolved
+                layout.append(lay)
+                call_args.extend(cargs)
+                sig_args.append(sig)
+            else:                               # varying exterior: stack xs
+                flat_grid = [a for row in exterior[i][1] for a in row]
+                if self._uniform_jax_aval(flat_grid) is None:
+                    return False
+                flat = [materialize(a) for a in flat_grid]
+                stacked = jax.numpy.stack(flat)
+                if width > 1:
+                    stacked = stacked.reshape(
+                        (n_levels, width) + stacked.shape[1:])
+                layout.append(XS)
+                call_args.append(stacked)
+                sig_args.append(stacked)
         call = ex._exec_cache.lookup_chain(
-            chain.fn, tuple(layout), width, chain.n_levels, sig_args)
+            chain.fn, tuple(layout), width, n_levels, carry_pos, sig_args)
         try:
             out = call(*call_args)
         except (jax.errors.JAXTypeError, TypeError, ValueError):
@@ -440,7 +581,7 @@ class FusedBatchBackend(Backend):
             self._no_chain.add(chain.fn)
             return False
         self.chains_dispatched += 1
-        self.ops_chained += width * chain.n_levels
+        self.ops_chained += width * n_levels
         # --- first-level ships (interior levels are ship-free by plan) ---
         for idx in first:
             p = schedule[idx]
@@ -464,7 +605,7 @@ class FusedBatchBackend(Backend):
         peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
         first_ord = chain.first_level
         lo = plan.levels[first_ord][0]
-        final_lo, hi = plan.levels[first_ord + chain.n_levels - 1]
+        final_lo, hi = plan.levels[first_ord + n_levels - 1]
         for idx in range(lo, hi):
             p = schedule[idx]
             if idx >= final_lo:          # final level: real commit
@@ -485,18 +626,19 @@ class FusedBatchBackend(Backend):
                 peak_b = live_b
             if live_c > peak_c:
                 peak_c = live_c
-            for dk in p.gc_keys:
-                if dk in interior:       # virtual row: lived inside the scan
-                    live_b -= nb
-                    live_c -= 1
-                else:
-                    ranks = where.pop(dk)
-                    for r in ranks:
-                        dead = stores[r].pop(dk)
-                        if type(dead) is BatchSlice:
-                            dead.release()
-                    live_c -= len(ranks)
-                    live_b -= key_bytes.pop(dk, 0)
+            if p.gc_keys:
+                real = None
+                for dk in p.gc_keys:
+                    if dk in interior:   # virtual row: lived inside the scan
+                        live_b -= nb
+                        live_c -= 1
+                    elif real is None:
+                        real = [dk]
+                    else:
+                        real.append(dk)
+                if real:                 # exterior/carry-input: real drop
+                    live_b, live_c = drop_versions(
+                        real, stores, where, key_bytes, live_b, live_c)
         if bucket is not None:
             ex._lazy_buckets.add(bucket)
         ex._live_bytes, ex._live_entries = live_b, live_c

@@ -7,9 +7,9 @@ coordination overhead here).  State is mirrored into locals for the tight
 loop and written back once at the end; the structured per-op primitives in
 :mod:`.base` compute the exact same transitions.
 
-Drop-list parity: both GC sites below apply the exact drop-list semantics
-the fused backend's batched residency relies on — a dropped payload that is
-a lazy :class:`~.base.BatchSlice` row is released from its bucket, so the
+Drop-list parity: both GC sites below go through :func:`~.base.drop_versions`
+— the one shared drop idiom — so a dropped payload that is a lazy
+:class:`~.base.BatchSlice` row is released from its bucket and the
 segment-end spill pass (:func:`~.base.spill_dead_buckets`) sees the same
 row-liveness regardless of which backend executed the drop.
 """
@@ -17,7 +17,7 @@ row-liveness regardless of which backend executed the drop.
 from __future__ import annotations
 
 from ..stats import TransferEvent, _nbytes
-from .base import Backend, BatchSlice
+from .base import Backend, drop_versions
 
 
 class SerialPlanBackend(Backend):
@@ -86,14 +86,9 @@ class SerialPlanBackend(Backend):
                     if live_c > peak_c:
                         peak_c = live_c
                     if p.gc_keys:
-                        for dk in p.gc_keys:
-                            ranks = where.pop(dk)
-                            for r in ranks:
-                                dead = stores[r].pop(dk)
-                                if type(dead) is BatchSlice:
-                                    dead.release()
-                            live_c -= len(ranks)
-                            live_b -= key_bytes.pop(dk, 0)
+                        live_b, live_c = drop_versions(
+                            p.gc_keys, stores, where, key_bytes,
+                            live_b, live_c)
                     continue
                 # a tuple result for one write: generic handling below
             else:
@@ -148,14 +143,8 @@ class SerialPlanBackend(Backend):
             if live_c > peak_c:
                 peak_c = live_c
             if p.gc_keys:
-                for dk in p.gc_keys:
-                    ranks = where.pop(dk)
-                    for r in ranks:
-                        dead = stores[r].pop(dk)
-                        if type(dead) is BatchSlice:
-                            dead.release()
-                    live_c -= len(ranks)
-                    live_b -= key_bytes.pop(dk, 0)
+                live_b, live_c = drop_versions(
+                    p.gc_keys, stores, where, key_bytes, live_b, live_c)
 
         ex._live_bytes, ex._live_entries = live_b, live_c
         stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c

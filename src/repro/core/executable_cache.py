@@ -87,6 +87,38 @@ class ExecutableCache:
         self._entries[key] = entry
         return entry
 
+    def _resolve(self, key: tuple, build: Callable) -> Callable:
+        """Memoise-or-build scaffolding shared by the batched/chain paths.
+
+        On a miss, ``build()`` produces the jitted executable and the entry
+        installed is a *first-call validator*: if the first replay's trace
+        raises, the entry is evicted (a broken executable is never replayed
+        — the caller falls back and should stop requesting this shape);
+        on success it self-replaces with the raw jitted callable.
+        """
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            return entry
+        self.misses += 1
+        if len(self._entries) >= MAX_ENTRIES:
+            self._entries.clear()
+        jitted = build()
+        cache = self
+
+        def first_call(*call_args):
+            try:
+                out = jitted(*call_args)
+            except Exception:
+                cache._entries.pop(key, None)
+                raise
+            cache.compiles += 1
+            cache._entries[key] = jitted
+            return out
+
+        self._entries[key] = first_call
+        return first_call
+
     def lookup_vmapped(self, fn: Callable, layout: tuple, n_batch: int,
                        sig_args) -> Callable:
         """Resolve the *batched* executable for ``n_batch`` fused ops.
@@ -109,118 +141,103 @@ class ExecutableCache:
         entry is evicted so a broken executable is never replayed.
         """
         key = (fn, layout, n_batch) + tuple(_abstract(a) for a in sig_args)
-        entry = self._entries.get(key)
-        if entry is not None:
-            self.hits += 1
-            return entry
-        self.misses += 1
-        if len(self._entries) >= MAX_ENTRIES:
-            self._entries.clear()
         in_axes = tuple(None if lay == "const" else 0 for lay in layout)
 
-        def stacked_call(*flat):
-            args = []
-            pos = 0
-            for lay in layout:
-                if lay == "flat":
-                    args.append(jax.numpy.stack(flat[pos:pos + n_batch]))
-                    pos += n_batch
-                else:               # "stacked" buffer or "const"
-                    args.append(flat[pos])
-                    pos += 1
-            out = jax.vmap(fn, in_axes=in_axes)(*args)
-            if isinstance(out, tuple):
-                out = out[0]    # fused ops write exactly one payload
-            return out
+        def build():
+            def stacked_call(*flat):
+                args = []
+                pos = 0
+                for lay in layout:
+                    if lay == "flat":
+                        args.append(jax.numpy.stack(flat[pos:pos + n_batch]))
+                        pos += n_batch
+                    else:           # "stacked" buffer or "const"
+                        args.append(flat[pos])
+                        pos += 1
+                out = jax.vmap(fn, in_axes=in_axes)(*args)
+                if isinstance(out, tuple):
+                    out = out[0]    # fused ops write exactly one payload
+                return out
 
-        batched = jax.jit(stacked_call)
-        cache = self
+            return jax.jit(stacked_call)
 
-        def first_batched_call(*call_args):
-            try:
-                out = batched(*call_args)
-            except Exception:
-                cache._entries.pop(key, None)
-                raise
-            cache.compiles += 1
-            cache._entries[key] = batched
-            return out
-
-        self._entries[key] = first_batched_call
-        return first_batched_call
+        return self._resolve(key, build)
 
     def lookup_chain(self, fn: Callable, layout: tuple, n_batch: int,
-                     n_levels: int, sig_args) -> Callable:
+                     n_levels: int, carry_pos: int, sig_args) -> Callable:
         """Resolve the *chain* executable: ``n_levels`` consecutive
         applications of ``fn`` fused into one ``jit(lax.scan)`` dispatch.
 
-        The chain carry is the single payload position of ``layout`` —
-        ``"single"`` (one array, ``n_batch == 1``), ``"flat"`` (``n_batch``
-        member payloads stacked inside the jitted body) or ``"stacked"``
-        (one pre-stacked buffer passed through whole).  ``"const"``
-        positions are scan-invariant: they stay call arguments (buckets
-        differing only in constant *values* share the executable) and are
-        closed over by the scan body, broadcast by ``vmap`` when
-        ``n_batch > 1``.  The entry returns the **final** level's stacked
-        result — a chain of ``n_levels × n_batch`` ops costs exactly one
-        dispatch, and interior levels never materialise.
+        ``carry_pos`` names the payload position threaded through the scan
+        as the loop state; its layout is ``"single"`` (one array,
+        ``n_batch == 1``), ``"flat"`` (``n_batch`` member payloads stacked
+        inside the jitted body) or ``"stacked"`` (one pre-stacked buffer
+        passed through whole).  Other positions:
+
+        * ``"single"`` / ``"flat"`` / ``"stacked"`` at a non-carry position
+          — a chain-invariant *exterior* payload (a binary-op chain's other
+          operand when every level reads the same version): closed over by
+          the scan body, batched by ``vmap`` when ``n_batch > 1``;
+        * ``"xs"`` — a per-level *varying* exterior payload, pre-stacked to
+          ``(n_levels, [n_batch,] ...)`` and scanned as ``xs`` (each step
+          consumes its own level's slice);
+        * ``"xs_const"`` — per-level varying constants hoisted into one
+          stacked ``(n_levels,)`` array and scanned as ``xs`` (broadcast
+          across the batch);
+        * ``"const"`` — one scan-invariant constant, kept a call argument
+          so chains differing only in constant *values* share the
+          executable (hoisted ``"xs_const"`` arrays share it too — the key
+          sees their aval, not their values).
+
+        The entry returns the **final** level's stacked result — a chain of
+        ``n_levels × n_batch`` ops costs exactly one dispatch, and interior
+        levels never materialise.
 
         ``lax.scan`` requires the carry aval to be loop-invariant, so a
         chain whose ``fn`` changes shape/dtype (or is not traceable) raises
         at trace time — the caller falls back to per-level dispatch and the
         entry is evicted so a broken executable is never replayed.
         """
-        key = ((fn, "chain", layout, n_batch, n_levels)
+        key = ((fn, "chain", layout, n_batch, n_levels, carry_pos)
                + tuple(_abstract(a) for a in sig_args))
-        entry = self._entries.get(key)
-        if entry is not None:
-            self.hits += 1
-            return entry
-        self.misses += 1
-        if len(self._entries) >= MAX_ENTRIES:
-            self._entries.clear()
-        payload_pos = next(i for i, lay in enumerate(layout) if lay != "const")
-        in_axes = tuple(None if lay == "const" else 0 for lay in layout)
+        xs_positions = tuple(i for i, lay in enumerate(layout)
+                             if lay in ("xs", "xs_const"))
+        in_axes = tuple(None if lay in ("const", "xs_const") else 0
+                        for lay in layout)
         body = fn if n_batch == 1 else jax.vmap(fn, in_axes=in_axes)
 
-        def chain_call(*flat):
-            args = []
-            pos = 0
-            for lay in layout:
-                if lay == "flat":
-                    args.append(jax.numpy.stack(flat[pos:pos + n_batch]))
-                    pos += n_batch
-                else:            # "single" array, "stacked" buffer or "const"
-                    args.append(flat[pos])
-                    pos += 1
+        def build():
+            def chain_call(*flat):
+                args = []
+                pos = 0
+                for lay in layout:
+                    if lay == "flat":
+                        args.append(jax.numpy.stack(flat[pos:pos + n_batch]))
+                        pos += n_batch
+                    else:       # "single"/"stacked"/"const"/"xs"/"xs_const"
+                        args.append(flat[pos])
+                        pos += 1
 
-            def step(carry, _):
-                call_args = list(args)
-                call_args[payload_pos] = carry
-                out = body(*call_args)
-                if isinstance(out, tuple):
-                    out = out[0]    # chain ops write exactly one payload
-                return out, None
+                def step(carry, xs_slice):
+                    call_args = list(args)
+                    call_args[carry_pos] = carry
+                    if xs_positions:
+                        for p, x in zip(xs_positions, xs_slice):
+                            call_args[p] = x
+                    out = body(*call_args)
+                    if isinstance(out, tuple):
+                        out = out[0]    # chain ops write exactly one payload
+                    return out, None
 
-            final, _ = jax.lax.scan(step, args[payload_pos], None,
-                                    length=n_levels)
-            return final
+                xs = (tuple(args[p] for p in xs_positions)
+                      if xs_positions else None)
+                final, _ = jax.lax.scan(step, args[carry_pos], xs,
+                                        length=n_levels)
+                return final
 
-        chained = jax.jit(chain_call)
-        cache = self
+            return jax.jit(chain_call)
 
-        def first_chain_call(*call_args):
-            try:
-                out = chained(*call_args)
-            except Exception:
-                cache._entries.pop(key, None)
-                raise
-            cache.compiles += 1
-            cache._entries[key] = chained
-            return out
-
-        self._entries[key] = first_chain_call
-        return first_chain_call
+        return self._resolve(key, build)
 
     # -- entry construction ---------------------------------------------------
     def _build(self, key: tuple, fn: Callable, args) -> Callable:

@@ -86,33 +86,41 @@ class ChainSlice:
 
     The static (plan-time) half of chain-fusion eligibility: every level of
     the run holds exactly ``width`` ops sharing one ``(fn, constant-position
-    mask)`` signature with a single payload argument (``arg_pos``), and the
-    level-to-level dataflow is *elementwise aligned* — op ``j`` of level
-    ``i+1`` reads exactly the version written by op ``j`` of level ``i`` and
-    is its sole (final) reader, so every interior version lives and dies
-    inside the chain.  Interior levels are guaranteed ship-free (an aligned
-    producer/consumer pair always shares a rank).
+    mask)`` signature with ``k ≥ 1`` payload arguments
+    (``payload_positions``), and the level-to-level dataflow is
+    *elementwise aligned* on one of them — the **carry** (``carry_pos``):
+    op ``j`` of level ``i+1`` reads, at ``carry_pos``, exactly the version
+    written by op ``j`` of level ``i`` and is its sole (final) reader, so
+    every carried interior version lives and dies inside the chain.  The
+    remaining payload positions are **chain-exterior**: they read versions
+    produced *before* the chain (never a version written inside it), so a
+    chain-aware backend can gather them up front — per-level varying
+    exteriors are stacked and scanned as ``xs``.  Interior levels are
+    guaranteed ship-free (an aligned producer/consumer pair always shares a
+    rank, and exterior operands of interior ops are already resident).
 
     ``members`` holds the aligned schedule indices, one tuple per level:
     ``members[i+1][j]`` consumes ``members[i][j]``.  ``interior_keys`` are
-    the version keys written by all but the last level — a chain-aware
-    backend never materialises them, but must still replay their (virtual)
-    commit/GC accounting so live-set stats stay byte-identical to serial
-    replay.  The dynamic half (payload avals, constant equality, scan
-    traceability) is resolved at replay time, since plans are
-    shape-oblivious and constants are read from the live ops.
+    the carried version keys written by all but the last level — a
+    chain-aware backend never materialises them, but must still replay
+    their (virtual) commit/GC accounting so live-set stats stay
+    byte-identical to serial replay.  The dynamic half (payload avals,
+    constant equality/hoistability, scan traceability) is resolved at
+    replay time, since plans are shape-oblivious and constants are read
+    from the live ops.
     """
 
-    __slots__ = ("members", "width", "first_level", "fn", "arg_pos",
-                 "interior_keys")
+    __slots__ = ("members", "width", "first_level", "fn", "carry_pos",
+                 "payload_positions", "interior_keys")
 
-    def __init__(self, members, width, first_level, fn, arg_pos,
-                 interior_keys):
+    def __init__(self, members, width, first_level, fn, carry_pos,
+                 payload_positions, interior_keys):
         self.members = members
         self.width = width
         self.first_level = first_level   # ordinal into ExecutionPlan.levels
         self.fn = fn
-        self.arg_pos = arg_pos
+        self.carry_pos = carry_pos
+        self.payload_positions = payload_positions
         self.interior_keys = interior_keys
 
     @property
@@ -197,18 +205,20 @@ def _signature_groups(schedule, lo: int, hi: int) -> tuple[tuple[int, ...], ...]
 
 
 def _chain_level_info(schedule, lo: int, hi: int):
-    """``(fn, const-mask, payload-arg position)`` if the whole level shares
+    """``(fn, const-mask, payload positions)`` if the whole level shares
     one chain-eligible signature, else None.
 
-    Chain-eligible: every op is ``simple_write`` with exactly one payload
-    argument (the chain carry) and the same ``(fn, constant-position mask)``.
+    Chain-eligible: every op is ``simple_write`` with at least one payload
+    argument (one of which may carry the chain) and the same ``(fn,
+    constant-position mask)``.
     """
     p0 = schedule[lo]
     if not p0.simple_write:
         return None
     mask = tuple(k is None for k in p0.arg_keys)
-    payload_positions = [i for i, is_const in enumerate(mask) if not is_const]
-    if len(payload_positions) != 1:
+    payload_positions = tuple(
+        i for i, is_const in enumerate(mask) if not is_const)
+    if not payload_positions:
         return None
     fn = p0.fn
     for idx in range(lo + 1, hi):
@@ -216,18 +226,47 @@ def _chain_level_info(schedule, lo: int, hi: int):
         if (not p.simple_write or p.fn is not fn
                 or tuple(k is None for k in p.arg_keys) != mask):
             return None
-    return fn, mask, payload_positions[0]
+    return fn, mask, payload_positions
+
+
+def _align_level(schedule, nlo, nhi, carry_pos, wk_pos, payload_positions,
+                 chain_writes):
+    """Aligned member tuple for ``[nlo, nhi)`` under ``carry_pos``, or None.
+
+    An op aligns when its carry operand is the version written by exactly
+    one previous-level member, it is that version's sole (final) reader,
+    it needs no ships, and every *other* payload operand reads a version
+    produced outside the chain (``chain_writes`` holds everything written
+    inside it so far — an exterior reading an interior version would need
+    that version materialised, which a fused chain never does).
+    """
+    aligned: list = [None] * (nhi - nlo)
+    for idx in range(nlo, nhi):
+        p = schedule[idx]
+        k = p.arg_keys[carry_pos]
+        pos = wk_pos.get(k)
+        if (p.ships or pos is None or aligned[pos] is not None
+                or k not in p.gc_keys):
+            return None
+        for e in payload_positions:
+            if e != carry_pos and p.arg_keys[e] in chain_writes:
+                return None
+        aligned[pos] = idx
+    return tuple(aligned)
 
 
 def _signature_chains(schedule, levels) -> tuple:
     """Maximal :class:`ChainSlice` runs over consecutive levels.
 
     Greedy left-to-right scan: a chain starts at any level whose ops all
-    share one single-payload signature, and extends while the next level
-    (same signature, same width, no ships) is elementwise-aligned with it —
-    op ``j`` reads the version written by aligned op ``j`` of the previous
-    level *and* carries it on its GC drop list (sole final reader), so every
-    interior version is private to the chain.
+    share one chain-eligible signature, and extends while the next level
+    (same signature, same width, no ships) is elementwise-aligned with it
+    on some payload position — op ``j`` reads the version written by
+    aligned op ``j`` of the previous level *and* carries it on its GC drop
+    list (sole final reader), so every carried version is private to the
+    chain.  The first transition that aligns locks the carry position for
+    the rest of the run (a chain has ONE carry); the remaining payload
+    positions must read chain-exterior versions at every level.
     """
     chains = []
     n = len(levels)
@@ -237,10 +276,12 @@ def _signature_chains(schedule, levels) -> tuple:
         if info is None:
             li += 1
             continue
-        fn, mask, arg_pos = info
+        fn, mask, payload_positions = info
         lo, hi = levels[li]
         width = hi - lo
         members = [tuple(range(lo, hi))]
+        chain_writes = {schedule[m].write_keys[0] for m in members[0]}
+        carry_pos = None
         lj = li + 1
         while lj < n:
             nlo, nhi = levels[lj]
@@ -251,27 +292,25 @@ def _signature_chains(schedule, levels) -> tuple:
                 break
             prev = members[-1]
             wk_pos = {schedule[m].write_keys[0]: j for j, m in enumerate(prev)}
-            aligned: list = [None] * width
-            ok = True
-            for idx in range(nlo, nhi):
-                p = schedule[idx]
-                k = p.arg_keys[arg_pos]
-                pos = wk_pos.get(k)
-                if (p.ships or pos is None or aligned[pos] is not None
-                        or k not in p.gc_keys):
-                    ok = False
+            aligned = None
+            for c in ((carry_pos,) if carry_pos is not None
+                      else payload_positions):
+                aligned = _align_level(schedule, nlo, nhi, c, wk_pos,
+                                       payload_positions, chain_writes)
+                if aligned is not None:
+                    carry_pos = c
                     break
-                aligned[pos] = idx
-            if not ok:
+            if aligned is None:
                 break
-            members.append(tuple(aligned))
+            members.append(aligned)
+            chain_writes.update(schedule[m].write_keys[0] for m in aligned)
             lj += 1
         if len(members) >= 2:
             interior = frozenset(
                 schedule[m].write_keys[0]
                 for lvl in members[:-1] for m in lvl)
-            chains.append(ChainSlice(tuple(members), width, li, fn, arg_pos,
-                                     interior))
+            chains.append(ChainSlice(tuple(members), width, li, fn,
+                                     carry_pos, payload_positions, interior))
             li = lj
         else:
             li += 1

@@ -73,7 +73,7 @@ def test_plan_detects_signature_chain():
         for prev_idx, next_idx in zip(lvl, nxt):
             p = sched[next_idx]
             k = sched[prev_idx].write_keys[0]
-            assert p.arg_keys[chain.arg_pos] == k and k in p.gc_keys
+            assert p.arg_keys[chain.carry_pos] == k and k in p.gc_keys
 
 
 def test_chain_broken_by_signature_change_mid_run():
@@ -249,9 +249,10 @@ def test_chain_executable_shared_across_constant_values():
     np.testing.assert_allclose(run(2.0), np.full((4, 4), 2.0**6), rtol=1e-5)
 
 
-def test_chain_with_varying_constants_falls_back_per_level():
-    """Constants are scan-invariant in the chain executable; a chain whose
-    levels use different constant values must fall back (values first)."""
+def test_chain_with_varying_constants_fuses_via_hoisting():
+    """A chain whose levels use different constant values used to fall back
+    per level; the constants are now hoisted into a stacked xs array and
+    the whole run still dispatches as ONE scan."""
     fb = bind.FusedBatchBackend()
     ex = bind.LocalExecutor(1, backend=fb)
     consts = [1.5, 2.0, 3.0, 0.5]
@@ -262,6 +263,72 @@ def test_chain_with_varying_constants_falls_back_per_level():
         out = np.asarray(wf.fetch(a))
     np.testing.assert_allclose(out, np.full((3, 3), float(np.prod(consts))),
                                rtol=1e-5)
+    assert fb.chains_dispatched == 1 and fb.ops_chained == len(consts)
+
+
+def test_dtype_flipping_hoist_does_not_poison_fn():
+    """A hoist that would upcast the carry (f16 carry × f32 xs constants;
+    serial's weak Python scalars keep f16) is rejected *before* dispatch —
+    a plain per-level fallback, never a ``_no_chain`` pin — so a later
+    chain of the same fn with an invariant constant still fuses."""
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((3, 3), jnp.float16), "a")
+        for c in (1.5, 2.0, 0.5):       # varying: would hoist to f32 xs
+            scale(a, c)
+        out = wf.fetch(a)
+    assert out.dtype == np.dtype("float16")
+    np.testing.assert_allclose(np.asarray(out), np.full((3, 3), 1.5))
+    assert fb.chains_dispatched == 0
+    assert scale.__wrapped__ not in fb._no_chain
+    ex2 = bind.LocalExecutor(1, backend=fb)     # same backend instance
+    with bind.Workflow(executor=ex2) as wf:
+        b = wf.array(jnp.ones((3, 3), jnp.float32), "b")
+        for _ in range(3):
+            scale(b, 2.0)               # invariant constant: must still fuse
+        out2 = np.asarray(wf.fetch(b))
+    assert fb.chains_dispatched == 1
+    np.testing.assert_allclose(out2, np.full((3, 3), 8.0))
+
+
+def test_signed_zero_constants_are_not_conflated():
+    """0.0 == -0.0, but replaying one for the other diverges bitwise from
+    serial (x * -0.0 flips the zero's sign).  A signed-zero mix must read
+    as *varying* — hoisted into xs (which preserves -0.0) — not collapsed
+    onto level 0's constant."""
+    consts = [0.0, -0.0, 0.0]
+
+    def run(backend):
+        ex = bind.LocalExecutor(1, backend=backend)
+        with bind.Workflow(executor=ex) as wf:
+            a = wf.array(jnp.ones((3, 3), jnp.float32), "a")
+            for c in consts:
+                scale(a, c)
+            return np.asarray(wf.fetch(a))
+
+    fb = bind.FusedBatchBackend()
+    fused_out = run(fb)
+    serial_out = run("serial")
+    # assert_array_equal alone treats 0.0 == -0.0: compare sign bits too
+    np.testing.assert_array_equal(fused_out, serial_out)
+    np.testing.assert_array_equal(np.signbit(fused_out),
+                                  np.signbit(serial_out))
+
+
+def test_chain_with_mixed_type_constants_falls_back():
+    """Hoisting requires a uniform-typed scalar run — mixing int/float/bool
+    constants would change promotion semantics, so the chain falls back
+    per level (values first)."""
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    consts = [2, 2.0, True, 3]
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((3, 3), jnp.float32), "a")
+        for c in consts:
+            scale(a, c)
+        out = np.asarray(wf.fetch(a))
+    np.testing.assert_allclose(out, np.full((3, 3), 12.0), rtol=1e-5)
     assert fb.chains_dispatched == 0
 
 
@@ -357,6 +424,298 @@ def test_fetch_releases_row_then_segment_spill_drops_buffer():
         for payload in ex._stores[0].values():
             assert type(payload) is not BatchSlice
         assert _actual_residency(ex) == ex._live_bytes
+
+
+# ---------------------------------------------------------------------------
+# Binary-op (multi-payload) chains: carry + chain-exterior operands
+# ---------------------------------------------------------------------------
+
+def _add_c0(y, x):
+    return y + x
+
+
+_add_c0.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _add_c1(x, y):
+    return x + y
+
+
+_add_c1.__bind_intents__ = (bind.In, bind.InOut)
+
+
+def _axpy3(y, x, s):
+    return y + x * s
+
+
+_axpy3.__bind_intents__ = (bind.InOut, bind.In, bind.In)
+
+
+def _pinned_heads(*handles):
+    return {h.ref.head.key for h in handles}
+
+
+def test_plan_detects_binary_chain_with_exteriors():
+    width, depth = 3, 5
+    with bind.Workflow() as wf:
+        ys = [wf.array(np.ones((4, 4)), f"y{i}") for i in range(width)]
+        xs = [wf.array(np.ones((4, 4)), f"x{i}") for i in range(width)]
+        for _ in range(depth):
+            for y, x in zip(ys, xs):
+                wf.call(_add_c0, (y, x), name="add")
+        wf._synced_upto = len(wf.ops)   # record only
+    plan = bind.build_plan(wf, 0, len(wf.ops), 1, "tree",
+                           {v: {r} for v, (_, r) in wf.initial.items()},
+                           _pinned_heads(*(ys + xs)))
+    assert len(plan.chains) == 1
+    chain = plan.chains[0]
+    assert chain.carry_pos == 0 and chain.payload_positions == (0, 1)
+    assert chain.width == width and chain.n_levels == depth
+    assert len(chain.interior_keys) == width * (depth - 1)
+    # the exterior operand never reads a version written inside the chain
+    sched = plan.schedule
+    for lvl in chain.members:
+        for m in lvl:
+            assert sched[m].arg_keys[1] not in chain.interior_keys
+
+
+def test_plan_detects_carry_in_second_position():
+    depth = 4
+    with bind.Workflow() as wf:
+        y = wf.array(np.ones((4, 4)), "y")
+        x = wf.array(np.ones((4, 4)), "x")
+        for _ in range(depth):
+            wf.call(_add_c1, (x, y), name="radd")
+        wf._synced_upto = len(wf.ops)
+    plan = bind.build_plan(wf, 0, len(wf.ops), 1, "tree",
+                           {v: {r} for v, (_, r) in wf.initial.items()},
+                           _pinned_heads(y, x))
+    assert len(plan.chains) == 1
+    chain = plan.chains[0]
+    assert chain.carry_pos == 1 and chain.n_levels == depth
+
+
+def test_pingpong_accumulation_never_chains():
+    """``a += b; b += a; ...`` — every level's would-be exterior is the
+    previous level's write.  Interleaved dataflow must not fuse (a chain
+    never materialises interior versions, so an exterior may never read
+    one), and values must match serial exactly."""
+    def run(backend):
+        ex = bind.LocalExecutor(1, backend=backend)
+        with bind.Workflow(executor=ex) as wf:
+            a = wf.array(jnp.ones((3, 3), jnp.float32), "a")
+            b = wf.array(jnp.full((3, 3), 2.0, jnp.float32), "b")
+            for _ in range(3):
+                wf.call(_add_c0, (a, b), name="add")
+                wf.call(_add_c0, (b, a), name="add")
+            return np.asarray(wf.fetch(a)), np.asarray(wf.fetch(b)), ex
+    fb = bind.FusedBatchBackend()
+    fa, fb_val, _fex = run(fb)
+    sa, sb, _sex = run("serial")
+    np.testing.assert_array_equal(fa, sa)
+    np.testing.assert_array_equal(fb_val, sb)
+    assert fb.chains_dispatched == 0
+
+
+@pytest.mark.parametrize("width", [1, 4])
+def test_binary_chain_dispatches_once_and_matches_serial_stats(width):
+    """An axpy-style chain — carry + invariant exterior + per-level varying
+    constant — dispatches as ONE scan with serial-identical accounting."""
+    depth = 12
+
+    def run(backend):
+        ex = bind.LocalExecutor(1, backend=backend)
+        with bind.Workflow(executor=ex) as wf:
+            ys = [wf.array(jnp.full((4, 4), float(i + 1), jnp.float32),
+                           f"y{i}") for i in range(width)]
+            xs = [wf.array(jnp.full((4, 4), 0.5 * (i + 1), jnp.float32),
+                           f"x{i}") for i in range(width)]
+            for lvl in range(depth):
+                for y, x in zip(ys, xs):
+                    wf.call(_axpy3, (y, x, 1.0 + 0.1 * lvl), name="axpy")
+            outs = [np.asarray(wf.fetch(y)) for y in ys]
+        return outs, ex.stats, ex
+
+    fb = bind.FusedBatchBackend()
+    fused_outs, fused_stats, fused_ex = run(fb)
+    serial_outs, serial_stats, serial_ex = run("serial")
+    assert fb.chains_dispatched == 1
+    assert fb.ops_chained == width * depth
+    for a, b in zip(fused_outs, serial_outs):
+        np.testing.assert_array_equal(a, b)
+    assert fused_stats.peak_live_bytes == serial_stats.peak_live_bytes
+    assert fused_stats.peak_live_payloads == serial_stats.peak_live_payloads
+    assert fused_ex._live_bytes == serial_ex._live_bytes
+    assert fused_ex._live_entries == serial_ex._live_entries
+    assert fused_stats.transfers == serial_stats.transfers
+    assert fused_stats.wavefronts == serial_stats.wavefronts
+
+
+def test_varying_exterior_chain_scans_stacked_xs():
+    """Each level adds a *different* exterior array: the exteriors are
+    stacked into one (n_levels, ...) xs buffer and the run still costs one
+    dispatch."""
+    depth = 6
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        y = wf.array(jnp.zeros((4, 4), jnp.float32), "y")
+        xs = [wf.array(jnp.full((4, 4), float(l + 1), jnp.float32), f"x{l}")
+              for l in range(depth)]
+        for x in xs:
+            wf.call(_add_c0, (y, x), name="add")
+        out = np.asarray(wf.fetch(y))
+    assert fb.chains_dispatched == 1 and fb.ops_chained == depth
+    np.testing.assert_allclose(out,
+                               np.full((4, 4), float(sum(range(1, depth + 1)))))
+
+
+def test_varying_exterior_chain_width_gt1():
+    """Width > 1 with per-level distinct exteriors: the xs buffer is
+    stacked to (n_levels, width, ...) and vmap'd across the batch inside
+    the scan — one dispatch for the whole grid."""
+    width, depth = 3, 4
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        ys = [wf.array(jnp.zeros((4, 4), jnp.float32), f"y{j}")
+              for j in range(width)]
+        zs = [[wf.array(jnp.full((4, 4), float(10 * l + j + 1), jnp.float32),
+                        f"z{l}{j}") for j in range(width)]
+              for l in range(depth)]
+        for l in range(depth):
+            for j in range(width):
+                wf.call(_add_c0, (ys[j], zs[l][j]), name="add")
+        outs = [np.asarray(wf.fetch(y)) for y in ys]
+    assert fb.chains_dispatched == 1 and fb.ops_chained == width * depth
+    for j in range(width):
+        expected = float(sum(10 * l + j + 1 for l in range(depth)))
+        np.testing.assert_allclose(outs[j], np.full((4, 4), expected))
+
+
+def test_int_constants_into_float_carry_do_not_upcast():
+    """Hoisted int constants ride as an int32 xs array; the float32 carry
+    dtype is preserved (int32 never upcasts f32) and the chain dispatches."""
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((3, 3), jnp.float32), "a")
+        for c in (2, 3, 4):
+            scale(a, c)
+        out = wf.fetch(a)
+    assert fb.chains_dispatched == 1
+    assert out.dtype == np.dtype("float32")
+    np.testing.assert_allclose(np.asarray(out), np.full((3, 3), 24.0))
+
+
+def test_int_carry_with_int_constants_stays_int():
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((3, 3), jnp.int32), "a")
+        for c in (2, 3, 4):
+            scale(a, c)
+        out = wf.fetch(a)
+    assert fb.chains_dispatched == 1
+    assert out.dtype == np.dtype("int32")
+    np.testing.assert_array_equal(np.asarray(out), np.full((3, 3), 24))
+
+
+def test_binop_chain_spill_residency():
+    """Stacked-xs chains commit their final level as one bucket like any
+    fused dispatch: once bucket-mates are consumed, the survivor spills so
+    actual residency matches the accounting."""
+    width, depth = 4, 5
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        ys = [wf.array(jnp.full((8, 8), float(i + 1), jnp.float32), f"y{i}")
+              for i in range(width)]
+        xs = [wf.array(jnp.full((8, 8), 0.5, jnp.float32), f"x{i}")
+              for i in range(width)]
+        for lvl in range(depth):
+            for y, x in zip(ys, xs):
+                wf.call(_axpy3, (y, x, 1.0 + lvl), name="axpy")
+        for y in ys[1:]:
+            scale(y, 2.0)       # consumes rows 1..3; row 0 survives
+        wf.sync()
+        assert fb.chains_dispatched == 1
+        head = ex._stores[0][ys[0].ref.head.key]
+        assert type(head) is not BatchSlice
+        assert _actual_residency(ex) == ex._live_bytes
+        assert ex._live_bytes <= ex.stats.peak_live_bytes
+        outs = [np.asarray(wf.fetch(y)) for y in ys]
+    added = 0.5 * sum(1.0 + lvl for lvl in range(depth))
+    np.testing.assert_allclose(outs[0], np.full((8, 8), 1.0 + added))
+    for i in range(1, width):
+        np.testing.assert_allclose(
+            outs[i], np.full((8, 8), 2.0 * (i + 1 + added)))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: plan-cache keys across the new chain shapes
+# ---------------------------------------------------------------------------
+
+def _run_const_chain(consts):
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((4, 4), jnp.float32), "a")
+        for c in consts:
+            scale(a, c)
+        out = np.asarray(wf.fetch(a))
+    return out, fb
+
+
+def test_plan_cache_shared_across_hoisted_constant_values():
+    """Two segments differing only in hoisted per-level constant *values*
+    share one plan (constants are excluded from the structural signature)
+    yet each computes with its own constants."""
+    bind.clear_plan_cache()
+    out1, fb1 = _run_const_chain([1.5, 2.0, 3.0])
+    before = dict(bind.PLAN_CACHE_STATS)
+    out2, fb2 = _run_const_chain([2.0, 3.0, 4.0])
+    after = bind.PLAN_CACHE_STATS
+    assert after["hits"] == before["hits"] + 1
+    assert after["misses"] == before["misses"]
+    assert fb1.chains_dispatched == 1 and fb2.chains_dispatched == 1
+    np.testing.assert_allclose(out1, np.full((4, 4), 9.0), rtol=1e-5)
+    np.testing.assert_allclose(out2, np.full((4, 4), 24.0), rtol=1e-5)
+
+
+def test_plan_cache_misses_on_carry_pos_and_payload_layout():
+    """Structural differences — which position carries the chain, or
+    whether an operand is a payload vs a constant — must MISS the cache."""
+    depth = 4
+
+    def carry0(wf, y, x):
+        for _ in range(depth):
+            wf.call(_add_c0, (y, x), name="add")
+
+    def carry1(wf, y, x):
+        for _ in range(depth):
+            wf.call(_add_c1, (x, y), name="add")
+
+    def const_operand(wf, y, x):
+        for lvl in range(depth):
+            wf.call(_axpy3, (y, x, 1.0 + lvl), name="axpy")
+
+    def payload_operand(wf, y, x):
+        s = wf.array(jnp.full((4, 4), 2.0, jnp.float32), "s")
+        for _ in range(depth):
+            wf.call(_axpy3, (y, x, s), name="axpy")
+
+    bind.clear_plan_cache()
+    before = dict(bind.PLAN_CACHE_STATS)
+    for build in (carry0, carry1, const_operand, payload_operand):
+        ex = bind.LocalExecutor(1, backend="fused")
+        with bind.Workflow(executor=ex) as wf:
+            y = wf.array(jnp.ones((4, 4), jnp.float32), "y")
+            x = wf.array(jnp.ones((4, 4), jnp.float32), "x")
+            build(wf, y, x)
+    after = bind.PLAN_CACHE_STATS
+    assert after["misses"] == before["misses"] + 4
+    assert after["hits"] == before["hits"]
 
 
 # ---------------------------------------------------------------------------

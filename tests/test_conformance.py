@@ -3,10 +3,15 @@
 Bind's core claim is that one recorded partitioned global workflow can be
 replayed by any dispatch strategy without changing program semantics.  This
 suite generates *seeded random workflows* — random DAG shapes, mixed
-jax/NumPy payloads, random ``n_nodes`` and placements (ships), random
-incremental ``run()`` segment boundaries, fns that defeat vmap/scan tracing
-— and replays each across ``interpret`` / ``serial`` / ``threads`` /
-``fused``, asserting the conformance contract:
+jax/NumPy/int payloads, random ``n_nodes`` and placements (ships), random
+incremental ``run()`` segment boundaries, fns that defeat vmap/scan tracing,
+and **chain-shaped regions**: same-signature runs (chain-fusion bait),
+binary-op runs with random carry position and per-level exterior operands,
+axpy runs and unary runs over per-level *varying* constants (hoisted-xs
+bait), plus adversarial chain-breakers (mid-chain ship via a placement
+flip, dtype flips from int payloads under float constants, untraceable
+branchy fns, NumPy payloads) — and replays each across ``interpret`` /
+``serial`` / ``threads`` / ``fused``, asserting the conformance contract:
 
 * **value parity** — every fetched payload identical (values *and* dtypes;
   a version GC'd in one backend must be GC'd in all);
@@ -94,8 +99,42 @@ def _combine(a, b):
     return a + b
 
 
+# binary-op chain pool: carry (the InOut arg) in position 0 or 1; _bsel's
+# host branch defeats scan tracing mid-chain (fallback must stay seamless)
+def _addr(x, y):
+    return x + y
+
+
+_addr.__bind_intents__ = (bind.In, bind.InOut)
+
+
+def _mixr(x, y):
+    return x * 0.5 + y
+
+
+_mixr.__bind_intents__ = (bind.In, bind.InOut)
+
+
+def _bsel(a, b):
+    if float(np.asarray(a).sum()) >= 0:
+        return a + b
+    return a * 0.5 + b
+
+
+_bsel.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _axpy(y, x, s):
+    return y + x * s
+
+
+_axpy.__bind_intents__ = (bind.InOut, bind.In, bind.In)
+
+
 UNARY = (_scale, _shift, _branchy)
 BINARY = (_add, _mix, _mm)
+BIN_CARRY0 = (_add, _mix, _bsel)
+BIN_CARRY1 = (_addr, _mixr)
 CONSTS = (2, 2.0, 0.5, -1.5, True)
 
 
@@ -110,11 +149,12 @@ def make_spec(seed: int) -> dict:
     n_arrays = int(rng.integers(2, 6))
     arrays = []
     for _ in range(n_arrays):
-        arrays.append((
-            "jax" if rng.random() < 0.5 else "np",
-            int(rng.integers(0, n_nodes)),
-            rng.normal(size=SHAPE).round(3),
-        ))
+        r = rng.random()
+        # "jaxint" payloads flip chain carries to float under float
+        # constants (dtype-flip chain breaker: scan trace must reject)
+        kind = "jax" if r < 0.4 else ("jaxint" if r < 0.55 else "np")
+        arrays.append((kind, int(rng.integers(0, n_nodes)),
+                       rng.normal(size=SHAPE).round(3)))
     n_ops = int(rng.integers(8, 30))
     ops = []
     n_handles = n_arrays
@@ -122,16 +162,50 @@ def make_spec(seed: int) -> dict:
         placement = int(rng.integers(0, n_nodes)) if rng.random() < 0.6 else None
         form = rng.random()
         target = int(rng.integers(0, n_handles))
-        if form < 0.35:         # unary with constant
+        if form < 0.25:         # unary with constant
             ops.append(("unary", int(rng.integers(0, len(UNARY))), target,
                         CONSTS[int(rng.integers(0, len(CONSTS)))], placement))
-        elif form < 0.75:       # binary over two handles
+        elif form < 0.55:       # binary over two handles
             ops.append(("binary", int(rng.integers(0, len(BINARY))), target,
                         int(rng.integers(0, n_handles)), placement))
-        elif form < 0.9:        # deep same-signature chain (chain fusion bait)
+        elif form < 0.67:       # deep same-signature chain (chain fusion bait)
             ops.append(("chain", int(rng.integers(0, 2)), target,
                         CONSTS[int(rng.integers(0, len(CONSTS)))],
                         int(rng.integers(3, 11)), placement))
+        elif form < 0.77:       # unary chain over per-level varying constants
+            depth = int(rng.integers(3, 9))
+            if rng.random() < 0.3:  # adversarial: mixed types defeat hoisting
+                consts = tuple(CONSTS[int(rng.integers(0, len(CONSTS)))]
+                               for _ in range(depth))
+            else:
+                consts = tuple(float(np.round(rng.uniform(0.5, 1.5), 3))
+                               for _ in range(depth))
+            ops.append(("vchain", int(rng.integers(0, len(UNARY))), target,
+                        consts, placement))
+        elif form < 0.9:        # binary-op chain, random carry position
+            depth = int(rng.integers(3, 9))
+            carry = int(rng.integers(0, 2))
+            pool = BIN_CARRY1 if carry else BIN_CARRY0
+            if rng.random() < 0.4:      # chain-invariant exterior operand
+                others = (int(rng.integers(0, n_handles)),) * depth
+            else:                       # per-level varying exteriors (xs)
+                others = tuple(int(rng.integers(0, n_handles))
+                               for _ in range(depth))
+            # adversarial mid-chain ship: flip placement partway through
+            ship_at = (int(rng.integers(1, depth))
+                       if rng.random() < 0.25 else None)
+            ops.append(("binchain", carry,
+                        int(rng.integers(0, len(pool))), target, others,
+                        ship_at, int(rng.integers(0, n_nodes)), placement))
+        elif form < 0.96:       # axpy chain: exterior + varying constants.
+            # Power-of-two constants keep x*s exact: the eager interpreter
+            # (mul, add — two roundings) and the jitted backends (XLA fuses
+            # y + x*s into an FMA — one rounding) must stay bitwise equal.
+            depth = int(rng.integers(3, 9))
+            consts = tuple(float(2.0 ** rng.integers(-2, 3))
+                           for _ in range(depth))
+            ops.append(("axpy", target, int(rng.integers(0, n_handles)),
+                        consts, placement))
         else:                   # fresh output via wf.apply
             ops.append(("apply", target, int(rng.integers(0, n_handles)),
                         placement))
@@ -161,6 +235,31 @@ def _record_op(wf, handles, spec_op) -> None:
             for _i in range(depth):
                 wf.call(UNARY[fi], (handles[target], const),
                         name=UNARY[fi].__name__)
+        elif form == "vchain":
+            _, fi, target, consts, _ = spec_op
+            for c in consts:
+                wf.call(UNARY[fi], (handles[target], c),
+                        name=UNARY[fi].__name__)
+        elif form == "binchain":
+            _, carry, fi, target, others, ship_at, p2, _ = spec_op
+            fn = (BIN_CARRY1 if carry else BIN_CARRY0)[fi]
+            for i, other in enumerate(others):
+                ictx = (bind.node(p2)
+                        if ship_at is not None and i >= ship_at else None)
+                if ictx is not None:
+                    ictx.__enter__()
+                try:
+                    args = ((handles[other], handles[target]) if carry
+                            else (handles[target], handles[other]))
+                    wf.call(fn, args, name=fn.__name__)
+                finally:
+                    if ictx is not None:
+                        ictx.__exit__(None, None, None)
+        elif form == "axpy":
+            _, target, other, consts, _ = spec_op
+            for c in consts:
+                wf.call(_axpy, (handles[target], handles[other], c),
+                        name="axpy")
         else:                   # apply: fresh output array
             _, a, b, _ = spec_op
             handles.append(wf.apply(_combine, [handles[a], handles[b]],
@@ -177,8 +276,12 @@ def run_spec(spec: dict, mode: str, backend: str):
     with bind.Workflow(n_nodes=spec["n_nodes"], executor=ex) as wf:
         handles = []
         for kind, rank, vals in spec["arrays"]:
-            payload = (jnp.asarray(vals, jnp.float32) if kind == "jax"
-                       else np.asarray(vals))
+            if kind == "jax":
+                payload = jnp.asarray(vals, jnp.float32)
+            elif kind == "jaxint":
+                payload = jnp.asarray((np.asarray(vals) * 8).astype(np.int32))
+            else:
+                payload = np.asarray(vals)
             handles.append(wf.array(payload, f"a{len(handles)}", rank=rank))
         syncs = set(spec["syncs"])
         for i, spec_op in enumerate(spec["ops"]):
@@ -271,6 +374,21 @@ def pytest_generate_tests(metafunc):
 
 def test_conformance_fixed_seeds(conformance_seed):
     check_conformance(conformance_seed)
+
+
+def test_fuzzer_exercises_chain_shapes():
+    """Keep the fuzzer honest: the generator must actually emit every
+    chain-shaped region (else the sweep silently stops covering them), and
+    the fused backend must actually dispatch scans on some of them."""
+    forms = {op[0] for i in range(N_WORKFLOWS)
+             for op in make_spec(i)["ops"]}
+    assert {"chain", "vchain", "binchain", "axpy"} <= forms
+    dispatched = 0
+    for seed in range(8):
+        fb = bind.FusedBatchBackend()
+        run_spec(make_spec(seed), "plan", fb)
+        dispatched += fb.chains_dispatched
+    assert dispatched > 0, "no chain ever dispatched on the probe seeds"
 
 
 # ---------------------------------------------------------------------------
