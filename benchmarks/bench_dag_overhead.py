@@ -42,6 +42,16 @@
     dispatch per chain.  Same ``chain_vs_level_speedup ≥ 1.3`` bar,
     asserted by CI;
 
+3c. cross-segment plan stitching (``bench="stitched_chain_fused"``): a
+    64-level chain recorded as 4 incremental ``run()`` segments, iterated
+    8× as a loop-shaped driver.  Unstitched, each sync seam is an
+    optimization barrier (4 plans + 4 scan dispatches per iteration);
+    stitched — the executor default — the pending segments plan as ONE
+    program, the seam-split chain re-fuses into a single ``jit(lax.scan)``
+    dispatch, and iterations 2+ re-bind via the program-trace cache.
+    ``stitched_vs_unstitched_speedup ≥ 1.3`` is the CI-asserted
+    acceptance bar;
+
 4. multi-versioning memory overhead: peak live payloads vs the
    single-version working set, with and without version GC (checked in
    both executor modes).
@@ -68,7 +78,12 @@ def axpy(y: bind.InOut, x: bind.In, s: bind.In):
 
 def _chain_exec_time(mode: str, tile: int, n_ops: int,
                      backend: str = "serial") -> float:
-    """Seconds spent in ``sync()`` for a ``n_ops``-long scale chain."""
+    """Seconds spent executing a ``n_ops``-long scale chain.
+
+    ``sync()`` only marks the segment boundary under program stitching (the
+    default), so the timed region covers the explicit ``flush()`` that
+    actually plans and replays.
+    """
     x = np.ones((tile, tile))
     ex = bind.LocalExecutor(1, mode=mode, backend=backend)
     with bind.Workflow(executor=ex) as wf:
@@ -77,6 +92,7 @@ def _chain_exec_time(mode: str, tile: int, n_ops: int,
             scale(a, 1.0000001)
         t0 = time.perf_counter()
         wf.sync()
+        ex.flush()
         return time.perf_counter() - t0
 
 
@@ -119,6 +135,49 @@ def _binop_chain_exec_time(backend, width: int, depth: int, tile: int) -> float:
         for y in ys:            # materialise async jax results
             np.asarray(wf.fetch(y))
         return time.perf_counter() - t0
+
+
+def _stitched_chain_exec_time(backend, stitch: bool, width: int, depth: int,
+                              n_segments: int, tile: int,
+                              n_programs: int = 8) -> float:
+    """Seconds per program for a ``depth``-level chain recorded as
+    ``n_segments`` incremental ``run()`` segments, iterated ``n_programs``
+    times in one workflow (a loop-shaped driver).  With ``stitch=True``
+    (the default executor behaviour) the segments of each iteration defer
+    and plan as ONE stitched program — the seam-split chain dispatches as
+    a single scan, and iterations 2+ re-bind via the program-trace cache;
+    with ``stitch=False`` every segment plans and dispatches alone (its
+    segments hit the program-trace cache too — the measured gap is pure
+    per-seam dispatch + flush overhead).  Recording interleaves with the
+    syncs, so only the executor's own time is accumulated — each
+    ``sync()`` (where the unstitched side executes), each iteration's
+    ``flush()`` (where the stitched side does), and final result
+    materialisation — identically on both sides.
+    """
+    import jax.numpy as jnp
+
+    ex = bind.LocalExecutor(1, mode="plan", backend=backend, stitch=stitch)
+    t = 0.0
+    with bind.Workflow(executor=ex) as wf:
+        ys = [wf.array(jnp.ones((tile, tile), jnp.float32), f"y{i}")
+              for i in range(width)]
+        per = depth // n_segments
+        for _it in range(n_programs):
+            for _seg in range(n_segments):
+                for _ in range(per):
+                    for y in ys:
+                        scale(y, 1.0000001)
+                t0 = time.perf_counter()
+                wf.sync()
+                t += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            ex.flush()
+            t += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for y in ys:            # materialise async jax results
+            np.asarray(wf.fetch(y))
+        t += time.perf_counter() - t0
+        return t / n_programs
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -325,6 +384,61 @@ def run(quick: bool = False) -> list[dict]:
             # acceptance bar (CI-asserted): >= 1.3x over per-level fused
             row["chain_vs_level_speedup"] = round(
                 blevel_us / max(bchain_us, 1e-9), 2)
+        rows.append(row)
+
+    # 3c. cross-segment plan stitching: a 64-level chain recorded as 4
+    #     incremental run() segments, iterated as a loop-shaped driver.
+    #     Unstitched, every seam is an optimization barrier: 4 plans, 4
+    #     scan dispatches, 4 flushes per iteration.  Stitched (the
+    #     default), the segments defer and plan as ONE program — the chain
+    #     re-fuses across the seams into a single scan dispatch, and
+    #     iterations 2+ re-bind via the program-trace cache.  The
+    #     acceptance bar (CI-asserted) is stitched >= 1.3x over unstitched
+    #     fused.  width=1, tile=8 keeps the workload dispatch-bound —
+    #     per-seam fixed costs (plan resolve + scan launch + flush) are
+    #     exactly what stitching removes.
+    n_segments, width_s, tile_s = 4, 1, 8
+    n_programs = 8
+    n_ops_s = width_s * depth_c
+    stitched_variants = {
+        "serial_unstitched": ("serial", False),
+        "fused_unstitched": (bind.FusedBatchBackend(), False),
+        "fused_stitched": (bind.FusedBatchBackend(), True),
+    }
+    reps_s = 3 if quick else 6
+    for backend, stitch in stitched_variants.values():   # warm compiles+caches
+        _stitched_chain_exec_time(backend, stitch, width_s, depth_c,
+                                  n_segments, tile_s, n_programs)
+    t_stitched = {n: float("inf") for n in stitched_variants}
+    stitched_counts = (0, 0)
+    for _ in range(reps_s):                        # interleaved rounds again
+        for n, (backend, stitch) in stitched_variants.items():
+            if n == "fused_stitched":
+                c0, o0 = backend.chains_dispatched, backend.ops_chained
+            t_stitched[n] = min(
+                t_stitched[n],
+                _stitched_chain_exec_time(backend, stitch, width_s, depth_c,
+                                          n_segments, tile_s, n_programs))
+            if n == "fused_stitched":
+                # per-program deltas (every iteration fuses identically)
+                stitched_counts = (
+                    (backend.chains_dispatched - c0) // n_programs,
+                    (backend.ops_chained - o0) // n_programs)
+    un_us = t_stitched["fused_unstitched"] / n_ops_s * 1e6
+    st_us = t_stitched["fused_stitched"] / n_ops_s * 1e6
+    for name in stitched_variants:
+        row = {
+            "bench": "stitched_chain_fused", "variant": name,
+            "width": width_s, "depth": depth_c, "tile": tile_s,
+            "segments": n_segments, "ops": n_ops_s,
+            "exec_us_per_op": round(t_stitched[name] / n_ops_s * 1e6, 2),
+        }
+        if name == "fused_stitched":
+            # per-iteration dispatch counts (counters span all programs)
+            row["chains_dispatched"], row["ops_chained"] = stitched_counts
+            # acceptance bar (CI-asserted): >= 1.3x over unstitched fused
+            row["stitched_vs_unstitched_speedup"] = round(
+                un_us / max(st_us, 1e-9), 2)
         rows.append(row)
 
     # 4. versioning memory: GC keeps the working set O(1), not O(#versions) —

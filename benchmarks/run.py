@@ -61,6 +61,7 @@ def main() -> None:
     dag_rows = [r for r in all_rows
                 if r.get("bench") in ("dag_overhead", "backend_parallel",
                                       "chain_fused", "binop_chain_fused",
+                                      "stitched_chain_fused",
                                       "versioning_memory")]
     if quick and dag_rows:
         # quick numbers are smoke signals, never trajectory data — keep the

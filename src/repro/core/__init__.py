@@ -38,6 +38,13 @@ from .plan import (
     segment_signature,
     wavefront_flops,
 )
+from .program import (
+    PROGRAM_CACHE_STATS,
+    ProgramPlan,
+    Segment,
+    clear_program_cache,
+    resolve_plan,
+)
 from .executable_cache import EXEC_CACHE, ExecutableCache
 from .backends import (
     BACKENDS,
@@ -57,6 +64,8 @@ __all__ = [
     "reduce_tree", "ExecutionStats", "LocalExecutor", "TransferEvent", "lowering",
     "ChainSlice", "ExecutionPlan", "PLAN_CACHE_STATS", "build_plan",
     "clear_plan_cache", "plan_for", "segment_signature", "wavefront_flops",
+    "PROGRAM_CACHE_STATS", "ProgramPlan", "Segment", "clear_program_cache",
+    "resolve_plan",
     "EXEC_CACHE", "ExecutableCache",
     "BACKENDS", "Backend", "SerialPlanBackend", "ThreadPoolBackend",
     "FusedBatchBackend", "get_backend",

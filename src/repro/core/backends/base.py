@@ -143,7 +143,9 @@ def spill_dead_buckets(ex) -> int:
     residency match the accounting; fully-live buckets are left lazy (the
     chain pass-through case) and fully-dead ones just leave the registry.
     Called by the fused backend at each level boundary and by the executor
-    frontend at segment end.  Returns the number of rows spilled.
+    frontend at the end of each program flush — under stitching, seams
+    *inside* a pending program no longer trigger it, so a bucket riding a
+    seam-crossing chain stays lazy.  Returns the number of rows spilled.
     """
     buckets = ex._lazy_buckets
     if not buckets:
@@ -180,6 +182,7 @@ def apply_ships(ex, p) -> None:
     stores, where = ex._stores, ex._where
     events = ex.stats.transfers
     base_round = ex._round_counter
+    wavefront = ex._wavefront_base + p.level - 1
     for vkey, root, transfers in p.ships:
         payload = stores[root][vkey]
         nb = _nbytes(payload)
@@ -189,7 +192,8 @@ def apply_ships(ex, p) -> None:
             ranks.add(dst)
             ex._live_entries += 1
             events.append(
-                TransferEvent(vkey, src, dst, nb, base_round + rel, kind))
+                TransferEvent(vkey, src, dst, nb, base_round + rel, kind,
+                              wavefront))
 
 
 def gather_args(ex, p, node) -> list:

@@ -28,7 +28,10 @@ never materialise at all.  Multi-payload signatures fuse too (binary-op
 chains — axpy runs, accumulate pipelines, residual updates): the carry is
 the loop state and the remaining operands are chain-exterior versions,
 passed through whole when every level reads the same version or stacked
-into a scanned ``xs`` array when they vary per level.  Constants that vary
+into a scanned ``xs`` array when they vary per level (and when those
+exterior rows already live in one fused bucket's stacked buffer, that
+buffer is scanned directly — no per-row materialise + restack).  Constants
+that vary
 per level no longer break a chain either: uniform-typed scalar runs are
 hoisted into one stacked ``xs`` array (dtype-stable — the scan-trace carry
 invariance check rejects any hoist that would change the carry's dtype).
@@ -176,6 +179,9 @@ class FusedBatchBackend(Backend):
         self.ops_fused = 0
         self.chains_dispatched = 0
         self.ops_chained = 0
+        # varying-exterior xs grids served straight from a fused bucket's
+        # stacked buffer (no per-row materialise + restack)
+        self.xs_passthrough = 0
 
     def _probe_payload(self, ex, k):
         """Version ``k``'s resident payload, or None if not yet
@@ -561,11 +567,21 @@ class FusedBatchBackend(Backend):
                 flat_grid = [a for row in exterior[i][1] for a in row]
                 if self._uniform_jax_aval(flat_grid) is None:
                     return False
-                flat = [materialize(a) for a in flat_grid]
-                stacked = jax.numpy.stack(flat)
-                if width > 1:
-                    stacked = stacked.reshape(
-                        (n_levels, width) + stacked.shape[1:])
+                buf = _common_buffer(flat_grid)
+                if buf is not None:
+                    # pre-stacked passthrough: the exterior rows ARE one
+                    # fused bucket's stacked buffer in (level, member)
+                    # order — scan that buffer directly; the rows stay
+                    # lazy (their GC releases them like any bucket rows)
+                    stacked = (buf if width == 1 else buf.reshape(
+                        (n_levels, width) + buf.shape[1:]))
+                    self.xs_passthrough += 1
+                else:
+                    flat = [materialize(a) for a in flat_grid]
+                    stacked = jax.numpy.stack(flat)
+                    if width > 1:
+                        stacked = stacked.reshape(
+                            (n_levels, width) + stacked.shape[1:])
                 layout.append(XS)
                 call_args.append(stacked)
                 sig_args.append(stacked)

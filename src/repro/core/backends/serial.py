@@ -36,12 +36,14 @@ class SerialPlanBackend(Backend):
         base_round = ex._round_counter
         single = ex.n_nodes == 1
         store0 = stores[0]
+        wf_base = ex._wavefront_base
         live_b, live_c = ex._live_bytes, ex._live_entries
         peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
 
         for p in plan.schedule:
             node = ops[p.op_id]
             if p.ships:
+                wavefront = wf_base + p.level - 1
                 for vkey, root, transfers in p.ships:
                     payload = stores[root][vkey]
                     nb = _nbytes(payload)
@@ -51,7 +53,8 @@ class SerialPlanBackend(Backend):
                         ranks.add(dst)
                         live_c += 1
                         events.append(
-                            TransferEvent(vkey, src, dst, nb, base_round + rel, kind))
+                            TransferEvent(vkey, src, dst, nb,
+                                          base_round + rel, kind, wavefront))
             if single and p.binary_simple:
                 # unrolled fast path for the dominant shape: two args, one
                 # written payload, one rank — skips list/zip construction

@@ -18,6 +18,15 @@ splits that cost out of the hot path:
   thereafter.  ``Workflow()`` resets the global id streams, so two identical
   builds of the same user code produce byte-identical signatures.
 
+Plans are no longer restricted to one ``run()`` segment: the executor
+frontend defers incremental-sync segments into a *program trace* and plans
+the whole pending range at once (:mod:`repro.core.program`), so signature
+chains split by a sync boundary stitch back together and dispatch as one
+scan.  :meth:`ExecutionPlan.rebind` supports the program-trace cache's
+relocatable replay — a loop-shaped program whose version keys advance every
+iteration re-points the cached plan skeleton at the fresh keys instead of
+re-running analysis.
+
 Plans are pure metadata (no payloads), so a cached plan is valid for any
 payload values — only the *structure* (which the signature captures) matters.
 Constants embedded in op args are read from the live op at replay time, never
@@ -178,6 +187,38 @@ class ExecutionPlan:
 
     def __len__(self) -> int:
         return len(self.schedule)
+
+    def rebind(self, schedule, start: int, end: int) -> "ExecutionPlan":
+        """A structurally identical plan re-pointed at ``schedule``'s keys.
+
+        The program-trace cache (:mod:`repro.core.program`) replays a
+        loop-shaped program's template plan against fresh version keys:
+        every analysis product that is index- or structure-based (level
+        slices, signature groups, chain member indices, wavefront counts,
+        per-level flops, the relative round budget) is shared with the
+        template — only the key-bearing schedule, and the chains' interior
+        key sets (recomputed from it), are new.
+        """
+        plan = object.__new__(ExecutionPlan)
+        plan.schedule = schedule
+        plan.wavefront_counts = self.wavefront_counts
+        plan.n_rounds = self.n_rounds
+        plan.start = start
+        plan.end = end
+        plan.n_nodes = self.n_nodes
+        plan.collective_mode = self.collective_mode
+        plan.total_writes = self.total_writes
+        plan.levels = self.levels
+        plan.level_groups = self.level_groups
+        plan.has_fusion_groups = self.has_fusion_groups
+        plan.chains = tuple(
+            ChainSlice(c.members, c.width, c.first_level, c.fn, c.carry_pos,
+                       c.payload_positions,
+                       frozenset(schedule[m].write_keys[0]
+                                 for lvl in c.members[:-1] for m in lvl))
+            for c in self.chains)
+        plan.level_flops = self.level_flops
+        return plan
 
 
 def _level_slices(schedule) -> tuple[tuple[int, int], ...]:
@@ -486,16 +527,17 @@ def clear_plan_cache() -> None:
         PLAN_CACHE_STATS["hits"] = PLAN_CACHE_STATS["misses"] = 0
 
 
-def plan_for(wf, start: int, end: int, n_nodes: int, collective_mode: str,
-             holders: dict, pinned: Iterable) -> ExecutionPlan:
-    """Fetch-or-build the plan for a segment (LRU-cached process-wide).
+def absolute_plan_key(wf, start: int, end: int, n_nodes: int,
+                      collective_mode: str, holders: dict,
+                      pinned: Iterable) -> tuple:
+    """Exact-identity cache key for a planned range.
 
-    The key ties the structural segment signature to everything else the
-    simulation consumed: world size, collective mode, the run-start holder
-    state of the versions the segment *reads* (ship schedules and GC depend
-    on nothing else in the stores — unrelated live payloads must not cause
-    misses), and the pinned set — a hit guarantees the cached ship/GC
-    schedules are valid for this run.
+    Ties the structural segment signature to everything else the simulation
+    consumed: world size, collective mode, the run-start holder state of the
+    versions the range *reads* (ship schedules and GC depend on nothing else
+    in the stores — unrelated live payloads must not cause misses), and the
+    pinned set — a hit guarantees the cached ship/GC schedules are valid for
+    this run.
     """
     read_holders: dict[tuple[int, int], tuple[int, ...]] = {}
     for node in wf.ops[start:end]:
@@ -505,22 +547,45 @@ def plan_for(wf, start: int, end: int, n_nodes: int, collective_mode: str,
                 rs = holders.get(k)
                 if rs is not None:
                     read_holders[k] = tuple(sorted(rs))
-    key = (
+    return (
         n_nodes, collective_mode, start,
         segment_signature(wf, start, end),
         tuple(sorted(read_holders.items())),
         tuple(sorted(pinned)),
     )
+
+
+def _plan_cache_get(key: tuple):
     with _PLAN_CACHE_LOCK:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
             _PLAN_CACHE.move_to_end(key)
             PLAN_CACHE_STATS["hits"] += 1
-            return plan
-        PLAN_CACHE_STATS["misses"] += 1
-    plan = build_plan(wf, start, end, n_nodes, collective_mode, holders, pinned)
+        else:
+            PLAN_CACHE_STATS["misses"] += 1
+    return plan
+
+
+def _plan_cache_put(key: tuple, plan: ExecutionPlan) -> None:
     with _PLAN_CACHE_LOCK:
         _PLAN_CACHE[key] = plan
         while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
             _PLAN_CACHE.popitem(last=False)
+
+
+def plan_for(wf, start: int, end: int, n_nodes: int, collective_mode: str,
+             holders: dict, pinned: Iterable) -> ExecutionPlan:
+    """Fetch-or-build the plan for a segment (LRU-cached process-wide).
+
+    See :func:`absolute_plan_key` for what a hit guarantees.  The executor
+    frontend goes through :func:`repro.core.program.resolve_plan`, which
+    backs this exact-key cache with the relocatable program-trace cache.
+    """
+    key = absolute_plan_key(wf, start, end, n_nodes, collective_mode,
+                            holders, pinned)
+    plan = _plan_cache_get(key)
+    if plan is None:
+        plan = build_plan(wf, start, end, n_nodes, collective_mode, holders,
+                          pinned)
+        _plan_cache_put(key, plan)
     return plan

@@ -1,6 +1,6 @@
 """Execution engine for the transactional DAG (paper §II/III).
 
-The engine is split into two layers:
+The engine is split into three layers:
 
 * :class:`LocalExecutor` — the **frontend**, owning the simulated
   distributed machine's *semantics*: per-rank payload stores, the
@@ -9,6 +9,17 @@ The engine is split into two layers:
   op placed on rank ``r`` can only read payloads present on ``r``; versions
   are immutable (zero-copy: a new version *is* the op's return value);
   payloads are reclaimed once their last consumer ran.
+* the **Program layer** (:mod:`repro.core.program`) — ``run(start=…)``
+  no longer plans its segment in isolation: it appends the segment to a
+  pending *program trace*, and execution happens at a materialization
+  boundary (a ``fetch``/``value``, a ``stats`` read, or an explicit
+  :meth:`LocalExecutor.flush`).  The whole pending range is then compiled
+  as ONE stitched plan, so optimization no longer stops at incremental
+  ``sync()`` seams: a signature chain split across segments dispatches as
+  a single ``jit(lax.scan)``, GC drops a head one segment pinned once a
+  later segment proves it dead, and loop-shaped programs replay a cached
+  plan skeleton via the relocatable program-trace cache with zero
+  re-analysis.  ``stitch=False`` restores eager per-segment execution.
 * :mod:`repro.core.backends` — pluggable **dispatch strategies** replaying a
   compiled :class:`~repro.core.plan.ExecutionPlan` against the frontend's
   state:
@@ -20,8 +31,9 @@ The engine is split into two layers:
   * ``backend="fused"``   — same-signature level-mates are stacked into a
     single ``jax.vmap``-ed jitted dispatch via the
     :class:`~repro.core.executable_cache.ExecutableCache`; whole signature
-    chains (plan-detected :class:`~repro.core.plan.ChainSlice` runs)
-    collapse further into one ``jit(lax.scan)`` dispatch per chain.
+    chains (plan-detected :class:`~repro.core.plan.ChainSlice` runs —
+    including seam-crossing ones under stitching) collapse further into one
+    ``jit(lax.scan)`` dispatch per chain.
 
 All backends replay the same plan with ships and commits in plan order, so
 payload values and the transfer event stream are identical across backends;
@@ -30,10 +42,10 @@ level's inputs legitimately in flight at once).
 
 ``mode="interpret"`` bypasses planning entirely: the original per-op
 trace-order interpreter, kept as the semantics reference (and the "before"
-side of ``benchmarks/bench_dag_overhead.py``).  Accounting is byte-identical
-to planned replay whenever the trace order is already wavefront-level-sorted;
-a trace that interleaves levels may legitimately report different
-(higher-parallelism) peaks under plan mode, which executes level-major.
+side of ``benchmarks/bench_dag_overhead.py``).  It participates in program
+deferral too — a flush interprets the whole pending range with
+program-wide reader/GC scopes, so its accounting stays comparable to the
+stitched plan backends.
 
 With a topology cost model (:func:`repro.launch.mesh.make_topology`),
 ``stats.estimated_makespan(topo)`` converts the transfer stream into
@@ -51,7 +63,8 @@ from .backends.base import BatchSlice, spill_dead_buckets
 from .collectives import broadcast_tree
 from .executable_cache import EXEC_CACHE, ExecutableCache
 from .placement import placement_ranks
-from .plan import plan_for, wavefront_flops, wavefront_levels
+from .plan import PLAN_CACHE_STATS, wavefront_flops, wavefront_levels
+from .program import PROGRAM_CACHE_STATS, Segment, resolve_plan
 from .stats import ExecutionStats, TransferEvent, _nbytes
 from .trace import OpNode, Workflow
 
@@ -76,17 +89,25 @@ class LocalExecutor:
     :data:`repro.core.backends.BACKENDS` (``"serial"`` | ``"threads"`` |
     ``"fused"``) or a ready :class:`~repro.core.backends.Backend` instance.
     Ignored under ``mode="interpret"``.
+
+    ``stitch`` (default True) defers each ``run()`` segment into a pending
+    program trace and executes the stitched whole at the next
+    materialization boundary (``value``/``fetch``, a ``stats`` read, or
+    :meth:`flush`); ``stitch=False`` executes every segment eagerly at
+    ``run()``, the pre-program behaviour.
     """
 
     def __init__(self, n_nodes: int = 1, collective_mode: str = "tree",
                  mode: str = "plan",
                  executable_cache: Optional[ExecutableCache] = None,
-                 backend: Union[str, Any, None] = None):
+                 backend: Union[str, Any, None] = None,
+                 stitch: bool = True):
         assert collective_mode in ("tree", "naive")
         assert mode in ("plan", "interpret")
         self.n_nodes = n_nodes
         self.collective_mode = collective_mode
         self.mode = mode
+        self.stitch = bool(stitch)
         self.backend = get_backend(backend if backend is not None else "serial")
         # payload stores: rank -> version_key -> payload
         self._stores: dict[int, dict[tuple[int, int], Any]] = {
@@ -104,17 +125,40 @@ class LocalExecutor:
         # resident in the stores (see backends.base.spill_dead_buckets)
         self._lazy_buckets: set = set()
         self._exec_cache = executable_cache if executable_cache is not None else EXEC_CACHE
-        self.stats = ExecutionStats()
+        self._stats = ExecutionStats()
         self._round_counter = 0
+        # pending program trace: deferred run() segments awaiting a flush
+        self._pending: list[Segment] = []
+        self._wf: Optional[Workflow] = None
+        # global wavefront ordinal of the executing plan's first level —
+        # backends stamp it onto TransferEvents for the makespan model
+        self._wavefront_base = 0
+
+    # -- observable state (materialization boundaries) -----------------------
+    @property
+    def stats(self) -> ExecutionStats:
+        """Execution accounting; reading it materialises any pending program."""
+        if self._pending:
+            self._flush()
+        return self._stats
+
+    def flush(self) -> ExecutionStats:
+        """Execute the pending program trace (no-op when nothing pends)."""
+        if self._pending:
+            self._flush()
+        return self._stats
 
     # -- payload access ------------------------------------------------------
     def value(self, version) -> Any:
         """Fetch a version's payload from whichever rank holds it (O(1)).
 
-        Lazy fused-batch rows (:class:`~repro.core.backends.fused.BatchSlice`)
-        materialise here — the user-visible boundary — and the concrete row
-        is written back so repeated fetches slice once.
+        A materialization boundary: any pending program segments execute
+        first.  Lazy fused-batch rows
+        (:class:`~repro.core.backends.fused.BatchSlice`) materialise here —
+        and the concrete row is written back so repeated fetches slice once.
         """
+        if self._pending:
+            self._flush()
         ranks = self._where.get(version.key)
         if not ranks:
             raise KeyError(f"no payload for {version!r}")
@@ -155,19 +199,21 @@ class LocalExecutor:
         self._live_bytes -= self._key_bytes.pop(vkey, 0)
 
     def _note_live(self) -> None:
-        if self._live_bytes > self.stats.peak_live_bytes:
-            self.stats.peak_live_bytes = self._live_bytes
-        if self._live_entries > self.stats.peak_live_payloads:
-            self.stats.peak_live_payloads = self._live_entries
+        if self._live_bytes > self._stats.peak_live_bytes:
+            self._stats.peak_live_bytes = self._live_bytes
+        if self._live_entries > self._stats.peak_live_payloads:
+            self._stats.peak_live_payloads = self._live_entries
 
     # -- transfers --------------------------------------------------------------
-    def _transfer(self, vkey, payload, src: int, dst: int, kind: str, round_id: int):
+    def _transfer(self, vkey, payload, src: int, dst: int, kind: str,
+                  round_id: int, wavefront: int = 0):
         self._place(dst, vkey, payload)
-        self.stats.transfers.append(
-            TransferEvent(vkey, src, dst, _nbytes(payload), round_id, kind)
+        self._stats.transfers.append(
+            TransferEvent(vkey, src, dst, _nbytes(payload), round_id, kind,
+                          wavefront)
         )
 
-    def _ship(self, vkey, reader_ranks: set[int]) -> None:
+    def _ship(self, vkey, reader_ranks: set[int], wavefront: int = 0) -> None:
         """Make ``vkey`` available on every rank in ``reader_ranks``.
 
         Tree mode builds one binary broadcast tree over {holder} ∪ readers —
@@ -183,13 +229,15 @@ class LocalExecutor:
         if self.collective_mode == "naive" or len(missing) == 1:
             for dst in missing:
                 self._round_counter += 1
-                self._transfer(vkey, payload, root, dst, "p2p", self._round_counter)
+                self._transfer(vkey, payload, root, dst, "p2p",
+                               self._round_counter, wavefront)
             return
         tree = broadcast_tree(root, [root] + missing)
         for round_pairs in tree.rounds:
             self._round_counter += 1
             for src, dst in round_pairs:
-                self._transfer(vkey, payload, src, dst, "broadcast", self._round_counter)
+                self._transfer(vkey, payload, src, dst, "broadcast",
+                               self._round_counter, wavefront)
 
     # -- wavefront decomposition -------------------------------------------------
     @staticmethod
@@ -204,23 +252,38 @@ class LocalExecutor:
 
     # -- execution ------------------------------------------------------------
     def run(self, wf: Workflow, start: int = 0) -> ExecutionStats:
-        # Materialise initial payloads where the sequential program created
-        # them (``wf.array(..., rank=r)``); transfers away from there are
-        # implicit.  Only items recorded since the last run are new.
-        if self._init_seen < len(wf.initial):
-            for vkey, (payload, rank) in islice(
-                    wf.initial.items(), self._init_seen, None):
-                if vkey not in self._where:
-                    self._place(rank, vkey, payload)
-            self._init_seen = len(wf.initial)
+        """Append ``wf.ops[start:]`` to the program trace (and, without
+        stitching, execute it immediately).
 
-        if start >= len(wf.ops):
-            return self.stats
-        if self.mode == "interpret":
-            return self._run_interpret(wf, start)
-        return self._run_planned(wf, start)
+        Under stitching the returned stats object is live: it reflects the
+        segment once a materialization boundary flushes the program.
+        """
+        if self._wf is not None and self._wf is not wf and self._pending:
+            self._flush()
+        self._wf = wf
+        end = len(wf.ops)
+        if start >= end:
+            # nothing newly recorded: keep initial-array placement current
+            # (a fetch of a fresh array must see its payload) without
+            # opening an empty segment
+            if self._pending:
+                seg = self._pending[-1]
+                seg.init_upto = len(wf.initial)
+                seg.pinned = self._pinned(wf)
+            else:
+                self._place_initial(wf, len(wf.initial))
+            return self._stats
+        if self._pending and self._pending[-1].end != start:
+            # overlapping or rewound range: the pending trace is not a
+            # contiguous program — materialise it first
+            self._flush()
+        self._pending.append(
+            Segment(start, end, self._pinned(wf), len(wf.initial)))
+        if not self.stitch:
+            return self._flush()
+        return self._stats
 
-    # -- planned replay (default) ---------------------------------------------
+    # -- program flush ---------------------------------------------------------
     def _pinned(self, wf: Workflow) -> set:
         # Every ref's *head* (latest version as of this sync) is pinned: the
         # user may fetch() it, and — under incremental sync — ops recorded
@@ -229,41 +292,92 @@ class LocalExecutor:
         # head that a later segment consumed).  Superseded versions can
         # never gain new readers (recording always reads the then-current
         # head), so they remain reclaimable after their last recorded
-        # reader; a pinned head becomes reclaimable in the segment that
-        # supersedes it.
+        # reader; under stitching only the *last* pending segment's snapshot
+        # governs the program, so a head one sync pinned is dropped at its
+        # true last read once a later segment supersedes it.
         return {ref.head.key for ref in wf.refs.values()}
 
-    def _run_planned(self, wf: Workflow, start: int) -> ExecutionStats:
-        plan = plan_for(wf, start, len(wf.ops), self.n_nodes,
-                        self.collective_mode, self._where, self._pinned(wf))
+    def _place_initial(self, wf: Workflow, upto: int) -> None:
+        # Materialise initial payloads where the sequential program created
+        # them (``wf.array(..., rank=r)``); transfers away from there are
+        # implicit.  Only items recorded since the last placement are new.
+        if self._init_seen < upto:
+            for vkey, (payload, rank) in islice(
+                    wf.initial.items(), self._init_seen, upto):
+                if vkey not in self._where:
+                    self._place(rank, vkey, payload)
+            self._init_seen = upto
+
+    def _flush(self) -> ExecutionStats:
+        pending, self._pending = self._pending, []
+        wf = self._wf
+        # the workflow reference only serves the pending trace — dropping
+        # it lets a finished workflow (its op list, index maps and initial
+        # payloads) be reclaimed while the executor lives on
+        self._wf = None
+        last = pending[-1]
+        self._place_initial(wf, last.init_upto)
+        start, end = pending[0].start, last.end
+        if start >= end:
+            return self._stats
+        # observability: attribute process-wide cache traffic to this flush
+        ph, pm = PLAN_CACHE_STATS["hits"], PLAN_CACHE_STATS["misses"]
+        gh, gm = PROGRAM_CACHE_STATS["hits"], PROGRAM_CACHE_STATS["misses"]
+        eh, em = self._exec_cache.hits, self._exec_cache.misses
+        if self.mode == "interpret":
+            self._run_interpret(wf, start, end, last.pinned)
+        else:
+            self._run_planned(wf, start, end, last.pinned)
+        st = self._stats
+        st.plan_cache_hits += PLAN_CACHE_STATS["hits"] - ph
+        st.plan_cache_misses += PLAN_CACHE_STATS["misses"] - pm
+        st.program_cache_hits += PROGRAM_CACHE_STATS["hits"] - gh
+        st.program_cache_misses += PROGRAM_CACHE_STATS["misses"] - gm
+        st.exec_cache_hits += self._exec_cache.hits - eh
+        st.exec_cache_misses += self._exec_cache.misses - em
+        return st
+
+    # -- planned replay (default) ---------------------------------------------
+    def _run_planned(self, wf: Workflow, start: int, end: int,
+                     pinned: set) -> ExecutionStats:
+        plan = resolve_plan(wf, start, end, self.n_nodes,
+                            self.collective_mode, self._where, pinned)
         base_round = self._round_counter
+        self._wavefront_base = len(self._stats.wavefronts)
         self.backend.execute(self, wf, plan)
-        # segment-end residency pass: whatever backend ran, partially-dead
-        # fused buckets must not outlive the segment (drop-list parity —
+        # program-end residency pass: whatever backend ran, partially-dead
+        # fused buckets must not outlive the flush (drop-list parity —
         # serial/threads release rows they GC, the spill concretises the
         # survivors so process residency matches the live-set accounting).
+        # Seams *inside* the program no longer spill: a bucket riding a
+        # stitched chain stays lazy across them.
         spill_dead_buckets(self)
-        stats = self.stats
+        stats = self._stats
         stats.ops_executed += len(plan.schedule)
         # zero-copy accounting: every InOut write in pass-by-value C++
         # semantics would deep-copy; versioning just re-points.
         stats.copies_elided += plan.total_writes
         self._round_counter = base_round + plan.n_rounds
-        # wavefronts accumulate across incremental run() segments
+        # wavefronts accumulate across program flushes
         stats.wavefronts.extend(plan.wavefront_counts)
         stats.wavefront_flops.extend(plan.level_flops)
         return stats
 
     # -- reference interpreter (trace order, per-op) --------------------------
-    def _run_interpret(self, wf: Workflow, start: int) -> ExecutionStats:
-        ops = wf.ops[start:]
+    def _run_interpret(self, wf: Workflow, start: int, end: int,
+                       pinned: set) -> ExecutionStats:
+        ops = wf.ops[start:end]
 
-        # Reader refcounts for version GC within this run.
+        # Program-wide wavefront levels: transfers are attributed to the
+        # global level ordinal they feed (the makespan model's overlap key).
+        level_of, counts = wavefront_levels(wf, start, end)
+        base = len(self._stats.wavefronts)
+
+        # Reader refcounts for version GC within this program.
         readers: dict[tuple[int, int], int] = {}
         for op_node in ops:
             for v in op_node.reads:
                 readers[v.key] = readers.get(v.key, 0) + 1
-        pinned = self._pinned(wf)
 
         # Precompute, per version, the set of ranks that will read it — this
         # is the "queue of communications involving the same object" the
@@ -278,9 +392,11 @@ class LocalExecutor:
         # started eagerly (async in real Bind), giving comm/compute overlap.
         for op_node in ops:
             ranks = placement_ranks(op_node.placement)
+            wavefront = base + level_of[op_node.op_id] - 1
             # 1. implicit transfers for inputs not local yet
             for v in op_node.reads:
-                self._ship(v.key, set(ranks) | (reader_ranks.get(v.key) or set()))
+                self._ship(v.key, set(ranks) | (reader_ranks.get(v.key) or set()),
+                           wavefront)
             # 2. execute the transaction on its rank(s)
             payload_args = []
             for ref, v_or_const, intent in op_node.args:
@@ -300,8 +416,8 @@ class LocalExecutor:
                     self._place(rank, v.key, payload)
             # zero-copy accounting: every InOut write in pass-by-value C++
             # semantics would deep-copy; versioning just re-points.
-            self.stats.copies_elided += len(op_node.writes)
-            self.stats.ops_executed += 1
+            self._stats.copies_elided += len(op_node.writes)
+            self._stats.ops_executed += 1
             self._note_live()
             # 3. version GC: drop payloads whose last reader has run
             for v in op_node.reads:
@@ -309,8 +425,7 @@ class LocalExecutor:
                 if readers[v.key] <= 0 and v.key not in pinned:
                     self._drop(v.key)
 
-        # wavefronts accumulate across incremental run() segments
-        self.stats.wavefronts.extend(self.wavefronts(wf, start=start))
-        self.stats.wavefront_flops.extend(
-            wavefront_flops(wf, start, len(wf.ops)))
-        return self.stats
+        # wavefronts accumulate across program flushes
+        self._stats.wavefronts.extend(counts)
+        self._stats.wavefront_flops.extend(wavefront_flops(wf, start, end))
+        return self._stats

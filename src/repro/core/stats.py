@@ -10,7 +10,10 @@ exposing ``transfer_time(src, dst, nbytes)``) the stats convert message
 counts into *estimated simulated time*: :meth:`ExecutionStats.estimated_makespan`
 charges each transfer round the maximum of its concurrent hops, which makes
 ``tree`` vs ``naive`` collectives and backend-vs-backend ablations comparable
-in seconds, not just message counts.
+in seconds, not just message counts.  Transfers carry the global wavefront
+ordinal they precede, so the default *contention-aware* makespan overlaps
+each level's communication with its compute (``max(comm, compute)`` per
+level); ``overlap=False`` keeps the legacy summed model for A/B comparison.
 """
 
 from __future__ import annotations
@@ -36,6 +39,10 @@ class TransferEvent:
     nbytes: int
     round_id: int          # rounds of one collective may fly concurrently
     collective: str        # "p2p" | "broadcast" | "reduce"
+    # global wavefront ordinal (index into ``ExecutionStats.wavefronts``)
+    # of the level this transfer feeds — lets the makespan model overlap a
+    # level's communication with its compute
+    wavefront: int = 0
 
 
 @dataclasses.dataclass
@@ -55,6 +62,15 @@ class ExecutionStats:
     # ``OpNode.flops`` placed on that rank) — aligned with ``wavefronts``,
     # accumulated the same way; priced by ``Topology.flops_per_s``.
     wavefront_flops: list[int] = dataclasses.field(default_factory=list)
+    # Observability: cache traffic attributable to this executor's flushes
+    # (sampled as deltas of the process-wide counters around each flush) —
+    # lets stitched-replay reuse be asserted in tests and shown in benches.
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    program_cache_hits: int = 0
+    program_cache_misses: int = 0
+    exec_cache_hits: int = 0
+    exec_cache_misses: int = 0
 
     @property
     def bytes_transferred(self) -> int:
@@ -108,16 +124,47 @@ class ExecutionStats:
             return 0.0
         return sum(f / rate for f in self.wavefront_flops)
 
-    def estimated_makespan(self, topology, op_time_s: float = 0.0) -> float:
-        """Estimated simulated makespan: comm rounds + wavefront compute.
+    def estimated_makespan(self, topology, op_time_s: float = 0.0,
+                           overlap: bool = True) -> float:
+        """Estimated simulated makespan of the execution under ``topology``.
 
-        The compute term prices each level's critical-path flops when the
-        topology declares a ``flops_per_s`` rate (see
-        :meth:`estimated_compute_time`); ``op_time_s`` additionally charges
-        a uniform per-level cost (levels execute their ops concurrently on
-        an ideal machine, so that term is ``critical_path * op_time_s``).
-        With the defaults this is the pure communication makespan.
+        The default model is *contention-aware*: each wavefront level
+        overlaps its communication (the rounds feeding that level, priced
+        as serialised round-maxima) with its compute (critical-path flops
+        at the topology's ``flops_per_s`` rate) and costs
+        ``max(comm, compute)``; levels serialise.  This models Bind's
+        eager asynchronous ships (a version travels the moment it exists,
+        well before its consuming level starts), so it is an *optimistic*
+        bound — perfect prefetch hides a level's input transfers behind
+        earlier compute.  ``overlap=False`` keeps the legacy summed model
+        (``comm_total + compute_total``), the *pessimistic* no-prefetch
+        bound; real machines land between the two.  The models agree
+        whenever no level has both terms (in particular whenever the
+        topology prices compute at zero, so the default flip preserves
+        all communication-only makespans).
+
+        ``op_time_s`` additionally charges a uniform per-level cost
+        (``critical_path * op_time_s``) in both models.
         """
-        return (self.estimated_comm_time(topology)
-                + self.estimated_compute_time(topology)
-                + self.critical_path * op_time_s)
+        if not overlap:
+            return (self.estimated_comm_time(topology)
+                    + self.estimated_compute_time(topology)
+                    + self.critical_path * op_time_s)
+        rounds: dict[tuple[int, int], float] = {}
+        for t in self.transfers:
+            key = (t.wavefront, t.round_id)
+            dt = topology.transfer_time(t.src, t.dst, t.nbytes)
+            if dt > rounds.get(key, -1.0):
+                rounds[key] = dt
+        comm: dict[int, float] = {}
+        for (w, _r), dt in rounds.items():
+            comm[w] = comm.get(w, 0.0) + dt
+        rate = getattr(topology, "flops_per_s", 0.0) or 0.0
+        flops = self.wavefront_flops
+        total = 0.0
+        n_levels = max(len(flops), max(comm) + 1 if comm else 0)
+        for w in range(n_levels):
+            c = comm.get(w, 0.0)
+            f = flops[w] / rate if rate > 0.0 and w < len(flops) else 0.0
+            total += c if c >= f else f
+        return total + self.critical_path * op_time_s

@@ -31,7 +31,14 @@ class In:
 
 
 class Out:
-    """Argument is write-only — a fresh version is generated, old not read."""
+    """Argument is write-only — a fresh version is generated, old not read.
+
+    The op body receives ``None`` at that position (C++ out-ref semantics:
+    the previous payload's *content* is never an input), so version GC is
+    free to reclaim a superseded version the moment its true last reader
+    ran — program-wide GC under stitching relies on this (an Out op must
+    not resurrect a demand for a payload the model says it never reads).
+    """
 
 
 class InOut:
@@ -304,8 +311,13 @@ class Workflow:
             if ref is None:
                 rec_args.append((None, v, In))
                 continue
-            if intent in (In, InOut):
-                reads.append(v)
+            if intent is Out:
+                # write-only: replay passes None (see :class:`Out`) — the
+                # superseded version is never demanded at dispatch, so GC
+                # may have reclaimed it by then
+                rec_args.append((None, None, Out))
+                continue
+            reads.append(v)
             rec_args.append((ref, v, intent))
         for ref, v, intent in snap:
             if ref is not None and intent in (Out, InOut):

@@ -186,9 +186,10 @@ def test_fused_buckets_split_on_constant_type():
 
 
 def test_fused_incremental_sync_materializes_lazy_rows():
-    """A fused segment leaves lazy BatchSlice rows in the stores; a later
-    segment with no fusion groups must still consume them correctly (the
-    wholesale serial delegation would feed raw BatchSlice to op bodies)."""
+    """A fused, already-flushed segment leaves lazy BatchSlice rows in the
+    stores; a later segment with no fusion groups must still consume them
+    correctly (the wholesale serial delegation would feed raw BatchSlice to
+    op bodies)."""
     jnp = pytest.importorskip("jax.numpy")
     fb = bind.FusedBatchBackend()
     ex = bind.LocalExecutor(1, backend=fb)
@@ -197,7 +198,8 @@ def test_fused_incremental_sync_materializes_lazy_rows():
               for i in range(4)]
         for x in xs:
             scale(x, 2.0)
-        wf.sync()                       # fuses: stores now hold lazy rows
+        wf.sync()
+        ex.flush()                      # fuses: stores now hold lazy rows
         assert fb.batches_dispatched == 1
         scale(xs[0], 3.0)               # chain segment: no fusion groups
         wf.sync()
@@ -313,6 +315,30 @@ def _consume(x, out):
 
 
 _consume.__bind_intents__ = (bind.In, bind.InOut)
+
+
+def test_overlapped_makespan_prices_levels_by_max():
+    """Contention-aware makespan (the default): each wavefront level costs
+    max(comm, compute); overlap=False keeps the summed legacy model."""
+    topo = make_topology("flat", 2, latency_s=1e-3, flops_per_s=1e9)
+    stats = bind.ExecutionStats()
+    stats.wavefronts = [1, 1]
+    stats.wavefront_flops = [5_000_000, 0]      # level 0: 5 ms compute
+    stats.transfers = [
+        # level 0: one 1 ms round — hidden under its 5 ms compute
+        bind.TransferEvent((0, 0), 0, 1, 0, 1, "p2p", wavefront=0),
+        # level 1: one 1 ms round — nothing to overlap with
+        bind.TransferEvent((0, 1), 0, 1, 0, 2, "p2p", wavefront=1),
+    ]
+    overlapped = stats.estimated_makespan(topo)
+    summed = stats.estimated_makespan(topo, overlap=False)
+    np.testing.assert_allclose(overlapped, 5e-3 + 1e-3)
+    np.testing.assert_allclose(summed, 5e-3 + 2e-3)
+    assert overlapped < summed
+    # without a flops rate the two models agree (communication-only)
+    legacy = make_topology("flat", 2, latency_s=1e-3)
+    np.testing.assert_allclose(stats.estimated_makespan(legacy),
+                               stats.estimated_makespan(legacy, overlap=False))
 
 
 def test_tree_schedule_estimated_time():

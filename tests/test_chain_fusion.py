@@ -372,6 +372,7 @@ def test_surviving_batch_row_spills_to_match_accounting():
         for x in xs[1:]:
             shift(x, 1.0)       # consumes rows 1..n-1; row 0 survives
         wf.sync()
+        ex.flush()
         assert fb.batches_dispatched == 2
         # the survivor was eagerly materialised...
         head = ex._stores[0][xs[0].ref.head.key]
@@ -397,6 +398,7 @@ def test_fully_live_bucket_stays_lazy():
         for x in xs:
             scale(x, 3.0)
         wf.sync()
+        ex.flush()
         rows = [ex._stores[0][x.ref.head.key] for x in xs]
         assert all(type(r) is BatchSlice for r in rows)
         assert _actual_residency(ex) == ex._live_bytes
@@ -420,6 +422,7 @@ def test_fetch_releases_row_then_segment_spill_drops_buffer():
                                    np.full((4, 4), 2.0))
         scale(xs[0], 1.0)                   # second segment
         wf.sync()
+        ex.flush()
         assert not ex._lazy_buckets
         for payload in ex._stores[0].values():
             assert type(payload) is not BatchSlice
@@ -593,6 +596,47 @@ def test_varying_exterior_chain_width_gt1():
         np.testing.assert_allclose(outs[j], np.full((4, 4), expected))
 
 
+def test_prestacked_exterior_rows_pass_through_as_xs():
+    """When a chain's per-level varying exteriors are exactly the rows of
+    one fused bucket's stacked buffer, that buffer is scanned directly as
+    xs — no per-row materialise + restack (ROADMAP follow-up)."""
+    depth = 6
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        y = wf.array(jnp.zeros((4, 4), jnp.float32), "y")
+        zs = [wf.array(jnp.full((4, 4), float(l + 1), jnp.float32), f"z{l}")
+              for l in range(depth)]
+        for z in zs:
+            shift(z, 1.0)       # one bucket: depth lazy rows, one buffer
+        for z in zs:
+            wf.call(_add_c0, (y, z), name="add")    # chain: z_l varies per level
+        out = np.asarray(wf.fetch(y))
+    assert fb.batches_dispatched == 1 and fb.chains_dispatched == 1
+    assert fb.xs_passthrough == 1
+    expected = float(sum(l + 2 for l in range(depth)))
+    np.testing.assert_allclose(out, np.full((4, 4), expected))
+
+
+def test_scattered_exterior_rows_still_stack():
+    """Exteriors NOT backed by one bucket (plain arrays) take the
+    materialise-and-stack path — the passthrough is an optimisation, not a
+    requirement."""
+    depth = 5
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb)
+    with bind.Workflow(executor=ex) as wf:
+        y = wf.array(jnp.zeros((4, 4), jnp.float32), "y")
+        zs = [wf.array(jnp.full((4, 4), float(l + 1), jnp.float32), f"z{l}")
+              for l in range(depth)]
+        for z in zs:
+            wf.call(_add_c0, (y, z), name="add")
+        out = np.asarray(wf.fetch(y))
+    assert fb.chains_dispatched == 1 and fb.xs_passthrough == 0
+    np.testing.assert_allclose(
+        out, np.full((4, 4), float(sum(range(1, depth + 1)))))
+
+
 def test_int_constants_into_float_carry_do_not_upcast():
     """Hoisted int constants ride as an int32 xs array; the float32 carry
     dtype is preserved (int32 never upcasts f32) and the chain dispatches."""
@@ -639,6 +683,7 @@ def test_binop_chain_spill_residency():
         for y in ys[1:]:
             scale(y, 2.0)       # consumes rows 1..3; row 0 survives
         wf.sync()
+        ex.flush()
         assert fb.chains_dispatched == 1
         head = ex._stores[0][ys[0].ref.head.key]
         assert type(head) is not BatchSlice
@@ -713,6 +758,7 @@ def test_plan_cache_misses_on_carry_pos_and_payload_layout():
             y = wf.array(jnp.ones((4, 4), jnp.float32), "y")
             x = wf.array(jnp.ones((4, 4), jnp.float32), "x")
             build(wf, y, x)
+        ex.flush()
     after = bind.PLAN_CACHE_STATS
     assert after["misses"] == before["misses"] + 4
     assert after["hits"] == before["hits"]
@@ -759,15 +805,25 @@ def test_flops_feed_estimated_makespan():
     # identical transfer streams, but compute-bound levels now cost time
     assert comm_bound.bytes_transferred == compute_bound.bytes_transferred
     est_comm = comm_bound.estimated_makespan(topo)
-    est_compute = compute_bound.estimated_makespan(topo)
+    # legacy summed model (overlap=False): comm and compute are additive
+    est_summed = compute_bound.estimated_makespan(topo, overlap=False)
     # each level charges its busiest rank: 1e7 flops / 1e9 flops/s per level
     expected_compute = sum(compute_bound.wavefront_flops) / 1e9
-    np.testing.assert_allclose(est_compute - est_comm, expected_compute)
-    assert est_compute > est_comm
-    # a rate-less topology prices compute at zero (pre-flops behaviour)
+    np.testing.assert_allclose(est_summed - est_comm, expected_compute)
+    assert est_summed > est_comm
+    # contention-aware default: each level costs max(comm, compute), so the
+    # makespan is bounded by the summed model and never below compute alone
+    est_overlap = compute_bound.estimated_makespan(topo)
+    assert expected_compute <= est_overlap <= est_summed
+    # here the only comm feeds a level that also computes 10 ms — it hides
+    np.testing.assert_allclose(est_overlap, expected_compute)
+    # a rate-less topology prices compute at zero (pre-flops behaviour) and
+    # both models collapse to the communication makespan
     legacy = make_topology("flat", 2)
     np.testing.assert_allclose(compute_bound.estimated_makespan(legacy),
                                est_comm)
+    np.testing.assert_allclose(
+        compute_bound.estimated_makespan(legacy, overlap=False), est_comm)
 
 
 def test_wavefront_flops_identical_across_modes_and_backends():

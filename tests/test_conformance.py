@@ -4,14 +4,16 @@ Bind's core claim is that one recorded partitioned global workflow can be
 replayed by any dispatch strategy without changing program semantics.  This
 suite generates *seeded random workflows* — random DAG shapes, mixed
 jax/NumPy/int payloads, random ``n_nodes`` and placements (ships), random
-incremental ``run()`` segment boundaries, fns that defeat vmap/scan tracing,
-and **chain-shaped regions**: same-signature runs (chain-fusion bait),
-binary-op runs with random carry position and per-level exterior operands,
-axpy runs and unary runs over per-level *varying* constants (hoisted-xs
-bait), plus adversarial chain-breakers (mid-chain ship via a placement
-flip, dtype flips from int payloads under float constants, untraceable
-branchy fns, NumPy payloads) — and replays each across ``interpret`` /
-``serial`` / ``threads`` / ``fused``, asserting the conformance contract:
+incremental ``run()`` segment boundaries — including boundaries placed
+*inside* generated chains, which program stitching (the default) must fuse
+back across — fns that defeat vmap/scan tracing, and **chain-shaped
+regions**: same-signature runs (chain-fusion bait), binary-op runs with
+random carry position and per-level exterior operands, axpy runs and unary
+runs over per-level *varying* constants (hoisted-xs bait), plus adversarial
+chain-breakers (mid-chain ship via a placement flip, dtype flips from int
+payloads under float constants, untraceable branchy fns, NumPy payloads) —
+and replays each across ``interpret`` / ``serial`` / ``threads`` /
+``fused``, asserting the conformance contract:
 
 * **value parity** — every fetched payload identical (values *and* dtypes;
   a version GC'd in one backend must be GC'd in all);
@@ -158,6 +160,12 @@ def make_spec(seed: int) -> dict:
     n_ops = int(rng.integers(8, 30))
     ops = []
     n_handles = n_arrays
+
+    def in_chain_sync(depth):
+        # an incremental run() boundary *inside* the chain: stitching (the
+        # default) must re-detect the chain across the seam
+        return int(rng.integers(1, depth)) if rng.random() < 0.25 else None
+
     for _ in range(n_ops):
         placement = int(rng.integers(0, n_nodes)) if rng.random() < 0.6 else None
         form = rng.random()
@@ -169,9 +177,10 @@ def make_spec(seed: int) -> dict:
             ops.append(("binary", int(rng.integers(0, len(BINARY))), target,
                         int(rng.integers(0, n_handles)), placement))
         elif form < 0.67:       # deep same-signature chain (chain fusion bait)
+            depth = int(rng.integers(3, 11))
             ops.append(("chain", int(rng.integers(0, 2)), target,
                         CONSTS[int(rng.integers(0, len(CONSTS)))],
-                        int(rng.integers(3, 11)), placement))
+                        depth, in_chain_sync(depth), placement))
         elif form < 0.77:       # unary chain over per-level varying constants
             depth = int(rng.integers(3, 9))
             if rng.random() < 0.3:  # adversarial: mixed types defeat hoisting
@@ -181,7 +190,7 @@ def make_spec(seed: int) -> dict:
                 consts = tuple(float(np.round(rng.uniform(0.5, 1.5), 3))
                                for _ in range(depth))
             ops.append(("vchain", int(rng.integers(0, len(UNARY))), target,
-                        consts, placement))
+                        consts, in_chain_sync(depth), placement))
         elif form < 0.9:        # binary-op chain, random carry position
             depth = int(rng.integers(3, 9))
             carry = int(rng.integers(0, 2))
@@ -196,7 +205,8 @@ def make_spec(seed: int) -> dict:
                        if rng.random() < 0.25 else None)
             ops.append(("binchain", carry,
                         int(rng.integers(0, len(pool))), target, others,
-                        ship_at, int(rng.integers(0, n_nodes)), placement))
+                        ship_at, int(rng.integers(0, n_nodes)),
+                        in_chain_sync(depth), placement))
         elif form < 0.96:       # axpy chain: exterior + varying constants.
             # Power-of-two constants keep x*s exact: the eager interpreter
             # (mul, add — two roundings) and the jitted backends (XLA fuses
@@ -205,7 +215,7 @@ def make_spec(seed: int) -> dict:
             consts = tuple(float(2.0 ** rng.integers(-2, 3))
                            for _ in range(depth))
             ops.append(("axpy", target, int(rng.integers(0, n_handles)),
-                        consts, placement))
+                        consts, in_chain_sync(depth), placement))
         else:                   # fresh output via wf.apply
             ops.append(("apply", target, int(rng.integers(0, n_handles)),
                         placement))
@@ -231,19 +241,25 @@ def _record_op(wf, handles, spec_op) -> None:
             wf.call(BINARY[fi], (handles[target], handles[other]),
                     name=BINARY[fi].__name__)
         elif form == "chain":
-            _, fi, target, const, depth, _ = spec_op
+            _, fi, target, const, depth, sync_at, _ = spec_op
             for _i in range(depth):
+                if _i == sync_at:
+                    wf.sync()   # segment boundary INSIDE the chain
                 wf.call(UNARY[fi], (handles[target], const),
                         name=UNARY[fi].__name__)
         elif form == "vchain":
-            _, fi, target, consts, _ = spec_op
-            for c in consts:
+            _, fi, target, consts, sync_at, _ = spec_op
+            for _i, c in enumerate(consts):
+                if _i == sync_at:
+                    wf.sync()   # segment boundary INSIDE the chain
                 wf.call(UNARY[fi], (handles[target], c),
                         name=UNARY[fi].__name__)
         elif form == "binchain":
-            _, carry, fi, target, others, ship_at, p2, _ = spec_op
+            _, carry, fi, target, others, ship_at, p2, sync_at, _ = spec_op
             fn = (BIN_CARRY1 if carry else BIN_CARRY0)[fi]
             for i, other in enumerate(others):
+                if i == sync_at:
+                    wf.sync()   # segment boundary INSIDE the chain
                 ictx = (bind.node(p2)
                         if ship_at is not None and i >= ship_at else None)
                 if ictx is not None:
@@ -256,8 +272,10 @@ def _record_op(wf, handles, spec_op) -> None:
                     if ictx is not None:
                         ictx.__exit__(None, None, None)
         elif form == "axpy":
-            _, target, other, consts, _ = spec_op
-            for c in consts:
+            _, target, other, consts, sync_at, _ = spec_op
+            for _i, c in enumerate(consts):
+                if _i == sync_at:
+                    wf.sync()   # segment boundary INSIDE the chain
                 wf.call(_axpy, (handles[target], handles[other], c),
                         name="axpy")
         else:                   # apply: fresh output array
@@ -378,11 +396,17 @@ def test_conformance_fixed_seeds(conformance_seed):
 
 def test_fuzzer_exercises_chain_shapes():
     """Keep the fuzzer honest: the generator must actually emit every
-    chain-shaped region (else the sweep silently stops covering them), and
-    the fused backend must actually dispatch scans on some of them."""
-    forms = {op[0] for i in range(N_WORKFLOWS)
-             for op in make_spec(i)["ops"]}
+    chain-shaped region (else the sweep silently stops covering them) —
+    including segment boundaries placed *inside* chains (the stitching
+    bait) — and the fused backend must actually dispatch scans on some of
+    them."""
+    all_ops = [op for i in range(N_WORKFLOWS) for op in make_spec(i)["ops"]]
+    forms = {op[0] for op in all_ops}
     assert {"chain", "vchain", "binchain", "axpy"} <= forms
+    in_chain_syncs = [op for op in all_ops
+                     if op[0] in ("chain", "vchain", "binchain", "axpy")
+                     and op[-2] is not None]
+    assert in_chain_syncs, "no in-chain segment boundary ever emitted"
     dispatched = 0
     for seed in range(8):
         fb = bind.FusedBatchBackend()

@@ -53,11 +53,12 @@ def test_second_sync_does_not_rerun_executed_ops():
         a = wf.array(np.ones((4, 4)))
         for _ in range(5):
             wf.call(_counting, (a, 1.01), name="count")
-        wf.sync()
+        wf.sync()          # defers: sync only marks the segment boundary
+        assert _CALLS["n"] == 0
+        wf.fetch(a)        # materialisation flushes the deferred program
         assert _CALLS["n"] == 5
         wf.sync()          # nothing new recorded -> pure no-op
-        assert _CALLS["n"] == 5
-        wf.fetch(a)        # fetch implies sync; still no re-execution
+        wf.fetch(a)        # still no re-execution
         assert _CALLS["n"] == 5
     assert _CALLS["n"] == 5
 
@@ -117,6 +118,7 @@ def test_executable_cache_hit_counts():
         a = wf.array(np.ones((4, 4)))
         for _ in range(n_ops):
             scale(a, 1.1)
+    ex.flush()
     # one signature: (scale, (4,4) float64, float) -> 1 miss, rest hits
     assert cache.misses == 1
     assert cache.hits == n_ops - 1
@@ -133,6 +135,7 @@ def test_executable_cache_distinct_signatures():
         for _ in range(3):
             scale(a, 1.1)   # signature 1
             scale(b, 1.1)   # signature 2 (different shape)
+    ex.flush()
     assert cache.misses == 2
     assert cache.hits == 4
     assert len(cache) == 2

@@ -1,0 +1,358 @@
+"""Program-level execution: cross-segment plan stitching, the
+program-trace cache, and program-wide GC.
+
+The executor frontend defers incremental ``run()`` segments into a pending
+*program trace* and plans the whole range at once at the next
+materialization boundary (``fetch``/``value``, a ``stats`` read, or an
+explicit ``flush()``).  These tests pin the observable contract:
+
+* **seam chain re-detection** — a signature chain split across ``run()``
+  segments dispatches as ONE ``jit(lax.scan)`` under ``backend="fused"``,
+  with stats and transfer streams byte-identical to *unstitched* serial;
+* **deferral semantics** — ``sync()`` only marks the segment boundary;
+  op bodies run at the flush, exactly once;
+* **program-trace cache** — loop-shaped programs (structurally identical
+  segments whose version keys advance every iteration) re-bind the cached
+  plan skeleton instead of re-running analysis, observable through the new
+  ``ExecutionStats`` cache counters;
+* **GC head-unpinning** — a head pinned at one segment's sync is dropped
+  at its true last read once a later pending segment supersedes it without
+  reading it;
+* **interpret parity** — the reference interpreter replays the same
+  stitched program scope, keeping the conformance contract's cross-mode
+  invariants.
+"""
+
+import numpy as np
+import pytest
+
+from repro import core as bind
+
+jnp = pytest.importorskip("jax.numpy")
+
+
+@bind.op
+def scale(a: bind.InOut, s: bind.In):
+    return a * s
+
+
+def _absorb(b, a):
+    return b + a
+
+
+_absorb.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _fresh(x):
+    assert x is None        # Out intent: the old payload is never an input
+    return np.full((64, 64), 9.0)
+
+
+_fresh.__bind_intents__ = (bind.Out,)
+
+
+_CALLS = {"n": 0}
+
+
+def _counting(a, s):
+    _CALLS["n"] += 1
+    return a * s
+
+
+_counting.__bind_intents__ = (bind.InOut, bind.In)
+
+
+# ---------------------------------------------------------------------------
+# Seam-crossing chain fusion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [1, 8])
+def test_seam_crossing_chain_dispatches_once(width):
+    """The acceptance criterion: a chain split across 4 run() segments
+    dispatches as ONE scan under fused, with stats and transfer streams
+    byte-identical to unstitched serial replay."""
+    depth, n_segments = 64, 4
+
+    def run(backend, stitch):
+        ex = bind.LocalExecutor(1, backend=backend, stitch=stitch)
+        with bind.Workflow(executor=ex) as wf:
+            xs = [wf.array(jnp.full((4, 4), float(i + 1), jnp.float32),
+                           f"x{i}") for i in range(width)]
+            for _seg in range(n_segments):
+                for _ in range(depth // n_segments):
+                    for x in xs:
+                        scale(x, 1.01)
+                wf.sync()       # seam: stitched runs defer, eager ones plan
+            outs = [np.asarray(wf.fetch(x)) for x in xs]
+        return outs, ex.stats, ex
+
+    fb = bind.FusedBatchBackend()
+    fused_outs, fused_stats, fused_ex = run(fb, stitch=True)
+    serial_outs, serial_stats, serial_ex = run("serial", stitch=False)
+    assert fb.chains_dispatched == 1
+    assert fb.ops_chained == width * depth
+    for a, b in zip(fused_outs, serial_outs):
+        np.testing.assert_array_equal(a, b)
+    assert fused_stats.transfers == serial_stats.transfers
+    assert fused_stats.wavefronts == serial_stats.wavefronts
+    assert fused_stats.wavefront_flops == serial_stats.wavefront_flops
+    assert fused_stats.ops_executed == serial_stats.ops_executed
+    assert fused_stats.copies_elided == serial_stats.copies_elided
+    assert fused_stats.peak_live_bytes == serial_stats.peak_live_bytes
+    assert fused_stats.peak_live_payloads == serial_stats.peak_live_payloads
+    assert fused_ex._live_bytes == serial_ex._live_bytes
+    assert fused_ex._live_entries == serial_ex._live_entries
+
+
+def test_unstitched_seams_fragment_the_chain():
+    """Control for the above: with stitching off, every segment plans (and
+    dispatches) alone — one scan per segment."""
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb, stitch=False)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(jnp.ones((4, 4), jnp.float32), "a")
+        for _seg in range(4):
+            for _ in range(16):
+                scale(a, 1.01)
+            wf.sync()
+        np.asarray(wf.fetch(a))
+    assert fb.chains_dispatched == 4
+
+
+def test_stitched_plan_merges_independent_segment_wavefronts():
+    """Stitching plans the program, not the segments: ops of a later
+    segment that depend on nothing join the earliest level, in every mode."""
+    waves = {}
+    for mode, backend in [("plan", "serial"), ("plan", "threads"),
+                          ("plan", "fused"), ("interpret", "serial")]:
+        ex = bind.LocalExecutor(1, mode=mode, backend=backend)
+        with bind.Workflow(executor=ex) as wf:
+            a = wf.array(np.ones((4, 4)), "a")
+            b = wf.array(np.ones((4, 4)), "b")
+            scale(a, 2.0)
+            wf.sync()
+            scale(b, 3.0)       # independent of segment 1
+            wf.sync()
+        waves[(mode, backend)] = ex.stats.wavefronts
+    assert all(w == [2] for w in waves.values()), waves
+
+
+# ---------------------------------------------------------------------------
+# Deferral semantics
+# ---------------------------------------------------------------------------
+
+def test_sync_defers_and_flush_executes_once():
+    _CALLS["n"] = 0
+    ex = bind.LocalExecutor(1)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((2, 2)), "a")
+        for _ in range(3):
+            wf.call(_counting, (a, 1.5), name="count")
+        wf.sync()
+        assert _CALLS["n"] == 0          # deferred: sync marks the boundary
+        assert ex.stats.ops_executed == 3   # stats read materialises
+        assert _CALLS["n"] == 3
+        assert ex.stats.ops_executed == 3   # idempotent: no re-execution
+        assert _CALLS["n"] == 3
+        np.testing.assert_allclose(np.asarray(wf.fetch(a)),
+                                   np.full((2, 2), 1.5 ** 3))
+    assert _CALLS["n"] == 3
+
+
+def test_value_is_a_materialization_boundary():
+    ex = bind.LocalExecutor(1)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((2, 2)), "a")
+        scale(a, 4.0)
+        wf.sync()
+        assert ex._pending
+        np.testing.assert_allclose(ex.value(a.ref.head), np.full((2, 2), 4.0))
+        assert not ex._pending
+
+
+def test_explicit_flush_and_noop_flush():
+    ex = bind.LocalExecutor(1)
+    assert ex.flush().ops_executed == 0      # nothing pending: no-op
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((2, 2)), "a")
+        scale(a, 2.0)
+        wf.sync()
+        stats = ex.flush()
+        assert stats.ops_executed == 1 and not ex._pending
+
+
+def test_fetch_of_fresh_array_without_ops():
+    """An array created after the last segment's ops must be fetchable —
+    initial placement stays current even with an open pending program."""
+    ex = bind.LocalExecutor(1)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((2, 2)), "a")
+        scale(a, 2.0)
+        wf.sync()
+        b = wf.array(np.full((2, 2), 7.0), "b")     # no ops read b
+        np.testing.assert_allclose(np.asarray(wf.fetch(b)),
+                                   np.full((2, 2), 7.0))
+        np.testing.assert_allclose(np.asarray(wf.fetch(a)),
+                                   np.full((2, 2), 2.0))
+
+
+# ---------------------------------------------------------------------------
+# Program-trace cache: loop-shaped programs replay with zero re-analysis
+# ---------------------------------------------------------------------------
+
+def test_loop_iterations_hit_program_trace_cache():
+    """Iteration N of a fetch-per-step loop is structurally identical to
+    iteration 1 but every version key advanced — the exact-identity plan
+    cache misses, the relocatable program-trace cache re-binds."""
+    bind.clear_plan_cache()
+    bind.clear_program_cache()
+    n_iters, per = 6, 8
+    ex = bind.LocalExecutor(1)
+    with bind.Workflow(executor=ex) as wf:
+        u = wf.array(np.ones((4, 4)), "u")
+        for _it in range(n_iters):
+            for _ in range(per):
+                scale(u, 1.01)
+            out = np.asarray(wf.fetch(u))   # one program flush per iteration
+    np.testing.assert_allclose(out, np.full((4, 4), 1.01 ** (n_iters * per)))
+    stats = ex.stats
+    assert stats.program_cache_misses == 1          # iteration 1 built
+    assert stats.program_cache_hits == n_iters - 1  # the rest re-bound
+    assert stats.ops_executed == n_iters * per
+
+
+def test_rebound_chain_replays_jitted_executable():
+    """The program-trace cache composes with the executable cache: a loop
+    of fused chains re-binds the plan AND replays the compiled scan — one
+    dispatch per iteration, zero recompilation."""
+    bind.clear_plan_cache()
+    bind.clear_program_cache()
+    cache = bind.ExecutableCache()
+    fb = bind.FusedBatchBackend()
+    ex = bind.LocalExecutor(1, backend=fb, executable_cache=cache)
+    n_iters, per = 5, 8
+    with bind.Workflow(executor=ex) as wf:
+        u = wf.array(jnp.ones((4, 4), jnp.float32), "u")
+        for _it in range(n_iters):
+            for _ in range(per):
+                scale(u, 1.01)
+            out = np.asarray(wf.fetch(u))
+    np.testing.assert_allclose(
+        out, np.full((4, 4), 1.01 ** (n_iters * per), np.float32), rtol=1e-4)
+    assert fb.chains_dispatched == n_iters
+    assert ex.stats.program_cache_hits == n_iters - 1
+    assert cache.compiles == 1      # one scan executable for every iteration
+
+
+def test_identical_program_rebuild_hits_exact_plan_cache():
+    """A from-scratch rebuild of the same multi-segment program (fresh
+    Workflow, reset id streams) is an exact-identity plan-cache hit."""
+    bind.clear_plan_cache()
+    bind.clear_program_cache()
+
+    def build():
+        ex = bind.LocalExecutor(1)
+        with bind.Workflow(executor=ex) as wf:
+            a = wf.array(np.ones((4, 4)), "a")
+            for _seg in range(3):
+                for _ in range(4):
+                    scale(a, 1.1)
+                wf.sync()
+            np.asarray(wf.fetch(a))
+        return ex.stats
+
+    s1 = build()
+    s2 = build()
+    assert s1.plan_cache_hits == 0 and s1.plan_cache_misses == 1
+    assert s2.plan_cache_hits == 1 and s2.plan_cache_misses == 0
+    assert s1.program_cache_misses == 1
+    assert s2.program_cache_hits == 0   # exact hit resolved first
+
+
+# ---------------------------------------------------------------------------
+# Program-wide GC: head-unpinning across seams
+# ---------------------------------------------------------------------------
+
+def _gc_probe(stitch):
+    ex = bind.LocalExecutor(1, stitch=stitch)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((64, 64)), "a")
+        b = wf.array(np.ones((64, 64)), "b")
+        tmp = wf.apply(_absorb, [a, b], name="make_tmp")
+        wf.call(_absorb, (a, tmp), name="use_tmp")  # tmp.v0's only read
+        wf.sync()                   # tmp.v0 is a head here: per-segment GC pins it
+        wf.call(_fresh, (tmp,), name="supersede")   # writes tmp.v1, reads nothing
+        wf.sync()
+        ex.flush()
+        held = tmp.ref.version(0).key in ex._where
+        np.testing.assert_allclose(np.asarray(wf.fetch(a)),
+                                   np.full((64, 64), 3.0))
+    return held, ex
+
+
+def test_stitched_gc_unpins_head_a_later_segment_proves_dead():
+    """tmp's first head is read only in segment 1 and superseded (without a
+    read) in segment 2.  Per-segment execution must keep it forever (it was
+    a pinned head when segment 1 ran); the stitched program sees its true
+    lifetime and drops it at its last read."""
+    held_unstitched, _ = _gc_probe(stitch=False)
+    held_stitched, _ex = _gc_probe(stitch=True)
+    assert held_unstitched            # eager replay: pinned at segment 1
+    assert not held_stitched          # stitched: dropped at its last read
+
+
+# ---------------------------------------------------------------------------
+# Observability: cache counters on ExecutionStats
+# ---------------------------------------------------------------------------
+
+def test_stats_expose_cache_counters():
+    bind.clear_plan_cache()
+    bind.clear_program_cache()
+    cache = bind.ExecutableCache()
+    ex = bind.LocalExecutor(1, executable_cache=cache)
+    with bind.Workflow(executor=ex) as wf:
+        a = wf.array(np.ones((4, 4)), "a")
+        for _ in range(6):
+            scale(a, 1.1)
+        np.asarray(wf.fetch(a))
+    stats = ex.stats
+    assert stats.plan_cache_misses == 1 and stats.plan_cache_hits == 0
+    assert stats.program_cache_misses == 1 and stats.program_cache_hits == 0
+    assert stats.exec_cache_misses == 1 and stats.exec_cache_hits == 5
+
+
+# ---------------------------------------------------------------------------
+# Interpret parity on stitched programs
+# ---------------------------------------------------------------------------
+
+def _hops(stats):
+    return sorted((t.version_key, t.src, t.dst, t.nbytes, t.collective)
+                  for t in stats.transfers)
+
+
+def test_interpret_parity_on_seam_crossing_program():
+    """The reference interpreter replays the same stitched program scope:
+    values, hop multiset, wavefronts and flops match planned replay."""
+    def run(mode):
+        ex = bind.LocalExecutor(2, mode=mode)
+        with bind.Workflow(n_nodes=2, executor=ex) as wf:
+            a = wf.array(np.ones((8, 8)), "a")
+            b = wf.array(np.ones((8, 8)), "b", rank=1)
+            for _seg in range(3):
+                with bind.node(0):
+                    scale(a, 1.5)
+                with bind.node(1):
+                    wf.call(_absorb, (b, a), name="absorb")
+                wf.sync()
+            out_a = np.asarray(wf.fetch(a))
+            out_b = np.asarray(wf.fetch(b))
+        return (out_a, out_b), ex.stats
+
+    (pa, pb), plan_stats = run("plan")
+    (ia, ib), interp_stats = run("interpret")
+    np.testing.assert_array_equal(pa, ia)
+    np.testing.assert_array_equal(pb, ib)
+    assert _hops(plan_stats) == _hops(interp_stats)
+    assert plan_stats.wavefronts == interp_stats.wavefronts
+    assert plan_stats.wavefront_flops == interp_stats.wavefront_flops
+    assert plan_stats.ops_executed == interp_stats.ops_executed
