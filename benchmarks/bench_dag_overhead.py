@@ -54,7 +54,18 @@
 
 4. multi-versioning memory overhead: peak live payloads vs the
    single-version working set, with and without version GC (checked in
-   both executor modes).
+   both executor modes);
+
+5. fault recovery (``bench="fault_recovery"``): lineage-based narrow
+   recovery vs restarting the program.  A 64-level × 8-rank chain workload
+   (512 ops) loses rank 3 at wavefront 56; the recovery planner walks the
+   lost versions' lineage back to the initial placements and recomputes
+   only that chain's 56-op ancestry, then resumes the interrupted plan.
+   ``recovery_latency`` is the executor's measured recovery time (lineage
+   walk + sub-plan build + recompute + suffix replan); ``replay_latency``
+   is re-executing the whole program from scratch (what a lineage-less
+   runtime pays).  The CI-asserted acceptance bar is
+   ``recovery_vs_replay_speedup >= 2``.
 """
 
 from __future__ import annotations
@@ -178,6 +189,48 @@ def _stitched_chain_exec_time(backend, stitch: bool, width: int, depth: int,
             np.asarray(wf.fetch(y))
         t += time.perf_counter() - t0
         return t / n_programs
+
+
+def _per_rank_chain(wf, n_nodes: int, depth: int, tile: int):
+    x = np.ones((tile, tile))
+    arrs = [wf.array(x + r, rank=r) for r in range(n_nodes)]
+    for _ in range(depth):
+        for r, a in enumerate(arrs):
+            with bind.node(r):
+                scale(a, 1.0000001)
+    return arrs
+
+
+def _fault_recovery_times(n_nodes: int, depth: int, tile: int,
+                          kill_rank: int, kill_wavefront: int):
+    """(fault-free full-execution seconds, recovery seconds, faulted stats)
+    for a ``depth``-level per-rank scale chain.
+
+    The fault-free execution time is what a lineage-less runtime pays to
+    recover — it restarts the program, so it re-plans AND re-executes
+    everything (cold cache, like the fresh process a restart implies);
+    ``recovery_time_s`` is what the lineage walk + recovery sub-plan build
+    + ancestor recompute + suffix replan actually cost inside the faulted
+    run.
+    """
+    bind.clear_plan_cache()
+    ex0 = bind.LocalExecutor(n_nodes, mode="plan", backend="serial")
+    with bind.Workflow(n_nodes=n_nodes, executor=ex0) as wf:
+        _per_rank_chain(wf, n_nodes, depth, tile)
+        t0 = time.perf_counter()
+        wf.sync()
+        ex0.flush()
+        t_replay = time.perf_counter() - t0
+
+    inj = bind.FaultInjector.kill_rank(kill_rank, kill_wavefront)
+    ex1 = bind.LocalExecutor(n_nodes, mode="plan", backend="serial",
+                             fault_injector=inj)
+    with bind.Workflow(n_nodes=n_nodes, executor=ex1) as wf:
+        _per_rank_chain(wf, n_nodes, depth, tile)
+        wf.sync()
+        ex1.flush()
+    assert ex1.stats.recoveries == 1
+    return t_replay, ex1.stats.recovery_time_s, ex1.stats
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -458,6 +511,39 @@ def run(quick: bool = False) -> list[dict]:
             "peak_live_bytes": ex.stats.peak_live_bytes,
         })
         assert ex.stats.peak_live_payloads <= 2
+
+    # 5. fault recovery: narrow lineage recompute vs restarting the program.
+    #    Killing rank 3 at wavefront 56 of a 64-level x 8-rank chain loses
+    #    one live version whose ancestry is its own chain's 56 executed
+    #    levels — recovery replays those 56 ops (of 512), a lineage-less
+    #    runtime replays all 512.  Best-of-N with a fresh injector per rep.
+    n_nodes_f, depth_f, tile_f = 8, 64, 16
+    kill_rank_f, kill_wave_f = 3, 56
+    reps_f = 2 if quick else 5
+    _fault_recovery_times(n_nodes_f, depth_f, tile_f,
+                          kill_rank_f, kill_wave_f)          # warm caches
+    t_replay, t_rec = float("inf"), float("inf")
+    st_f = None
+    for _ in range(reps_f):
+        tr, trec, st = _fault_recovery_times(
+            n_nodes_f, depth_f, tile_f, kill_rank_f, kill_wave_f)
+        if trec < t_rec:
+            t_rec, st_f = trec, st
+        t_replay = min(t_replay, tr)
+    rows.append({
+        "bench": "fault_recovery", "backend": "serial",
+        "n_nodes": n_nodes_f, "depth": depth_f, "tile": tile_f,
+        "ops": n_nodes_f * depth_f,
+        "kill_rank": kill_rank_f, "kill_wavefront": kill_wave_f,
+        "recoveries": st_f.recoveries,
+        "recomputed_ops": st_f.recomputed_ops,
+        "recompute_ratio": round(st_f.recompute_ratio, 3),
+        "replay_latency_us": round(t_replay * 1e6, 1),
+        "recovery_latency_us": round(t_rec * 1e6, 1),
+        # acceptance bar (CI-asserted): narrow recovery >= 2x cheaper than
+        # restarting the program
+        "recovery_vs_replay_speedup": round(t_replay / max(t_rec, 1e-9), 2),
+    })
     return rows
 
 

@@ -62,7 +62,8 @@ def main() -> None:
                 if r.get("bench") in ("dag_overhead", "backend_parallel",
                                       "chain_fused", "binop_chain_fused",
                                       "stitched_chain_fused",
-                                      "versioning_memory")]
+                                      "versioning_memory",
+                                      "fault_recovery")]
     if quick and dag_rows:
         # quick numbers are smoke signals, never trajectory data — keep the
         # committed BENCH_dag_overhead.json untouched

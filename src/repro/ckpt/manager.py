@@ -125,7 +125,17 @@ class CheckpointManager:
         )
         for s in steps[: -self.keep_n] if self.keep_n else []:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
-        for n in os.listdir(self.dir):       # orphaned tmp dirs
+        self._gc_tmp()
+
+    def _gc_tmp(self) -> None:
+        """Remove orphaned ``.tmp`` step dirs (crash-mid-save leftovers).
+
+        Ran by :meth:`save`'s GC *and* at the top of :meth:`restore`: a job
+        that crashed mid-save and never saved again used to leave its
+        partial ``.tmp`` on disk forever — restore must never be able to
+        confuse one with a committed step.
+        """
+        for n in os.listdir(self.dir):
             full = os.path.join(self.dir, n)
             if n.endswith(".tmp") and not self._is_active(full):
                 shutil.rmtree(full, ignore_errors=True)
@@ -140,6 +150,7 @@ class CheckpointManager:
         """Restore into the structure of ``like``; re-shard via ``shardings``
         (a matching pytree of NamedSharding, or None for default placement).
         Returns (tree, extra)."""
+        self._gc_tmp()
         step = self.latest_step() if step is None else step
         assert step is not None, f"no checkpoint under {self.dir}"
         d = self._step_dir(step)

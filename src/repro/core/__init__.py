@@ -54,6 +54,13 @@ from .backends import (
     ThreadPoolBackend,
     get_backend,
 )
+from .backends.base import FaultInjector, RankFailure
+from .recovery import (
+    PlanCheckpoint,
+    build_subset_plan,
+    choose_replacement,
+    plan_recovery,
+)
 from . import lowering
 
 __all__ = [
@@ -69,4 +76,6 @@ __all__ = [
     "EXEC_CACHE", "ExecutableCache",
     "BACKENDS", "Backend", "SerialPlanBackend", "ThreadPoolBackend",
     "FusedBatchBackend", "get_backend",
+    "FaultInjector", "RankFailure", "PlanCheckpoint", "build_subset_plan",
+    "choose_replacement", "plan_recovery",
 ]

@@ -74,7 +74,15 @@ class ThreadPoolBackend(Backend):
     def execute(self, ex, wf, plan) -> None:
         ops = wf.ops
         schedule = plan.schedule
-        for lo, hi in plan.levels:
+        inj = getattr(ex, "fault_injector", None)
+        if inj is not None and not inj.armed:
+            inj = None
+        for li, (lo, hi) in enumerate(plan.levels):
+            if inj is not None:
+                # consult the injector before any of this level's state
+                # mutates — a raised RankFailure sees a boundary-consistent
+                # executor (all prior levels fully committed)
+                inj.check(ex, ex._wavefront_base + li, level=li)
             if hi - lo == 1:                      # chain fast path: no pool
                 p = schedule[lo]
                 if p.ships:

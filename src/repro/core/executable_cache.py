@@ -244,8 +244,9 @@ class ExecutableCache:
         array_args = [a for a in args
                       if getattr(a, "shape", None) is not None
                       and getattr(a, "dtype", None) is not None]
-        use_jit = bool(array_args) and all(
-            isinstance(a, jax.Array) for a in array_args)
+        use_jit = (bool(array_args)
+                   and all(isinstance(a, jax.Array) for a in array_args)
+                   and not getattr(fn, "__bind_nojit__", False))
         if not use_jit:
             return fn
         jitted = jax.jit(fn)

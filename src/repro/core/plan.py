@@ -188,6 +188,121 @@ class ExecutionPlan:
     def __len__(self) -> int:
         return len(self.schedule)
 
+    def rebind_ranks(self, rank_map: dict, holders: dict, pinned,
+                     wf=None) -> "ExecutionPlan":
+        """Re-bind this plan's skeleton to a remapped rank placement.
+
+        The elastic-degradation half of the fault-tolerance story: when a
+        rank is declared permanently dead, the structural analysis (level
+        slices, signature groups, chain alignment, wavefront counts) stays
+        valid — only the *placement-derived* products change.  This
+        re-simulates exec ranks, ship schedules and GC drop lists over the
+        existing schedule with every rank sent through ``rank_map``
+        (typically ``{dead: replacement}``), starting from the live
+        ``holders`` state, and recomputes ``level_flops`` against the
+        merged placement when ``wf`` is given (rank merging changes the
+        busiest-rank sum).  Chains whose interior levels acquire ships
+        under the new holder state are dropped (a fused chain must stay
+        interior-ship-free); everything else is shared with the template —
+        the same reuse contract as :meth:`rebind`.
+        """
+        pinned = set(pinned)
+        mapped_exec = []
+        readers: dict = {}
+        reader_ranks: dict = {}
+        for p in self.schedule:
+            er = tuple(dict.fromkeys(rank_map.get(r, r)
+                                     for r in p.exec_ranks))
+            mapped_exec.append(er)
+            for k in p.arg_keys:
+                if k is None:
+                    continue
+                readers[k] = readers.get(k, 0) + 1
+                s = reader_ranks.get(k)
+                if s is None:
+                    reader_ranks[k] = s = set()
+                s.update(er)
+        sim: dict = {}
+        naive = self.collective_mode == "naive"
+        rel_round = 0
+        schedule = []
+        for p, er in zip(self.schedule, mapped_exec):
+            ships = []
+            for k in p.arg_keys:
+                if k is None:
+                    continue
+                hold = sim.get(k)
+                if hold is None:
+                    rs = holders.get(k)
+                    assert rs, f"version {k} was never materialised"
+                    sim[k] = hold = set(rs)
+                missing = sorted((set(er) | reader_ranks[k]) - hold)
+                if not missing:
+                    continue
+                root = min(hold)
+                transfers = []
+                if naive or len(missing) == 1:
+                    for dst in missing:
+                        rel_round += 1
+                        transfers.append((root, dst, "p2p", rel_round))
+                else:
+                    tree = broadcast_tree(root, [root] + missing)
+                    for round_pairs in tree.rounds:
+                        rel_round += 1
+                        for src, dst in round_pairs:
+                            transfers.append((src, dst, "broadcast",
+                                              rel_round))
+                hold.update(missing)
+                ships.append((k, root, tuple(transfers)))
+            for k in p.write_keys:
+                sim[k] = set(er)
+            gc_keys = []
+            for k in p.arg_keys:
+                if k is None:
+                    continue
+                left = readers[k] - 1
+                readers[k] = left
+                if left <= 0 and k not in pinned and k in sim:
+                    gc_keys.append(k)
+                    del sim[k]
+            schedule.append(PlanOp(p.op_id, p.fn, p.arg_keys, p.write_keys,
+                                   er, tuple(ships), tuple(gc_keys),
+                                   p.level))
+        plan = object.__new__(ExecutionPlan)
+        plan.schedule = tuple(schedule)
+        plan.wavefront_counts = self.wavefront_counts
+        plan.n_rounds = rel_round
+        plan.start = self.start
+        plan.end = self.end
+        plan.n_nodes = self.n_nodes
+        plan.collective_mode = self.collective_mode
+        plan.total_writes = self.total_writes
+        plan.levels = self.levels
+        plan.level_groups = self.level_groups
+        plan.has_fusion_groups = self.has_fusion_groups
+        plan.chains = tuple(
+            ChainSlice(c.members, c.width, c.first_level, c.fn, c.carry_pos,
+                       c.payload_positions,
+                       frozenset(plan.schedule[m].write_keys[0]
+                                 for lvl in c.members[:-1] for m in lvl))
+            for c in self.chains
+            if not any(plan.schedule[m].ships
+                       for lvl in c.members[1:] for m in lvl))
+        if wf is not None:
+            acc: dict[int, dict[int, int]] = {}
+            for p in plan.schedule:
+                fl = wf.ops[p.op_id].flops
+                if fl:
+                    per_rank = acc.setdefault(p.level, {})
+                    for r in p.exec_ranks:
+                        per_rank[r] = per_rank.get(r, 0) + fl
+            plan.level_flops = tuple(
+                max(acc[lv].values()) if lv in acc else 0
+                for lv in range(1, len(plan.levels) + 1))
+        else:
+            plan.level_flops = self.level_flops
+        return plan
+
     def rebind(self, schedule, start: int, end: int) -> "ExecutionPlan":
         """A structurally identical plan re-pointed at ``schedule``'s keys.
 
@@ -358,7 +473,8 @@ def _signature_chains(schedule, levels) -> tuple:
     return tuple(chains)
 
 
-def _flops_per_level(ops, level_of: dict, n_levels: int) -> list[int]:
+def _flops_per_level(ops, level_of: dict, n_levels: int,
+                     rank_map: dict = None) -> list[int]:
     """Critical-path compute per level: max over ranks of summed op flops.
 
     Ops of one level run concurrently across ranks but serialise on a rank,
@@ -370,7 +486,7 @@ def _flops_per_level(ops, level_of: dict, n_levels: int) -> list[int]:
     for node in ops:
         if node.flops:
             per_rank = acc.setdefault(level_of[node.op_id], {})
-            for r in placement_ranks(node.placement):
+            for r in map_ranks(placement_ranks(node.placement), rank_map):
                 per_rank[r] = per_rank.get(r, 0) + node.flops
     return [max(acc[lv].values()) if lv in acc else 0
             for lv in range(1, n_levels + 1)]
@@ -424,16 +540,28 @@ def wavefront_levels(wf, start: int, end: int) -> tuple[dict[int, int], list[int
     return level, [counts[k] for k in sorted(counts)]
 
 
+def map_ranks(ranks, rank_map) -> tuple[int, ...]:
+    """Send a rank tuple through an (elastic-rebind) rank map, deduplicated
+    in order — two ranks merged by the map must not double-place."""
+    if not rank_map:
+        return tuple(ranks)
+    return tuple(dict.fromkeys(rank_map.get(r, r) for r in ranks))
+
+
 def build_plan(wf, start: int, end: int, n_nodes: int, collective_mode: str,
-               holders: dict, pinned: Iterable) -> ExecutionPlan:
+               holders: dict, pinned: Iterable,
+               rank_map: dict = None) -> ExecutionPlan:
     """Compile ``wf.ops[start:end]`` into an :class:`ExecutionPlan`.
 
     ``holders`` maps version_key -> set of ranks holding its payload at run
     start (copied, never mutated); ``pinned`` are version keys exempt from
-    GC.  The simulation walks ops in execution order (wavefront level major,
-    trace order minor — identical to trace order whenever the trace is
-    already level-sorted, which keeps stats byte-compatible with the
-    interpreter on such workflows).
+    GC.  ``rank_map`` (elastic degradation, :mod:`repro.core.recovery`)
+    re-points recorded placements at surviving ranks — every
+    placement-derived product (exec ranks, ships, flops attribution) is
+    computed in the mapped space.  The simulation walks ops in execution
+    order (wavefront level major, trace order minor — identical to trace
+    order whenever the trace is already level-sorted, which keeps stats
+    byte-compatible with the interpreter on such workflows).
     """
     ops = wf.ops[start:end]
     pinned = set(pinned)
@@ -445,7 +573,7 @@ def build_plan(wf, start: int, end: int, n_nodes: int, collective_mode: str,
     readers: dict[tuple[int, int], int] = {}
     reader_ranks: dict[tuple[int, int], set[int]] = {}
     for node in ops:
-        rr = placement_ranks(node.placement)
+        rr = map_ranks(placement_ranks(node.placement), rank_map)
         for v in node.reads:
             k = v.key
             readers[k] = readers.get(k, 0) + 1
@@ -461,7 +589,7 @@ def build_plan(wf, start: int, end: int, n_nodes: int, collective_mode: str,
     schedule = []
     for i in order:
         node = ops[i]
-        exec_ranks = placement_ranks(node.placement)
+        exec_ranks = map_ranks(placement_ranks(node.placement), rank_map)
         ships = []
         for v in node.reads:
             k = v.key
@@ -508,7 +636,8 @@ def build_plan(wf, start: int, end: int, n_nodes: int, collective_mode: str,
         ))
     return ExecutionPlan(tuple(schedule), wavefront_counts, rel_round,
                          start, end, n_nodes, collective_mode,
-                         _flops_per_level(ops, level, len(wavefront_counts)))
+                         _flops_per_level(ops, level, len(wavefront_counts),
+                                          rank_map))
 
 
 # ---------------------------------------------------------------------------
@@ -529,15 +658,16 @@ def clear_plan_cache() -> None:
 
 def absolute_plan_key(wf, start: int, end: int, n_nodes: int,
                       collective_mode: str, holders: dict,
-                      pinned: Iterable) -> tuple:
+                      pinned: Iterable, rank_map: dict = None) -> tuple:
     """Exact-identity cache key for a planned range.
 
     Ties the structural segment signature to everything else the simulation
     consumed: world size, collective mode, the run-start holder state of the
     versions the range *reads* (ship schedules and GC depend on nothing else
-    in the stores — unrelated live payloads must not cause misses), and the
-    pinned set — a hit guarantees the cached ship/GC schedules are valid for
-    this run.
+    in the stores — unrelated live payloads must not cause misses), the
+    pinned set, and the elastic rank map (a remapped plan must never
+    satisfy an unmapped lookup or vice versa) — a hit guarantees the cached
+    ship/GC schedules are valid for this run.
     """
     read_holders: dict[tuple[int, int], tuple[int, ...]] = {}
     for node in wf.ops[start:end]:
@@ -552,6 +682,7 @@ def absolute_plan_key(wf, start: int, end: int, n_nodes: int,
         segment_signature(wf, start, end),
         tuple(sorted(read_holders.items())),
         tuple(sorted(pinned)),
+        tuple(sorted(rank_map.items())) if rank_map else (),
     )
 
 

@@ -55,16 +55,20 @@ backend-vs-backend ablations are compared.
 
 from __future__ import annotations
 
+import time
 from itertools import islice
 from typing import Any, Optional, Union
 
 from .backends import get_backend
-from .backends.base import BatchSlice, spill_dead_buckets
+from .backends.base import BatchSlice, RankFailure, spill_dead_buckets
 from .collectives import broadcast_tree
 from .executable_cache import EXEC_CACHE, ExecutableCache
 from .placement import placement_ranks
-from .plan import PLAN_CACHE_STATS, wavefront_flops, wavefront_levels
+from .plan import (PLAN_CACHE_STATS, map_ranks, wavefront_flops,
+                   wavefront_levels)
 from .program import PROGRAM_CACHE_STATS, Segment, resolve_plan
+from .recovery import (apply_failure, build_subset_plan, choose_replacement,
+                       plan_recovery, wipe_rank)
 from .stats import ExecutionStats, TransferEvent, _nbytes
 from .trace import OpNode, Workflow
 
@@ -101,7 +105,9 @@ class LocalExecutor:
                  mode: str = "plan",
                  executable_cache: Optional[ExecutableCache] = None,
                  backend: Union[str, Any, None] = None,
-                 stitch: bool = True):
+                 stitch: bool = True,
+                 fault_injector: Optional[Any] = None,
+                 topology: Optional[Any] = None):
         assert collective_mode in ("tree", "naive")
         assert mode in ("plan", "interpret")
         self.n_nodes = n_nodes
@@ -109,6 +115,15 @@ class LocalExecutor:
         self.mode = mode
         self.stitch = bool(stitch)
         self.backend = get_backend(backend if backend is not None else "serial")
+        # fault tolerance (ROADMAP item 4): a FaultInjector consulted at
+        # wavefront boundaries; a topology cost model pricing elastic
+        # replacement choices; the permanent-death record (dead rank ->
+        # immediate replacement) and its path-compressed rank map threaded
+        # through planning after an elastic rebind
+        self.fault_injector = fault_injector
+        self.topology = topology
+        self._decommissioned: dict[int, int] = {}
+        self._rank_map: Optional[dict[int, int]] = None
         # payload stores: rank -> version_key -> payload
         self._stores: dict[int, dict[tuple[int, int], Any]] = {
             r: {} for r in range(n_nodes)
@@ -302,9 +317,12 @@ class LocalExecutor:
         # them (``wf.array(..., rank=r)``); transfers away from there are
         # implicit.  Only items recorded since the last placement are new.
         if self._init_seen < upto:
+            rm = self._rank_map
             for vkey, (payload, rank) in islice(
                     wf.initial.items(), self._init_seen, upto):
                 if vkey not in self._where:
+                    if rm:
+                        rank = rm.get(rank, rank)
                     self._place(rank, vkey, payload)
             self._init_seen = upto
 
@@ -340,11 +358,45 @@ class LocalExecutor:
     # -- planned replay (default) ---------------------------------------------
     def _run_planned(self, wf: Workflow, start: int, end: int,
                      pinned: set) -> ExecutionStats:
-        plan = resolve_plan(wf, start, end, self.n_nodes,
-                            self.collective_mode, self._where, pinned)
-        base_round = self._round_counter
-        self._wavefront_base = len(self._stats.wavefronts)
-        self.backend.execute(self, wf, plan)
+        stats = self._stats
+        current = resolve_plan(wf, start, end, self.n_nodes,
+                               self.collective_mode, self._where, pinned,
+                               rank_map=self._rank_map)
+        while current is not None:
+            base_round = self._round_counter
+            self._wavefront_base = len(stats.wavefronts)
+            try:
+                self.backend.execute(self, wf, current)
+            except RankFailure as failure:
+                # backends raise at a wavefront boundary: levels [0, level)
+                # are fully committed, the failed level untouched.  Account
+                # the completed prefix, then recover and resume from the
+                # boundary — the loop re-enters with the replanned suffix.
+                level = failure.level if failure.level is not None else 0
+                lo = (current.levels[level][0]
+                      if level < len(current.levels)
+                      else len(current.schedule))
+                stats.ops_executed += lo
+                stats.copies_elided += sum(
+                    p.n_writes for p in current.schedule[:lo])
+                stats.wavefronts.extend(current.wavefront_counts[:level])
+                stats.wavefront_flops.extend(current.level_flops[:level])
+                # the prefix's transfers consumed relative rounds from this
+                # plan's budget; skip the whole budget so recovery/suffix
+                # round ids never collide with it
+                self._round_counter = base_round + current.n_rounds
+                current = self._recover_planned(wf, current, level, failure,
+                                                pinned)
+                continue
+            stats.ops_executed += len(current.schedule)
+            # zero-copy accounting: every InOut write in pass-by-value C++
+            # semantics would deep-copy; versioning just re-points.
+            stats.copies_elided += current.total_writes
+            self._round_counter = base_round + current.n_rounds
+            # wavefronts accumulate across program flushes
+            stats.wavefronts.extend(current.wavefront_counts)
+            stats.wavefront_flops.extend(current.level_flops)
+            current = None
         # program-end residency pass: whatever backend ran, partially-dead
         # fused buckets must not outlive the flush (drop-list parity —
         # serial/threads release rows they GC, the spill concretises the
@@ -352,18 +404,148 @@ class LocalExecutor:
         # Seams *inside* the program no longer spill: a bucket riding a
         # stitched chain stays lazy across them.
         spill_dead_buckets(self)
-        stats = self._stats
-        stats.ops_executed += len(plan.schedule)
-        # zero-copy accounting: every InOut write in pass-by-value C++
-        # semantics would deep-copy; versioning just re-points.
-        stats.copies_elided += plan.total_writes
-        self._round_counter = base_round + plan.n_rounds
-        # wavefronts accumulate across program flushes
-        stats.wavefronts.extend(plan.wavefront_counts)
-        stats.wavefront_flops.extend(plan.level_flops)
         return stats
 
+    # -- fault recovery --------------------------------------------------------
+    def _note_death(self, dead: int, replacement: Optional[int] = None) -> int:
+        """Record a permanent rank death; returns its replacement and
+        refreshes the path-compressed elastic rank map."""
+        alive = [r for r in range(self.n_nodes)
+                 if r != dead and r not in self._decommissioned]
+        assert alive, "no surviving rank to re-bind onto"
+        if replacement is None:
+            replacement = choose_replacement(dead, alive, self.topology)
+        assert replacement in alive, (
+            f"replacement rank {replacement} is not a surviving rank")
+        self._decommissioned[dead] = replacement
+        # path-compress: a replacement that later died itself forwards to
+        # its own (transitively live) replacement — deaths are ordered, so
+        # every chain terminates at a surviving rank
+        rm = {}
+        for d in self._decommissioned:
+            r = d
+            while r in self._decommissioned:
+                r = self._decommissioned[r]
+            rm[d] = r
+        self._rank_map = rm
+        return rm[dead]
+
+    def _recover_planned(self, wf: Workflow, plan, level: int, failure,
+                         pinned: set):
+        """Narrow recovery at a failed wavefront boundary.
+
+        Materialises the failure against the stores, walks plan lineage to
+        the minimal ancestor closure of the lost still-needed versions
+        (:func:`repro.core.recovery.plan_recovery`), replays that closure as
+        a recovery sub-plan with the injector suspended, and returns the
+        failed plan's suffix *replanned* from the post-recovery holder
+        state (the original plan's precomputed ships assumed pre-failure
+        stores) — or None when the failure hit the final boundary.
+        """
+        stats = self._stats
+        t0 = time.perf_counter()
+        if failure.permanent:
+            self._note_death(failure.rank)
+        apply_failure(self, failure)
+        suffix = (plan.schedule[plan.levels[level][0]:]
+                  if level < len(plan.levels) else ())
+        suffix_ids = [p.op_id for p in suffix]
+        needed = set(pinned)
+        for p in suffix:
+            for k in p.arg_keys:
+                if k is not None:
+                    needed.add(k)
+        rec_plan, restored, _replaced = plan_recovery(
+            self, wf, needed, rank_map=self._rank_map,
+            future=frozenset(suffix_ids))
+        stats.recoveries += 1
+        stats.restored_versions += restored
+        if rec_plan is not None:
+            self._execute_recovery_plan(wf, rec_plan)
+        resumed = None
+        if suffix_ids:
+            resumed = build_subset_plan(wf, suffix_ids, self.n_nodes,
+                                        self.collective_mode, self._where,
+                                        pinned, self._rank_map)
+        stats.recovery_time_s += time.perf_counter() - t0
+        return resumed
+
+    def _execute_recovery_plan(self, wf: Workflow, plan) -> None:
+        """Replay a recovery sub-plan (injector suspended — recovery never
+        re-faults itself) and account it as recomputed work."""
+        stats = self._stats
+        base_round = self._round_counter
+        self._wavefront_base = len(stats.wavefronts)
+        inj = self.fault_injector
+        if inj is not None:
+            inj.suspend()
+        try:
+            self.backend.execute(self, wf, plan)
+        finally:
+            if inj is not None:
+                inj.resume()
+        n = len(plan.schedule)
+        stats.ops_executed += n
+        stats.recomputed_ops += n
+        stats.copies_elided += plan.total_writes
+        self._round_counter = base_round + plan.n_rounds
+        stats.wavefronts.extend(plan.wavefront_counts)
+        stats.wavefront_flops.extend(plan.level_flops)
+
+    def decommission_rank(self, wf: Workflow, rank: int,
+                          replacement: Optional[int] = None) -> int:
+        """Elastically retire ``rank``: re-bind its placements onto a
+        surviving rank and narrowly recover whatever only it held.
+
+        The explicit (driver-initiated) half of elastic degradation — the
+        implicit half is a ``permanent=True`` kill policy firing mid-plan.
+        Any pending program flushes first (it was planned for the old world
+        size); subsequent plans re-bind cached skeletons to the shrunken
+        placement via the program cache's skeleton index instead of paying
+        re-analysis.  Returns the replacement rank.
+        """
+        assert self.n_nodes > 1, "cannot decommission the only rank"
+        assert rank not in self._decommissioned, f"rank {rank} already dead"
+        if self._pending:
+            self._flush()
+        stats = self._stats
+        t0 = time.perf_counter()
+        replacement = self._note_death(rank, replacement)
+        lost = wipe_rank(self, rank)
+        if lost:
+            # still-demanded versions: every ref head (fetchable / readable
+            # by ops recorded later), plus reads of ops recorded but not yet
+            # synced — those snapshot then-current heads that later records
+            # may since have superseded
+            recorded_upto = getattr(wf, "_synced_upto", len(wf.ops))
+            needed = set(self._pinned(wf))
+            for node in wf.ops[recorded_upto:]:
+                for v in node.reads:
+                    needed.add(v.key)
+            rec_plan, restored, _replaced = plan_recovery(
+                self, wf, needed, rank_map=self._rank_map,
+                future=frozenset(range(recorded_upto, len(wf.ops))))
+            stats.recoveries += 1
+            stats.restored_versions += restored
+            if rec_plan is not None:
+                self._execute_recovery_plan(wf, rec_plan)
+            stats.recovery_time_s += time.perf_counter() - t0
+        return replacement
+
     # -- reference interpreter (trace order, per-op) --------------------------
+    def _reader_ranks(self, ops, i: int = 0) -> dict:
+        """Per version, the set of (mapped) ranks that will read it — the
+        "queue of communications involving the same object" the paper builds
+        its trees from.  Recomputed over the remaining ops after an elastic
+        rebind (the precomputed sets would still name the dead rank)."""
+        reader_ranks: dict[tuple[int, int], set[int]] = {}
+        for op_node in ops[i:]:
+            for v in op_node.reads:
+                for r in map_ranks(placement_ranks(op_node.placement),
+                                   self._rank_map):
+                    reader_ranks.setdefault(v.key, set()).add(r)
+        return reader_ranks
+
     def _run_interpret(self, wf: Workflow, start: int, end: int,
                        pinned: set) -> ExecutionStats:
         ops = wf.ops[start:end]
@@ -379,20 +561,31 @@ class LocalExecutor:
             for v in op_node.reads:
                 readers[v.key] = readers.get(v.key, 0) + 1
 
-        # Precompute, per version, the set of ranks that will read it — this
-        # is the "queue of communications involving the same object" the
-        # paper builds its trees from.
-        reader_ranks: dict[tuple[int, int], set[int]] = {}
-        for op_node in ops:
-            for v in op_node.reads:
-                for r in placement_ranks(op_node.placement):
-                    reader_ranks.setdefault(v.key, set()).add(r)
+        reader_ranks = self._reader_ranks(ops)
 
+        # wavefronts accumulate across program flushes (extended up front so
+        # a mid-program recovery sub-plan appends after this program's
+        # levels; content is identical to the loop-end extend it replaces)
+        self._stats.wavefronts.extend(counts)
+        self._stats.wavefront_flops.extend(wavefront_flops(wf, start, end))
+
+        inj = self.fault_injector
         # Ship each version to all its future readers the moment it exists —
         # started eagerly (async in real Bind), giving comm/compute overlap.
-        for op_node in ops:
-            ranks = placement_ranks(op_node.placement)
+        i = 0
+        n = len(ops)
+        while i < n:
+            op_node = ops[i]
             wavefront = base + level_of[op_node.op_id] - 1
+            if inj is not None and inj.armed:
+                try:
+                    inj.check(self, wavefront, op_index=i)
+                except RankFailure as failure:
+                    self._recover_interpret(wf, ops, i, failure, pinned)
+                    reader_ranks = self._reader_ranks(ops, i)
+                    continue        # retry op i against the healed stores
+            ranks = map_ranks(placement_ranks(op_node.placement),
+                              self._rank_map)
             # 1. implicit transfers for inputs not local yet
             for v in op_node.reads:
                 self._ship(v.key, set(ranks) | (reader_ranks.get(v.key) or set()),
@@ -424,8 +617,33 @@ class LocalExecutor:
                 readers[v.key] -= 1
                 if readers[v.key] <= 0 and v.key not in pinned:
                     self._drop(v.key)
-
-        # wavefronts accumulate across program flushes
-        self._stats.wavefronts.extend(counts)
-        self._stats.wavefront_flops.extend(wavefront_flops(wf, start, end))
+            i += 1
         return self._stats
+
+    def _recover_interpret(self, wf: Workflow, ops, i: int, failure,
+                           pinned: set) -> None:
+        """Interpreter-side narrow recovery before retrying op ``i``.
+
+        Same shape as :meth:`_recover_planned` minus the suffix replan: the
+        interpreter re-ships on demand, so after the lineage closure replays
+        (through the plan machinery — recovery is planned work even under
+        ``mode="interpret"``) the per-op loop simply resumes.
+        """
+        stats = self._stats
+        t0 = time.perf_counter()
+        if failure.permanent:
+            self._note_death(failure.rank)
+        apply_failure(self, failure)
+        remaining = ops[i:]
+        needed = set(pinned)
+        for op_node in remaining:
+            for v in op_node.reads:
+                needed.add(v.key)
+        rec_plan, restored, _replaced = plan_recovery(
+            self, wf, needed, rank_map=self._rank_map,
+            future=frozenset(op_node.op_id for op_node in remaining))
+        stats.recoveries += 1
+        stats.restored_versions += restored
+        if rec_plan is not None:
+            self._execute_recovery_plan(wf, rec_plan)
+        stats.recovery_time_s += time.perf_counter() - t0

@@ -71,6 +71,27 @@ class ExecutionStats:
     program_cache_misses: int = 0
     exec_cache_hits: int = 0
     exec_cache_misses: int = 0
+    # Fault tolerance (core.recovery): ``recoveries`` counts handled
+    # RankFailures; ``recomputed_ops`` the lineage-recovery ops re-executed
+    # (a subset of ``ops_executed`` — recovery work is real work);
+    # ``restored_versions`` the versions rehydrated from a checkpoint
+    # barrier or re-placed from ``wf.initial`` instead of recomputed;
+    # ``recovery_time_s`` wall-clock seconds spent planning + executing
+    # recovery sub-plans (the "narrow recovery vs full replay" bench unit).
+    recoveries: int = 0
+    recomputed_ops: int = 0
+    restored_versions: int = 0
+    recovery_time_s: float = 0.0
+
+    @property
+    def recompute_ratio(self) -> float:
+        """Fraction of executed ops that were lineage-recovery recomputation.
+
+        0.0 on fault-free runs; strictly < 1.0 whenever recovery was
+        narrower than re-running everything that executed.
+        """
+        return self.recomputed_ops / self.ops_executed if self.ops_executed \
+            else 0.0
 
     @property
     def bytes_transferred(self) -> int:

@@ -206,6 +206,10 @@ class Workflow:
         # per-op structural signatures (see core.plan.segment_signature),
         # built at record time so plan-cache keys are a slice, not a rescan.
         self._op_sigs: list[tuple] = []
+        # version_key -> (PlanCheckpoint, leaf index): versions saved by a
+        # checkpoint barrier — recovery's lineage walk terminates here.
+        self._ckpt_sources: dict[tuple[int, int], tuple[Any, int]] = {}
+        self._ckpt_counter = 0
 
     # -- context management ------------------------------------------------
     def __enter__(self):
@@ -385,6 +389,34 @@ class Workflow:
         """Read back the head payload of an array (implies sync)."""
         self.sync()
         return self._executor.value(arr.ref.head)
+
+    def checkpoint(self, arrays: Sequence[BindArray], manager,
+                   step: Optional[int] = None, name: str = "ckpt"):
+        """Record an atomic checkpoint barrier over ``arrays``.
+
+        The barrier is a normal recorded op (all-``In``, zero writes) whose
+        body saves the read payloads through ``manager``
+        (:class:`repro.ckpt.manager.CheckpointManager`) — it rides plans,
+        backends and caches like any op.  Once executed, the recovery
+        planner's lineage walk *terminates* at the checkpointed versions:
+        they rehydrate from disk instead of recomputing their ancestry
+        (:mod:`repro.core.recovery`).  Returns the barrier op's callable.
+        """
+        from .recovery import PlanCheckpoint
+
+        arrays = tuple(arrays)
+        if step is None:
+            step = self._ckpt_counter
+        self._ckpt_counter = step + 1
+        ckpt = PlanCheckpoint(manager, step)
+        ckpt.__bind_intents__ = (In,) * len(arrays)
+        # snapshot heads BEFORE recording: these are the versions the
+        # barrier reads and can later restore
+        saved_keys = tuple(a.ref.head.key for a in arrays)
+        self.call(ckpt, arrays, name=name)
+        for i, k in enumerate(saved_keys):
+            self._ckpt_sources[k] = (ckpt, i)
+        return ckpt
 
 
 def op(fn: Callable = None, *, flops: int = 0) -> Callable:

@@ -33,18 +33,26 @@ class Supervisor:
         self.max_restarts = max_restarts
         self.env = env
         self.restarts = 0
+        self._spawned_at: Optional[float] = None
 
     def _heartbeat_age(self) -> float:
         try:
             return time.time() - os.path.getmtime(self.heartbeat_file)
         except OSError:
-            return 0.0
+            # no heartbeat file yet: a worker that dies into a zombie (or
+            # hangs) before its *first* heartbeat used to report age 0.0
+            # forever and was never detected — count age from the spawn
+            # instead, so the timeout covers the pre-first-heartbeat window
+            if self._spawned_at is None:
+                return 0.0
+            return time.time() - self._spawned_at
 
     def run(self, poll: float = 1.0) -> int:
         """Run the training process, respawning on crash or hang.
         Returns the final (clean) exit code."""
         while True:
             proc = subprocess.Popen(self.argv, env=self.env)
+            self._spawned_at = time.time()
             hung = False
             while True:
                 ret = proc.poll()

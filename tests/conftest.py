@@ -95,6 +95,13 @@ def pytest_addoption(parser):
     parser.addoption(
         "--seed", action="store", type=int, default=0,
         help="base seed for randomized conformance workflows (default 0)")
+    # Chaos mode for the same suite: per conformance seed, kill a random
+    # rank at a random wavefront in every backend and assert byte-identical
+    # values plus bounded (narrow) recompute. 0 disables fault trials.
+    parser.addoption(
+        "--faults", action="store", type=int, default=1,
+        help="fault-injection trials per conformance seed (default 1, "
+             "0 disables)")
 
 
 @pytest.fixture

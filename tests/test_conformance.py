@@ -287,10 +287,11 @@ def _record_op(wf, handles, spec_op) -> None:
             ctx.__exit__(None, None, None)
 
 
-def run_spec(spec: dict, mode: str, backend: str):
+def run_spec(spec: dict, mode: str, backend: str, fault_injector=None):
     import jax.numpy as jnp
 
-    ex = bind.LocalExecutor(spec["n_nodes"], mode=mode, backend=backend)
+    ex = bind.LocalExecutor(spec["n_nodes"], mode=mode, backend=backend,
+                            fault_injector=fault_injector)
     with bind.Workflow(n_nodes=spec["n_nodes"], executor=ex) as wf:
         handles = []
         for kind, rank, vals in spec["arrays"]:
@@ -379,6 +380,52 @@ def check_conformance(seed: int) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Fault-mode conformance: a failure must be semantically invisible
+# ---------------------------------------------------------------------------
+
+FAULT_CONFIGS = (("plan", "serial"), ("plan", "threads"), ("plan", "fused"),
+                 ("interpret", "serial"))
+
+
+def check_fault_conformance(seed: int, n_faults: int) -> None:
+    """Kill a random rank at a random wavefront under every backend and
+    assert the fault-free contract still holds:
+
+    * **value parity** — every fetched payload byte-identical (values and
+      dtypes) to the fault-free serial reference, including versions GC'd
+      on both sides;
+    * **narrow recovery** — when a recovery actually fired, the recomputed
+      op count is *strictly* smaller than a full replay of the workflow
+      (``recompute_ratio < 1``): lineage walks, never restart-from-zero;
+    * **accounting** — ``sum(wavefronts) == ops_executed`` survives the
+      spliced-in recovery sub-plans and suffix replans.
+
+    A target wavefront past the last boundary is deliberately reachable:
+    the injector then never fires, which pins the armed-but-silent checked
+    dispatch paths to fault-free behaviour.
+    """
+    spec = make_spec(seed)
+    ref_values, ref_stats, _ref_ex = run_spec(spec, "plan", "serial")
+    n_wave = len(ref_stats.wavefronts)
+    rng = np.random.default_rng(seed ^ 0xFA117)
+    for _trial in range(n_faults):
+        rank = int(rng.integers(0, spec["n_nodes"]))
+        wavefront = int(rng.integers(0, n_wave + 1))
+        for mode, backend in FAULT_CONFIGS:
+            inj = bind.FaultInjector.kill_rank(rank, wavefront)
+            values, stats, _ex = run_spec(spec, mode, backend,
+                                          fault_injector=inj)
+            ctx = f"seed {seed}: kill r{rank}@w{wavefront} {mode}/{backend}"
+            _assert_values_equal(ref_values, values, ctx)
+            assert sum(stats.wavefronts) == stats.ops_executed, ctx
+            if stats.recoveries:
+                assert stats.recomputed_ops < ref_stats.ops_executed, ctx
+                assert stats.recompute_ratio < 1.0, ctx
+            else:
+                assert stats.recomputed_ops == 0, ctx
+
+
+# ---------------------------------------------------------------------------
 # Fixed-seed sweep (runs everywhere; base seed from pytest --seed)
 # ---------------------------------------------------------------------------
 
@@ -392,6 +439,13 @@ def pytest_generate_tests(metafunc):
 
 def test_conformance_fixed_seeds(conformance_seed):
     check_conformance(conformance_seed)
+
+
+def test_fault_conformance_fixed_seeds(conformance_seed, request):
+    n_faults = request.config.getoption("--faults")
+    if not n_faults:
+        pytest.skip("fault trials disabled (--faults 0)")
+    check_fault_conformance(conformance_seed, n_faults)
 
 
 def test_fuzzer_exercises_chain_shapes():

@@ -1,0 +1,319 @@
+"""Lineage-based fault recovery: narrow recompute, checkpoint truncation,
+elastic rebind, and the satellite fixes (supervisor pre-first-heartbeat
+hangs, checkpoint stale-``.tmp`` GC on restore).
+
+The conformance fuzzer (``tests/test_conformance.py --faults``) owns the
+breadth — random workflows × random kills × all four backends; this module
+owns the *strictness*: exact recompute bounds on hand-built workloads where
+the minimal ancestor closure is known, plus the failure kinds the fuzzer
+does not draw (permanent deaths, ship drops, stragglers, explicit
+decommission).
+"""
+
+import os
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro import core as bind
+from repro.core import FaultInjector, LocalExecutor, RankFailure
+from repro.ckpt.manager import CheckpointManager
+
+
+@bind.op
+def _step(c: bind.InOut, s: bind.In):
+    return c * 1.01 + s
+
+
+@bind.op
+def _mix(c: bind.InOut, o: bind.In):
+    return c + 0.5 * o
+
+
+def _chains(wf, arrs, depth, mix_at=()):
+    """``len(arrs)`` per-rank scale chains of ``depth`` levels; at each
+    level in ``mix_at`` every chain also reads its neighbour (cross-rank
+    ships + cross-chain lineage)."""
+    n = len(arrs)
+    for lv in range(depth):
+        for r, a in enumerate(arrs):
+            with bind.node(r):
+                _step(a, float(lv))
+        if lv in mix_at:
+            for r, a in enumerate(arrs):
+                with bind.node(r):
+                    _mix(a, arrs[(r + 1) % n])
+
+
+def _run(build, n_nodes, injector=None, backend="serial", mode="plan",
+         decomm=None):
+    ex = LocalExecutor(n_nodes, mode=mode, backend=backend,
+                       fault_injector=injector)
+    with bind.Workflow(n_nodes=n_nodes, executor=ex) as wf:
+        arrs = [wf.array(np.arange(8.0) + r, rank=r) for r in range(n_nodes)]
+        build(wf, arrs)
+        wf.sync()
+        if decomm is not None:
+            ex.decommission_rank(wf, decomm)
+        vals = [np.asarray(wf.fetch(a)) for a in arrs]
+    return vals, ex.stats, ex
+
+
+# ---------------------------------------------------------------------------
+# exhaustive small sweep: any rank × any boundary, three dispatch flavours
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,backend", [("plan", "serial"),
+                                          ("plan", "fused"),
+                                          ("interpret", "serial")])
+def test_kill_sweep_every_rank_every_wavefront(mode, backend):
+    n, depth = 3, 5
+    build = lambda wf, arrs: _chains(wf, arrs, depth, mix_at=(2,))
+    ref, ref_st, _ = _run(build, n)
+    n_wave = len(ref_st.wavefronts)
+    for rank in range(n):
+        for w in range(n_wave):
+            inj = FaultInjector.kill_rank(rank, w)
+            vals, st, _ = _run(build, n, inj, backend=backend, mode=mode)
+            for a, b in zip(ref, vals):
+                np.testing.assert_array_equal(a, b, err_msg=f"r{rank}@w{w}")
+            assert st.recoveries == 1, (rank, w)
+            assert st.recomputed_ops < ref_st.ops_executed, (rank, w)
+            assert sum(st.wavefronts) == st.ops_executed, (rank, w)
+
+
+# ---------------------------------------------------------------------------
+# narrow-vs-replay strictness: independent chains have disjoint lineage
+# ---------------------------------------------------------------------------
+
+def test_recompute_bounded_by_lost_lineage():
+    # 4 ranks × 4 INDEPENDENT depth-16 chains: killing rank 2 at wavefront
+    # 12 loses exactly one chain's live version, whose ancestry is the 12
+    # executed levels of that chain alone — recovery must not touch the
+    # other three chains (48 executed ops) or replay the program (64 ops).
+    n, depth = 4, 16
+    build = lambda wf, arrs: _chains(wf, arrs, depth)
+    ref, ref_st, _ = _run(build, n)
+    assert ref_st.ops_executed == n * depth
+    inj = FaultInjector.kill_rank(2, 12)
+    vals, st, _ = _run(build, n, inj)
+    for a, b in zip(ref, vals):
+        np.testing.assert_array_equal(a, b)
+    assert st.recoveries == 1
+    assert st.recomputed_ops <= 12, st.recomputed_ops
+    assert 0.0 < st.recompute_ratio < 1.0
+    assert st.recovery_time_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint barriers terminate the lineage walk
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_barrier_truncates_recovery(tmp_path):
+    n, depth, barrier = 2, 12, 8
+
+    def build(ckpt_dir):
+        def _b(wf, arrs):
+            _chains(wf, arrs, barrier)
+            wf.checkpoint(arrs, CheckpointManager(str(ckpt_dir)))
+            _chains(wf, arrs, depth - barrier)
+        return _b
+
+    ref, ref_st, _ = _run(build(tmp_path / "ref"), n)
+    nb = lambda wf, arrs: _chains(wf, arrs, depth)
+    ref_nb, nb_st, _ = _run(nb, n)
+
+    # kill rank 1 at the last boundary of each program (the deepest point,
+    # so both runs have executed the same number of chain levels)
+    inj = FaultInjector.kill_rank(1, len(nb_st.wavefronts) - 1)
+    _, st_nb, _ = _run(nb, n, inj)
+    inj = FaultInjector.kill_rank(1, len(ref_st.wavefronts) - 1)
+    vals, st, _ = _run(build(tmp_path / "ck"), n, inj)
+
+    for a, b in zip(ref, vals):
+        np.testing.assert_array_equal(a, b)
+    assert st.restored_versions >= 1
+    assert st_nb.recoveries == 1 and st.recoveries == 1
+    # without a barrier the lost chain replays its full executed depth;
+    # with one, the lineage walk stops at the saved versions
+    assert st.recomputed_ops <= depth - barrier
+    assert st.recomputed_ops < st_nb.recomputed_ops
+
+
+# ---------------------------------------------------------------------------
+# ship drops and stragglers
+# ---------------------------------------------------------------------------
+
+def test_ship_drop_reships_without_recompute():
+    # the mix level replicates neighbour versions: dropping one replica
+    # costs a recovery pass but zero recompute (a survivor re-ships)
+    n = 3
+    build = lambda wf, arrs: _chains(wf, arrs, 6, mix_at=(1, 3))
+    ref, _, _ = _run(build, n)
+    inj = FaultInjector.drop_ship(2, seed=5)
+    vals, st, _ = _run(build, n, inj)
+    for a, b in zip(ref, vals):
+        np.testing.assert_array_equal(a, b)
+    assert st.recoveries == 1
+    assert st.recomputed_ops == 0
+    assert inj.fired and inj.fired[0]["kind"] == "ship"
+
+
+def test_delay_policy_is_not_a_failure():
+    n = 2
+    build = lambda wf, arrs: _chains(wf, arrs, 4)
+    ref, _, _ = _run(build, n)
+    inj = FaultInjector.delay_rank(1, 2, seconds=0.125)
+    vals, st, _ = _run(build, n, inj)
+    for a, b in zip(ref, vals):
+        np.testing.assert_array_equal(a, b)
+    assert st.recoveries == 0 and st.recomputed_ops == 0
+    assert inj.delays == 1 and inj.delay_s == pytest.approx(0.125)
+
+
+# ---------------------------------------------------------------------------
+# elastic degradation: permanent death and explicit decommission
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["serial", "threads", "fused"])
+def test_permanent_kill_rebinds_to_survivors(backend):
+    n = 4
+    build = lambda wf, arrs: _chains(wf, arrs, 8, mix_at=(2, 5))
+    ref, _, _ = _run(build, n)
+    inj = FaultInjector.kill_rank(2, 4, permanent=True)
+    vals, st, ex = _run(build, n, inj, backend=backend)
+    for a, b in zip(ref, vals):
+        np.testing.assert_array_equal(a, b)
+    assert st.recoveries == 1
+    assert not ex._stores[2], "dead rank must hold nothing"
+    assert ex._rank_map == {2: ex._decommissioned[2]}
+    # nothing placed or shipped onto the dead rank after its death
+    assert all(2 not in ranks for ranks in ex._where.values())
+
+
+def test_decommission_rank_migrates_state():
+    n = 4
+    build = lambda wf, arrs: _chains(wf, arrs, 6, mix_at=(3,))
+    ref, _, _ = _run(build, n)
+    vals, st, ex = _run(build, n, decomm=1)
+    for a, b in zip(ref, vals):
+        np.testing.assert_array_equal(a, b)
+    assert not ex._stores[1]
+    assert 1 in ex._decommissioned
+    assert all(1 not in ranks for ranks in ex._where.values())
+
+
+def test_decommission_then_continue_recording():
+    # the (n-1)-rank world keeps executing: ops recorded after the
+    # decommission re-bind their placements through the rank map
+    n = 3
+    ex = LocalExecutor(n)
+    with bind.Workflow(n_nodes=n, executor=ex) as wf:
+        arrs = [wf.array(np.arange(8.0) + r, rank=r) for r in range(n)]
+        _chains(wf, arrs, 4)
+        wf.sync()
+        repl = ex.decommission_rank(wf, 2)
+        assert repl != 2 and repl not in ex._decommissioned
+        _chains(wf, arrs, 4, mix_at=(1,))
+        wf.sync()
+        vals = [np.asarray(wf.fetch(a)) for a in arrs]
+        assert not ex._stores[2]
+        assert all(2 not in ranks for ranks in ex._where.values())
+    # reference: same program, never-faulted
+    ref, _, _ = _run(lambda wf, a: (_chains(wf, a, 4),
+                                    _chains(wf, a, 4, mix_at=(1,))), n)
+    for a, b in zip(ref, vals):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_topology_prices_replacement_choice():
+    from repro.launch.mesh import make_topology
+
+    from repro.core.recovery import choose_replacement
+
+    ring = make_topology("ring", n_nodes=6)
+    # on a ring, rank 3's cheapest survivors are its neighbours 2 and 4;
+    # ties break low
+    assert choose_replacement(3, [0, 1, 2, 4, 5], ring) == 2
+    assert choose_replacement(3, [0, 1, 5], ring) == 1
+    # without a topology: lowest surviving rank
+    assert choose_replacement(3, [4, 1, 5]) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: supervisor must detect a worker that hangs before its first
+# heartbeat (missing heartbeat file used to read as age 0.0 forever)
+# ---------------------------------------------------------------------------
+
+def test_supervisor_detects_pre_first_heartbeat_hang(tmp_path):
+    from repro.runtime.supervisor import Supervisor
+
+    hb = str(tmp_path / "never_written_hb")
+    assert not os.path.exists(hb)
+    sup = Supervisor([sys.executable, "-c", "import time; time.sleep(60)"],
+                     heartbeat_file=hb, heartbeat_timeout=0.5,
+                     max_restarts=0)
+    t0 = time.time()
+    with pytest.raises(RuntimeError, match="gave up"):
+        sup.run(poll=0.1)
+    # detected via spawn-age, not after the 60 s sleep
+    assert time.time() - t0 < 30.0
+    assert sup.restarts == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: crash-mid-save leaves step_N.tmp; restore must never see it
+# ---------------------------------------------------------------------------
+
+def test_restore_ignores_and_gcs_stale_tmp(tmp_path):
+    import jax.numpy as jnp
+
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, async_save=False)
+    tree = [jnp.arange(4.0), jnp.ones((2, 2))]
+    mgr.save(3, tree, block=True)
+
+    # simulate a crash mid-save of step 7: partial manifest in a .tmp dir
+    stale = mgr._step_dir(7) + ".tmp"
+    os.makedirs(stale)
+    np.save(os.path.join(stale, "leaf_00000.npy"), np.zeros(4))
+    with open(os.path.join(stale, "manifest.json"), "w") as f:
+        f.write('{"step": 7, "treedef":')        # truncated mid-write
+
+    mgr2 = CheckpointManager(d, async_save=False)
+    assert mgr2.latest_step() == 3               # .tmp never counts
+    restored, _extra = mgr2.restore(tree)
+    np.testing.assert_array_equal(np.asarray(restored[0]), np.arange(4.0))
+    assert not os.path.exists(stale), "restore must GC the stale .tmp"
+
+
+def test_save_gcs_stale_tmp_from_crashed_run(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, async_save=False)
+    stale = mgr._step_dir(5) + ".tmp"
+    os.makedirs(stale)
+    mgr.save(6, [np.arange(3.0)], block=True)
+    assert not os.path.exists(stale)
+    assert mgr.latest_step() == 6
+
+
+# ---------------------------------------------------------------------------
+# failure metadata
+# ---------------------------------------------------------------------------
+
+def test_rank_failure_carries_structured_context():
+    n = 3
+    ex = LocalExecutor(n, backend="serial",
+                       fault_injector=FaultInjector.kill_rank(1, 2))
+    with bind.Workflow(n_nodes=n, executor=ex) as wf:
+        arrs = [wf.array(np.arange(4.0), rank=r) for r in range(n)]
+        _chains(wf, arrs, 5)
+        wf.sync()
+        wf.fetch(arrs[0])
+    [fired] = ex.fault_injector.fired
+    assert fired == {"kind": "kill", "rank": 1, "wavefront": 2,
+                     "permanent": False, "fired": True}
+    with pytest.raises(RankFailure, match="rank 9 failed at wavefront 4"):
+        raise RankFailure(9, 4)
