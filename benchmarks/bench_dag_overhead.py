@@ -25,6 +25,20 @@
    overlaps op bodies and the fused backend collapses each level into one
    vmapped XLA dispatch — µs/op per backend plus the fused batch counters;
 
+2b. true multi-core parallelism (``bench="backend_parallel_procs"``): the
+    width-32 NumPy-heavy wide DAG on the process-pool backend (one OS
+    worker per simulated rank, shared-memory payloads) vs serial,
+    interleaved best-of-N.  ``procs_vs_serial_speedup ≥ 1.3`` is the
+    CI-asserted bar on multi-core runners; single-core hosts emit a row
+    tagged ``skipped`` (asserting parallelism there would be noise);
+
+2c. cost-model calibration (``bench="procs_calibration"``): a sweep over
+    worker counts × tile sizes timing pinned-rank chains (pure compute)
+    against alternating-rank chains (one ship per level); the deltas feed
+    ``Topology.calibrate(samples)`` and the rows report the fitted
+    ``flops_per_s`` / ``latency_s`` / ``bandwidth_Bps`` — measured, not
+    assumed, α–β constants for ``estimated_makespan``;
+
 3. chain fusion (``bench="chain_fused"``): a *deep* single-signature jax
    chain (64 aligned levels) where per-level fused dispatch pays one
    vmapped call per level and chain fusion collapses the whole run into a
@@ -85,6 +99,19 @@ def scale(a: bind.InOut, s: bind.In):
 @bind.op
 def axpy(y: bind.InOut, x: bind.In, s: bind.In):
     return y + x * s
+
+
+# Compute-heavy NumPy elementwise body for the process-pool rows: tanh is
+# host-serial (BLAS never parallelises it) and holds the GIL, so ``threads``
+# cannot overlap it — exactly the workload procs exists for.  Roughly
+# ``_CRUNCH_FLOPS_PER_ELEM`` flops per element (tanh ~ a dozen, plus the
+# mul/add), used to convert measured seconds into a calibrated rate.
+_CRUNCH_FLOPS_PER_ELEM = 16
+
+
+@bind.op
+def crunch(a: bind.InOut, s: bind.In):
+    return np.tanh(a * s) + a * 0.5
 
 
 def _chain_exec_time(mode: str, tile: int, n_ops: int,
@@ -189,6 +216,93 @@ def _stitched_chain_exec_time(backend, stitch: bool, width: int, depth: int,
             np.asarray(wf.fetch(y))
         t += time.perf_counter() - t0
         return t / n_programs
+
+
+def _procs_wide_exec_time(backend, n_nodes: int, width: int, depth: int,
+                          tile: int) -> float:
+    """Seconds in ``sync()`` + fetch for ``depth`` levels of ``width``
+    independent NumPy ``crunch`` ops spread round-robin over ``n_nodes``
+    ranks — the process-pool backend's target shape (each rank's share
+    runs in its own worker process; serial pays the whole level)."""
+    ex = bind.LocalExecutor(n_nodes, mode="plan", backend=backend)
+    with bind.Workflow(n_nodes=n_nodes, executor=ex) as wf:
+        xs = [wf.array(np.full((tile, tile), 0.1 + 0.01 * i), f"c{i}",
+                       rank=i % n_nodes) for i in range(width)]
+        for _ in range(depth):
+            for i, x in enumerate(xs):
+                with bind.node(i % n_nodes):
+                    crunch(x, 1.0000001)
+        t0 = time.perf_counter()
+        wf.sync()
+        ex.flush()
+        for x in xs:            # materialise shared-memory residents
+            np.asarray(wf.fetch(x))
+        return time.perf_counter() - t0
+
+
+def _procs_chain_time(n_nodes: int, tile: int, depth: int,
+                      alternate: bool) -> float:
+    """Seconds for a sequential ``depth``-level crunch chain on procs.
+
+    ``alternate=False`` pins every level to rank 0 (zero ships: pure
+    single-worker compute + barrier cadence); ``alternate=True`` flips the
+    placement every level, forcing one cross-process ship per level.  The
+    difference isolates the measured per-ship cost for calibration.
+    """
+    ex = bind.LocalExecutor(n_nodes, mode="plan", backend="procs")
+    with bind.Workflow(n_nodes=n_nodes, executor=ex) as wf:
+        a = wf.array(np.full((tile, tile), 0.25), "a", rank=0)
+        for lvl in range(depth):
+            with bind.node((lvl % n_nodes) if alternate else 0):
+                crunch(a, 1.0000001)
+        t0 = time.perf_counter()
+        wf.sync()
+        ex.flush()
+        np.asarray(wf.fetch(a))
+        return time.perf_counter() - t0
+
+
+def _procs_calibration_rows(quick: bool) -> list[dict]:
+    """Sweep the procs backend over worker counts and payload sizes and fit
+    ``Topology.calibrate`` constants from the measured samples.
+
+    Compute samples come from rank-pinned chains (no ships); transfer
+    samples from the pinned-vs-alternating gap (one ship per level).  The
+    fitted α–β/flops constants bridge the simulated
+    ``estimated_makespan`` cost model to this machine's measured reality.
+    Runs on any core count — a single core merely timeslices the workers,
+    which the fit reports honestly as lower throughput.
+    """
+    from repro.launch.mesh import make_topology
+
+    rows = []
+    tiles = (64, 256) if quick else (64, 256, 512)
+    worker_counts = (2,) if quick else (2, 4)
+    depth = 6
+    reps = 2 if quick else 3
+    for n in worker_counts:
+        samples = []
+        for tile in tiles:
+            _procs_chain_time(n, tile, depth, False)        # warm pool+plans
+            _procs_chain_time(n, tile, depth, True)
+            t_pin = t_alt = float("inf")
+            for _ in range(reps):                           # interleaved
+                t_pin = min(t_pin, _procs_chain_time(n, tile, depth, False))
+                t_alt = min(t_alt, _procs_chain_time(n, tile, depth, True))
+            flops = depth * tile * tile * _CRUNCH_FLOPS_PER_ELEM
+            samples.append({"flops": flops, "seconds": t_pin})
+            per_ship = max(1e-7, (t_alt - t_pin) / depth)
+            samples.append({"nbytes": tile * tile * 8, "hops": 1,
+                            "seconds": per_ship})
+        topo = make_topology("flat", n).calibrate(samples)
+        rows.append({
+            "bench": "procs_calibration", "workers": n,
+            "tiles": list(tiles), "depth": depth,
+            "flops_per_s": round(topo.flops_per_s, 1),
+            "latency_s": round(topo.latency_s, 9),
+            "bandwidth_Bps": round(topo.bandwidth_Bps, 1),
+        })
+    return rows
 
 
 def _per_rank_chain(wf, n_nodes: int, depth: int, tile: int):
@@ -357,6 +471,55 @@ def run(quick: bool = False) -> list[dict]:
         if name == "fused":
             row["batches_dispatched"], row["ops_fused"] = fused_counts
         rows.append(row)
+
+    # 2b. process-pool wavefront scaling: the same wide shape but with
+    #     GIL-holding NumPy bodies (tanh) spread over real worker
+    #     processes.  Threads cannot overlap these; procs runs each rank's
+    #     share in parallel.  The acceptance bar (CI-asserted when the
+    #     runner has >= 2 cores) is procs >= 1.3x serial; single-core
+    #     hosts emit a skipped row instead — the workers would just
+    #     timeslice one core and measure scheduler noise, not the backend.
+    import os as _os
+    n_cpus = _os.cpu_count() or 1
+    width_p, depth_p, tile_p = (8, 4, 128) if quick else (32, 8, 192)
+    n_nodes_p = min(4, n_cpus)
+    if n_cpus < 2:
+        rows.append({
+            "bench": "backend_parallel_procs", "backend": "procs",
+            "skipped": "single-core host", "cpus": n_cpus,
+            "width": width_p, "depth": depth_p, "tile": tile_p,
+        })
+    else:
+        reps_p = 2 if quick else 3
+        procs_backends = {"serial": bind.get_backend("serial"),
+                          "procs": bind.get_backend("procs")}
+        for backend in procs_backends.values():     # warm pool + plans
+            _procs_wide_exec_time(backend, n_nodes_p, width_p, depth_p,
+                                  tile_p)
+        t_procs = {n: float("inf") for n in procs_backends}
+        ctrl_msgs = 0
+        for _ in range(reps_p):                     # interleaved rounds
+            for n, backend in procs_backends.items():
+                t_procs[n] = min(t_procs[n], _procs_wide_exec_time(
+                    backend, n_nodes_p, width_p, depth_p, tile_p))
+        n_ops_p = width_p * depth_p
+        speedup = t_procs["serial"] / max(t_procs["procs"], 1e-9)
+        for name in procs_backends:
+            row = {
+                "bench": "backend_parallel_procs", "backend": name,
+                "workers": n_nodes_p, "cpus": n_cpus,
+                "width": width_p, "depth": depth_p, "tile": tile_p,
+                "ops": n_ops_p,
+                "exec_us_per_op": round(t_procs[name] / n_ops_p * 1e6, 2),
+            }
+            if name == "procs":
+                # acceptance bar (CI-asserted on multi-core runners)
+                row["procs_vs_serial_speedup"] = round(speedup, 2)
+            rows.append(row)
+
+    # 2c. calibration sweep: measured procs samples -> fitted Topology
+    #     constants (worker counts x payload sizes; see the helper)
+    rows.extend(_procs_calibration_rows(quick))
 
     # 3. chain fusion: a deep single-signature jax chain (the chain
     #    executor's target shape).  Per-level fused dispatch pays one

@@ -60,6 +60,8 @@ def main() -> None:
 
     dag_rows = [r for r in all_rows
                 if r.get("bench") in ("dag_overhead", "backend_parallel",
+                                      "backend_parallel_procs",
+                                      "procs_calibration",
                                       "chain_fused", "binop_chain_fused",
                                       "stitched_chain_fused",
                                       "versioning_memory",

@@ -50,6 +50,7 @@ from .backends import (
     BACKENDS,
     Backend,
     FusedBatchBackend,
+    ProcessPoolBackend,
     SerialPlanBackend,
     ThreadPoolBackend,
     get_backend,
@@ -75,7 +76,7 @@ __all__ = [
     "resolve_plan",
     "EXEC_CACHE", "ExecutableCache",
     "BACKENDS", "Backend", "SerialPlanBackend", "ThreadPoolBackend",
-    "FusedBatchBackend", "get_backend",
+    "FusedBatchBackend", "ProcessPoolBackend", "get_backend",
     "FaultInjector", "RankFailure", "PlanCheckpoint", "build_subset_plan",
     "choose_replacement", "plan_recovery",
 ]

@@ -18,7 +18,12 @@ transfers, live-footprint accounting, stats.  A **backend** owns only the
   collapsing N small XLA dispatches into one; whole *signature chains*
   (consecutive levels of one aligned signature, detected at plan time as
   :class:`~repro.core.plan.ChainSlice`) collapse further into a single
-  ``jit(lax.scan)`` dispatch per chain.
+  ``jit(lax.scan)`` dispatch per chain;
+* ``"procs"``   — :class:`ProcessPoolBackend`: one long-lived worker
+  *process* per simulated rank, rank-local stores in shared memory, ships
+  as real cross-process memcpys — GIL-free parallelism for NumPy op bodies
+  the ``threads`` backend cannot overlap, plus *real* worker-kill fault
+  injection feeding the recovery machinery.
 
 All backends replay the same plan against the same frontend state, so
 payload values and the transfer event stream are identical across backends;
@@ -32,11 +37,13 @@ from .base import Backend, BatchBucket, BatchSlice, spill_dead_buckets
 from .serial import SerialPlanBackend
 from .threadpool import ThreadPoolBackend
 from .fused import FusedBatchBackend
+from .procs import ProcessPoolBackend
 
 BACKENDS: dict[str, type] = {
     SerialPlanBackend.name: SerialPlanBackend,
     ThreadPoolBackend.name: ThreadPoolBackend,
     FusedBatchBackend.name: FusedBatchBackend,
+    ProcessPoolBackend.name: ProcessPoolBackend,
 }
 
 
@@ -54,5 +61,5 @@ def get_backend(spec) -> Backend:
 
 
 __all__ = ["Backend", "BatchBucket", "BatchSlice", "SerialPlanBackend",
-           "ThreadPoolBackend", "FusedBatchBackend", "BACKENDS",
-           "get_backend", "spill_dead_buckets"]
+           "ThreadPoolBackend", "FusedBatchBackend", "ProcessPoolBackend",
+           "BACKENDS", "get_backend", "spill_dead_buckets"]

@@ -1,0 +1,735 @@
+"""Process-pool backend: one long-lived worker process per simulated rank.
+
+The first backend whose parallelism is real: NumPy op bodies hold the GIL,
+so the ``threads`` backend loses to serial on exactly the workloads the
+paper targets — this one spawns one worker per rank, keeps every rank-local
+store in a shared-memory arena (:mod:`repro.core.shm_store`), and replays
+wavefronts in lockstep behind a spin barrier.  Ships are cross-process
+memcpys between arenas; per-op GC drop lists are re-bucketed per rank so
+workers free segments eagerly.
+
+Control-plane economics: a plan is sliced per rank
+(:func:`repro.core.plan.slice_for_ranks`) and shipped **once**; a later run
+whose plan is a per-ref key translation of a shipped template (the
+program-trace-cache loop case, detected by
+:func:`repro.core.plan.key_delta`) sends only a "run plan N, epoch K"
+message carrying the delta table — steady-state loop iterations cost one
+tiny message per worker, no per-op traffic (``stats.control_messages``
+tracks this).
+
+The frontend never trusts workers with semantics: after a run it *virtually
+replays* the plan's ship/commit/GC accounting against its own stores
+(placing :class:`~repro.core.shm_store.ShmRef` proxies carrying the
+worker-reported nbytes), so ``ExecutionStats`` and the transfer-event
+stream stay byte-identical to serial replay — the conformance contract
+every backend owes.
+
+Failure handling closes the PR-6 loop: a worker that dies (real SIGKILL —
+injected by a ``kill_rank`` fault policy or delivered externally) or stops
+heartbeating (the :mod:`repro.runtime.supervisor` protocol) surfaces as a
+:class:`RankFailure` at the exact wavefront boundary the shared ``slots``
+array proves fully committed, and the existing narrow-recovery machinery
+does the rest.  Armed fault policies the real path cannot realise
+physically (ship drops, which need mid-plan replica introspection) fall
+back to the serial checked path after materialising worker-resident
+payloads.
+"""
+
+from __future__ import annotations
+
+import atexit
+import itertools
+import os
+import pickle
+import signal
+import tempfile
+import time
+import weakref
+
+from ..plan import key_delta, plan_consts, slice_for_ranks
+from ..shm_store import (KIND_JAX, BarrierAborted, ShmBarrier, ShmRef,
+                         WorkerArena, payload_kind, peek_nbytes,
+                         segment_name, unlink_segment)
+from ..stats import TransferEvent, _nbytes
+from .base import Backend, RankFailure, drop_versions, materialize
+from .serial import SerialPlanBackend
+
+_FALLBACK = object()          # sentinel: this plan must run on the serial path
+_OWNER_SEQ = itertools.count(1)
+_UID_SEQ = itertools.count(1)
+
+# Inside a pool worker this is the worker's rank; None in the frontend.
+# Observability for op bodies and tests (e.g. hang exactly one rank).
+_CURRENT_RANK = None
+
+
+# ---------------------------------------------------------------------------
+# Worker process
+# ---------------------------------------------------------------------------
+
+def _worker_main(rank, conn, barrier, slots, session, hb_path, hb_interval,
+                 barrier_timeout):
+    """Long-lived rank worker: serve sliced plans from the parent forever.
+
+    Protocol (pipe is FIFO, so no acks are needed for ordering):
+
+    * ``("plan", uid, n_levels, fns, consts, levels)`` — cache a sliced
+      plan; ``levels[li] = (pulls, ops, drops)`` in template keys.
+    * ``("run", uid, deltas, consts, seeds, kill_at)`` — execute a cached
+      plan with keys translated through the per-ref ``deltas`` table
+      (``None`` → identity), optionally overriding the constant vector,
+      seeding absolute-keyed payloads first.  ``kill_at`` (fault
+      injection) SIGKILLs this process at the start of that level.
+      Replies ``("done", uid, commits)`` / ``("aborted", uid, commits)``
+      / ``("error", uid, traceback)``; ``commits`` are ``(key, nbytes)``
+      for writes this rank reports (it is the op's first exec rank).
+    * ``("reset",)`` — clear the arena and plan cache (new plan epoch:
+      ``Workflow()`` restarts the version-id streams, so keys would
+      collide across owners).
+    * ``("shutdown",)`` — clear the arena and exit.
+
+    Level loop invariant (one barrier per level, race-free): pulls for
+    level *l* happen between barrier *l-1* and barrier *l*; the pulled
+    segment was committed before barrier *p* ≤ *l-1* (its producing
+    level) and is dropped by its owner only after barrier of its last
+    reading level ≥ *l* — so every cross-process read is fenced by at
+    least one barrier on each side.  ``slots[rank]`` (completed-level
+    count) is advanced *before* the barrier, making ``min(slots)`` a
+    proven fully-committed wavefront boundary for failure recovery.
+    """
+    from ..executable_cache import process_local_cache
+    from ...runtime.supervisor import touch_heartbeat
+
+    global _CURRENT_RANK
+    _CURRENT_RANK = rank
+    arena = WorkerArena(session, rank)
+    plans = {}
+    cache = process_local_cache()
+    last_hb = [0.0]
+
+    def hb():
+        now = time.monotonic()
+        if now - last_hb[0] >= hb_interval:
+            touch_heartbeat(hb_path)
+            last_hb[0] = now
+
+    hb()
+    jnp = None
+    while True:
+        while not conn.poll(0.05):
+            hb()
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        except Exception:
+            # a message that fails to *unpickle* (e.g. a plan slice whose
+            # fn module only imports in the parent) must not kill the
+            # worker — report it and let the frontend surface the cause
+            import traceback
+            try:
+                conn.send(("error", None, traceback.format_exc()))
+            except OSError:
+                break
+            continue
+        cmd = msg[0]
+        if cmd == "plan":
+            _, uid, n_levels, fns, consts, levels = msg
+            plans[uid] = [n_levels, fns, list(consts), levels]
+            continue
+        if cmd == "reset":
+            arena.clear()
+            plans.clear()
+            continue
+        if cmd == "shutdown":
+            arena.clear()
+            break
+        # cmd == "run"
+        _, uid, deltas, new_consts, seeds, kill_at = msg
+        commits = []
+        try:
+            n_levels, fns, consts, levels = plans[uid]
+            if new_consts is not None:
+                consts = list(new_consts)
+                plans[uid][2] = consts
+            if deltas:
+                def tr(k, _d=deltas):
+                    d = _d.get(k[0])
+                    return k if d is None else (k[0], k[1] + d)
+            else:
+                def tr(k):
+                    return k
+            for key, payload in seeds:       # seeds arrive in absolute keys
+                arena.put(key, payload)
+            # seed fence: level-0 pulls read *seeded* segments on other
+            # ranks, which have no producing level (and hence no barrier)
+            # before them — one extra round serialises seeding vs pulling
+            barrier.wait(timeout=barrier_timeout, poke=hb)
+            for li in range(n_levels):
+                hb()
+                if kill_at == li:
+                    os.kill(os.getpid(), signal.SIGKILL)
+                pulls, ops, drops = levels[li]
+                for k, src in pulls:
+                    arena.pull(tr(k), src)
+                for fi, argspec, wkeys, report in ops:
+                    args = []
+                    has_jax = False
+                    for tag, v in argspec:
+                        if tag == 0:
+                            kind, payload = arena.view(tr(v))
+                            if kind == KIND_JAX:
+                                if jnp is None:
+                                    import jax.numpy as jnp
+                                payload = jnp.asarray(payload)
+                                has_jax = True
+                            args.append(payload)
+                        else:
+                            c = consts[v]
+                            if payload_kind(c) == KIND_JAX:
+                                has_jax = True
+                            args.append(c)
+                    fn = fns[fi]
+                    # jit-vs-python parity with serial: the executable
+                    # cache only ever jits all-jax signatures, so pure
+                    # NumPy/object calls skip it entirely (identical
+                    # semantics, and NumPy-only workflows never touch jax)
+                    call = cache.lookup(fn, args) if has_jax else fn
+                    result = call(*args)
+                    if len(wkeys) == 1 and not isinstance(result, tuple):
+                        k2 = tr(wkeys[0])
+                        arena.put(k2, result)
+                        if report:
+                            commits.append((k2, _nbytes(result)))
+                    else:
+                        if not isinstance(result, tuple):
+                            result = (result,)
+                        for wk, payload in zip(wkeys, result):
+                            k2 = tr(wk)
+                            arena.put(k2, payload)
+                            if report:
+                                commits.append((k2, _nbytes(payload)))
+                slots[rank] = li + 1
+                barrier.wait(timeout=barrier_timeout, poke=hb)
+                for k in drops:
+                    arena.drop(tr(k))
+            conn.send(("done", uid, tuple(commits)))
+        except BarrierAborted:
+            conn.send(("aborted", uid, tuple(commits)))
+        except BaseException:
+            import traceback
+            barrier.abort()     # unblock siblings before reporting
+            try:
+                conn.send(("error", uid, traceback.format_exc()))
+            except OSError:
+                break
+    conn.close()
+
+
+# ---------------------------------------------------------------------------
+# Worker pool (shared per world size, persistent across executors)
+# ---------------------------------------------------------------------------
+
+class _ShippedPlan:
+    """Frontend record of a plan family resident in the workers."""
+
+    __slots__ = ("levels_ref", "template", "consts", "read_holders", "uid")
+
+    def __init__(self, levels_ref, template, consts, read_holders, uid):
+        self.levels_ref = levels_ref    # strong ref keeps id() stable
+        self.template = template
+        self.consts = consts
+        self.read_holders = read_holders
+        self.uid = uid
+
+
+class WorkerPool:
+    """``n_ranks`` spawned rank workers + their shared coordination state.
+
+    Pools are shared per world size and persist across executors (spawn +
+    jax import is the expensive part); :meth:`bind` hands the pool to a new
+    owner by materialising the previous owner's worker-resident payloads,
+    resetting arenas, and respawning any dead workers.
+    """
+
+    def __init__(self, n_ranks: int, hb_interval: float,
+                 barrier_timeout: float):
+        import multiprocessing
+        self.ctx = multiprocessing.get_context("spawn")
+        self.n_ranks = n_ranks
+        self.session = f"{os.getpid():x}-{next(_OWNER_SEQ)}"
+        self.hb_interval = hb_interval
+        self.barrier_timeout = barrier_timeout
+        self.hb_dir = tempfile.mkdtemp(prefix="bind_hb_")
+        self.barrier = ShmBarrier(self.ctx, n_ranks)
+        self.slots = self.ctx.RawArray("l", n_ranks)
+        self.procs = [None] * n_ranks
+        self.conns = [None] * n_ranks
+        self.spawned_at = [0.0] * n_ranks
+        self.alive = [False] * n_ranks
+        self.owner_ex = lambda: None    # weakref to the owning executor
+        self.shipped: dict[int, _ShippedPlan] = {}
+        for r in range(n_ranks):
+            self.spawn(r)
+        atexit.register(self.shutdown)
+
+    def hb_path(self, rank: int) -> str:
+        return os.path.join(self.hb_dir, f"hb_r{rank}")
+
+    def spawn(self, rank: int) -> None:
+        parent, child = self.ctx.Pipe()
+        try:
+            os.unlink(self.hb_path(rank))
+        except OSError:
+            pass
+        p = self.ctx.Process(
+            target=_worker_main,
+            args=(rank, child, self.barrier, self.slots, self.session,
+                  self.hb_path(rank), self.hb_interval,
+                  self.barrier_timeout),
+            daemon=True, name=f"bind-rank{rank}")
+        p.start()
+        child.close()
+        self.procs[rank] = p
+        self.conns[rank] = parent
+        self.spawned_at[rank] = time.time()
+        self.alive[rank] = True
+
+    def alive_ranks(self) -> list[int]:
+        return [r for r in range(self.n_ranks) if self.alive[r]]
+
+    def bind(self, ex) -> None:
+        """Make ``ex`` the pool's owner (reset arenas on a change of hands,
+        respawning dead workers; a same-owner rebind only heals deaths)."""
+        owner = self.owner_ex()
+        if owner is ex:
+            for r in range(self.n_ranks):
+                if self.alive[r] and not self.procs[r].is_alive():
+                    # died outside a run (e.g. killed between plans): its
+                    # arena is gone — surface as data loss on next access,
+                    # but keep the pool usable
+                    self.alive[r] = False
+                    self.shipped.clear()
+            return
+        if owner is not None:
+            _materialize_stores(owner)      # rescue its worker payloads
+        for r in range(self.n_ranks):
+            if self.procs[r] is not None and self.procs[r].is_alive():
+                try:
+                    self.conns[r].send(("reset",))
+                except OSError:
+                    self.procs[r].kill()
+                    self.spawn(r)
+            else:
+                self.spawn(r)
+            self.alive[r] = True
+        self.shipped.clear()
+        self.barrier.reset(self.n_ranks)
+        for r in range(self.n_ranks):
+            self.slots[r] = 0
+        self.owner_ex = weakref.ref(ex)
+
+    def decommission(self, rank: int) -> None:
+        self.alive[rank] = False
+        self.barrier.resize(len(self.alive_ranks()))
+
+    def shutdown(self) -> None:
+        for r in range(self.n_ranks):
+            p = self.procs[r]
+            if p is None:
+                continue
+            if p.is_alive():
+                try:
+                    self.conns[r].send(("shutdown",))
+                except OSError:
+                    pass
+        deadline = time.monotonic() + 2.0
+        for p in self.procs:
+            if p is not None:
+                p.join(max(0.0, deadline - time.monotonic()))
+                if p.is_alive():
+                    p.kill()
+        try:
+            import shutil
+            shutil.rmtree(self.hb_dir, ignore_errors=True)
+        except Exception:
+            pass
+
+
+_POOLS: dict[int, WorkerPool] = {}
+
+
+def shared_pool(n_ranks: int, hb_interval: float,
+                barrier_timeout: float) -> WorkerPool:
+    pool = _POOLS.get(n_ranks)
+    if pool is None:
+        _POOLS[n_ranks] = pool = WorkerPool(n_ranks, hb_interval,
+                                            barrier_timeout)
+    return pool
+
+
+def _materialize_stores(ex) -> None:
+    """Concretise every :class:`ShmRef` in ``ex``'s stores (worker arenas
+    are about to be reset, or a serial fallback needs real payloads)."""
+    cache: dict = {}
+    for vkey, ranks in ex._where.items():
+        for r in ranks:
+            payload = ex._stores[r].get(vkey)
+            if type(payload) is ShmRef:
+                concrete = cache.get(vkey)
+                if concrete is None:
+                    cache[vkey] = concrete = payload.materialize()
+                ex._stores[r][vkey] = concrete
+
+
+# ---------------------------------------------------------------------------
+# Backend
+# ---------------------------------------------------------------------------
+
+class ProcessPoolBackend(Backend):
+    """One worker process per rank; shared-memory stores; real parallelism.
+
+    Parameters
+    ----------
+    heartbeat_timeout:
+        Seconds without a worker heartbeat before it is declared hung and
+        killed (surfacing as a *permanent* :class:`RankFailure`, driving
+        elastic rebind).  ``None`` (default) detects only real process
+        deaths — heartbeats are still written, only the watchdog is off.
+    heartbeat_interval:
+        How often workers touch their heartbeat file.
+    barrier_timeout:
+        Worker-side cap on one wavefront barrier wait.
+    """
+
+    name = "procs"
+
+    def __init__(self, heartbeat_timeout=None, heartbeat_interval: float = 0.25,
+                 barrier_timeout: float = 120.0):
+        self.heartbeat_timeout = heartbeat_timeout
+        self.heartbeat_interval = heartbeat_interval
+        self.barrier_timeout = barrier_timeout
+        self._serial = SerialPlanBackend()
+
+    # -- fault-policy translation -------------------------------------------
+    def _translate_kills(self, ex, inj, plan, pool):
+        """Realise armed fault policies as *real* worker kills.
+
+        Returns ``{rank: (level, permanent)}`` for the earliest due kill
+        (serial fires one failure per boundary; later policies stay armed
+        for the replanned suffix), ``_FALLBACK`` if any armed policy cannot
+        be realised physically (ship drops need mid-plan replica state;
+        kills of already-dead ranks need the simulated store), or ``{}``.
+        """
+        n_levels = len(plan.levels)
+        due = None
+        for pol in inj.policies:
+            if pol["fired"]:
+                continue
+            kind = pol["kind"]
+            if kind == "delay":
+                if pol["wavefront"] - ex._wavefront_base < n_levels:
+                    pol["fired"] = True
+                    inj.delays += 1
+                    inj.delay_s += pol.get("seconds", 0.0)
+                continue
+            if kind == "ship":
+                return _FALLBACK
+            li = max(0, pol["wavefront"] - ex._wavefront_base)
+            if li >= n_levels:
+                continue
+            rank = pol["rank"]
+            if rank >= pool.n_ranks or not pool.alive[rank]:
+                return _FALLBACK
+            if due is None or li < due[1]:
+                due = (pol, li)
+        if due is None:
+            return {}
+        pol, li = due
+        pol["fired"] = True
+        inj.fired.append(pol)
+        return {pol["rank"]: (li, pol.get("permanent", False))}
+
+    # -- execution -----------------------------------------------------------
+    def execute(self, ex, wf, plan) -> None:
+        if not plan.schedule:
+            return
+        pool = shared_pool(ex.n_nodes, self.heartbeat_interval,
+                           self.barrier_timeout)
+        pool.bind(ex)
+        kills = {}
+        inj = getattr(ex, "fault_injector", None)
+        if inj is not None and inj.armed:
+            kills = self._translate_kills(ex, inj, plan, pool)
+            if kills is _FALLBACK:
+                _materialize_stores(ex)
+                return self._serial.execute(ex, wf, plan)
+
+        # decommissioned ranks (elastic rebind) never appear in the plan's
+        # exec ranks / ships, but the pool must agree on who participates
+        for dead in getattr(ex, "_decommissioned", {}):
+            if dead < pool.n_ranks and pool.alive[dead]:
+                pool.decommission(dead)
+        alive = pool.alive_ranks()
+        if not alive:
+            _materialize_stores(ex)
+            return self._serial.execute(ex, wf, plan)
+
+        sent = self._ship_or_delta(ex, wf, plan, pool, alive, kills)
+        if sent is _FALLBACK:           # unpicklable fns/consts
+            _materialize_stores(ex)
+            return self._serial.execute(ex, wf, plan)
+        msgs, uid = sent
+        ex.stats.control_messages += msgs
+        self._await_and_replay(ex, wf, plan, pool, alive, uid, kills)
+
+    def _ship_or_delta(self, ex, wf, plan, pool, alive, kills):
+        """Ship plan slices (or just a delta/epoch trigger), seed missing
+        payloads, and start the run on every participating worker.
+        Returns ``(messages_sent, uid)`` or ``_FALLBACK``."""
+        sk = id(plan.levels)
+        rec = pool.shipped.get(sk)
+        deltas = consts_msg = None
+        use_delta = False
+        if rec is not None and rec.levels_ref is plan.levels:
+            deltas = key_delta(rec.template, plan)
+            if deltas is not None:
+                def tr(k):
+                    d = deltas.get(k[0])
+                    return k if d is None else (k[0], k[1] + d)
+                ok = all(
+                    tuple(sorted(ex._where.get(tr(k), ()))) == hs
+                    for k, hs in rec.read_holders.items())
+                if ok:
+                    consts = plan_consts(plan, wf)
+                    if not _consts_equal(consts, rec.consts):
+                        consts_msg = consts
+                        rec.consts = consts
+                    use_delta = True
+        msgs = 0
+        if use_delta:
+            uid = rec.uid
+            read_keys = [tr(k) for k in rec.read_holders]
+        else:
+            slices = slice_for_ranks(plan, wf, ex._where, pool.n_ranks)
+            try:
+                pickle.dumps((slices.fns, slices.consts))
+            except Exception:
+                return _FALLBACK
+            uid = next(_UID_SEQ)
+            for r in alive:
+                pool.conns[r].send(("plan", uid, slices.n_levels, slices.fns,
+                                    slices.consts, slices.worker_levels[r]))
+                msgs += 1
+            pool.shipped[sk] = _ShippedPlan(plan.levels, plan, slices.consts,
+                                            slices.read_holders, uid)
+            deltas = None
+            read_keys = list(slices.read_holders)
+
+        # seed payloads the workers don't hold (anything not a ShmRef)
+        seeds = {r: [] for r in alive}
+        seeded = []
+        for k in read_keys:
+            ranks = ex._where.get(k)
+            if not ranks:
+                continue
+            for r in ranks:
+                payload = ex._stores[r].get(k)
+                if type(payload) is ShmRef or r not in seeds:
+                    continue
+                concrete = materialize(payload)
+                if concrete is not payload and hasattr(payload, "release"):
+                    payload.release()
+                seeds[r].append((k, concrete))
+                seeded.append((k, r))
+        try:
+            for r in alive:
+                pool.slots[r] = 0
+            for r in alive:
+                kill = kills.get(r)
+                pool.conns[r].send(("run", uid, deltas or None, consts_msg,
+                                    tuple(seeds[r]), kill[0] if kill else None))
+                msgs += 1
+        except Exception:
+            return _FALLBACK
+        # the workers now hold these payloads; re-point the frontend copies
+        for k, r in seeded:
+            ex._stores[r][k] = ShmRef(k, r, ex._key_bytes.get(k, 0),
+                                      pool.session)
+        return msgs, uid
+
+    def _await_and_replay(self, ex, wf, plan, pool, alive, uid, kills):
+        """Wait for every worker's reply, then replay accounting virtually
+        (full plan on success; the proven prefix before raising
+        :class:`RankFailure` on a worker death or hang)."""
+        pending = set(alive)
+        commits: dict = {}
+        failed = None
+        worker_error = None
+        hung = False
+        while pending and failed is None and worker_error is None:
+            progressed = False
+            for r in list(pending):
+                if not pool.conns[r].poll(0.0):
+                    continue
+                progressed = True
+                try:
+                    msg = pool.conns[r].recv()
+                except (EOFError, OSError):
+                    failed = r
+                    break
+                if msg[0] == "done":
+                    commits.update(msg[2])
+                    pending.discard(r)
+                elif msg[0] == "aborted":
+                    commits.update(msg[2])
+                    pending.discard(r)
+                else:                   # "error"
+                    worker_error = (r, msg[2])
+                    break
+            if failed is not None or worker_error is not None:
+                break
+            if not progressed:
+                for r in pending:
+                    if not pool.procs[r].is_alive():
+                        failed = r
+                        break
+                    if self.heartbeat_timeout is not None:
+                        from ...runtime.supervisor import heartbeat_age
+                        age = heartbeat_age(pool.hb_path(r),
+                                            pool.spawned_at[r])
+                        if age > self.heartbeat_timeout:
+                            pool.procs[r].kill()    # hung, not dead: reap it
+                            failed = r
+                            hung = True
+                            break
+                if failed is None:
+                    time.sleep(0.002)
+
+        if worker_error is not None:
+            r, tb = worker_error
+            self._drain(pool, pending - {r}, commits)
+            pool.barrier.reset(len(pool.alive_ranks()))
+            raise RuntimeError(
+                f"procs worker (rank {r}) raised during plan replay:\n{tb}")
+        if failed is None:
+            self._virtual_replay(ex, plan, commits, pool.session)
+            return
+
+        # -- worker death / hang -------------------------------------------
+        pool.barrier.abort()
+        self._drain(pool, pending - {failed}, commits)
+        participants = [r for r in alive if r != failed]
+        boundary = pool.slots[failed]
+        for r in participants:
+            if pool.slots[r] < boundary:
+                boundary = pool.slots[r]
+        lo = (plan.levels[boundary][0] if boundary < len(plan.levels)
+              else len(plan.schedule))
+        # commit sizes the dead rank never reported: its segments survive
+        for p in plan.schedule[:lo]:
+            if p.exec_ranks and p.exec_ranks[0] == failed:
+                for wk in p.write_keys:
+                    if wk not in commits:
+                        try:
+                            commits[wk] = peek_nbytes(
+                                segment_name(pool.session, wk, failed))
+                        except FileNotFoundError:
+                            commits[wk] = 0
+        self._virtual_replay(ex, plan, commits, pool.session, upto=lo)
+        # physical cleanup of the dead rank's arena (the frontend wipes its
+        # virtual store next, in apply_failure)
+        for vkey, ranks in ex._where.items():
+            if failed in ranks:
+                unlink_segment(segment_name(pool.session, vkey, failed))
+        kill = kills.get(failed)
+        permanent = hung or bool(kill and kill[1])
+        pool.shipped.clear()    # respawned/removed workers lose their plans
+        if permanent:
+            pool.decommission(failed)
+        else:
+            pool.spawn(failed)
+        pool.barrier.reset(len(pool.alive_ranks()))
+        raise RankFailure(failed, ex._wavefront_base + boundary,
+                          level=boundary, kind="kill", permanent=permanent)
+
+    @staticmethod
+    def _drain(pool, ranks, commits, timeout: float = 30.0) -> None:
+        """Collect pending replies from surviving workers after an abort."""
+        deadline = time.monotonic() + timeout
+        for r in ranks:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0 or not pool.procs[r].is_alive():
+                continue
+            if pool.conns[r].poll(remaining):
+                try:
+                    msg = pool.conns[r].recv()
+                    if msg[0] in ("done", "aborted"):
+                        commits.update(msg[2])
+                except (EOFError, OSError):
+                    pass
+
+    @staticmethod
+    def _virtual_replay(ex, plan, nbytes_by_key, session, upto=None) -> None:
+        """Replay ship/commit/GC accounting against the frontend stores.
+
+        Byte-identical to :class:`SerialPlanBackend`'s transitions: same
+        transfer events (tree-shaped, even though the physical memcpys pull
+        from the root), same peak sampling points (after an op's commits,
+        before its GC), same drop idiom — but payloads are
+        :class:`ShmRef` proxies carrying worker-reported sizes.
+        """
+        schedule = plan.schedule if upto is None else plan.schedule[:upto]
+        stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
+        stats = ex.stats
+        events = stats.transfers
+        base_round = ex._round_counter
+        wf_base = ex._wavefront_base
+        live_b, live_c = ex._live_bytes, ex._live_entries
+        peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
+        for p in schedule:
+            if p.ships:
+                wavefront = wf_base + p.level - 1
+                for vkey, root, transfers in p.ships:
+                    nb = key_bytes.get(vkey, 0)
+                    ranks = where[vkey]
+                    for src, dst, kind, rel in transfers:
+                        stores[dst][vkey] = ShmRef(vkey, dst, nb, session)
+                        ranks.add(dst)
+                        live_c += 1
+                        events.append(TransferEvent(vkey, src, dst, nb,
+                                                    base_round + rel, kind,
+                                                    wavefront))
+            for wk in p.write_keys:
+                nb = nbytes_by_key[wk]
+                key_bytes[wk] = nb
+                live_b += nb
+                holders = set(p.exec_ranks)
+                where[wk] = holders
+                for r in holders:
+                    stores[r][wk] = ShmRef(wk, r, nb, session)
+                live_c += len(holders)
+            if live_b > peak_b:
+                peak_b = live_b
+            if live_c > peak_c:
+                peak_c = live_c
+            if p.gc_keys:
+                live_b, live_c = drop_versions(
+                    p.gc_keys, stores, where, key_bytes, live_b, live_c)
+        ex._live_bytes, ex._live_entries = live_b, live_c
+        stats.peak_live_bytes, stats.peak_live_payloads = peak_b, peak_c
+
+
+def _consts_equal(a, b) -> bool:
+    """Conservative constant-vector equality (False → just resend them)."""
+    if len(a) != len(b):
+        return False
+    for x, y in zip(a, b):
+        if x is y:
+            continue
+        try:
+            if not bool(x == y):
+                return False
+        except Exception:
+            return False
+    return True

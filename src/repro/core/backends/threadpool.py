@@ -14,7 +14,14 @@ may report *higher* (true-concurrency) peaks because a whole level's inputs
 are in flight at once.
 
 Singleton levels bypass the pool entirely, so chain-shaped plans pay no
-coordination overhead.
+coordination overhead.  Wider levels are still only *worth* dispatching when
+their op bodies outweigh the pool's per-future cost (~tens of µs each): a
+level whose widest op's estimated work — ``OpNode.flops`` plus its argument
+bytes, a proxy that covers elementwise ops with no flops annotation — falls
+below ``dispatch_threshold`` runs inline on the main thread instead
+(``inlined_levels``/``pooled_levels`` count the split).  Small-payload
+wavefronts therefore degrade to serial-equivalent dispatch instead of
+paying 6× pool overhead for µs-scale bodies.
 """
 
 from __future__ import annotations
@@ -45,14 +52,24 @@ def _shared_pool() -> ThreadPoolExecutor:
     return _SHARED_POOL
 
 
+# Estimated work units (1 flop ~ 1 byte touched) below which an op's body
+# is cheaper than submitting it: a future costs tens of µs of pool overhead
+# while NumPy streams ~1 work unit/ns, so ~200k units ≈ break-even.
+DISPATCH_THRESHOLD = 200_000
+
+
 class ThreadPoolBackend(Backend):
     """Dispatch each wavefront level's independent ops over a worker pool."""
 
     name = "threads"
 
-    def __init__(self, max_workers: Optional[int] = None):
+    def __init__(self, max_workers: Optional[int] = None,
+                 dispatch_threshold: int = DISPATCH_THRESHOLD):
         self.max_workers = max_workers
+        self.dispatch_threshold = dispatch_threshold
         self._pool: Optional[ThreadPoolExecutor] = None   # dedicated only
+        self.inlined_levels = 0     # multi-op levels run on the main thread
+        self.pooled_levels = 0      # multi-op levels actually dispatched
 
     def _get_pool(self) -> ThreadPoolExecutor:
         if self.max_workers is None:
@@ -70,6 +87,28 @@ class ThreadPoolBackend(Backend):
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+
+    def _below_threshold(self, ex, ops, schedule, lo: int, hi: int) -> bool:
+        """True when every op body of the level is too small to dispatch.
+
+        Work estimate per op: ``OpNode.flops`` when the lowering annotated
+        it, plus the summed nbytes of version-key arguments (elementwise
+        bodies touch each input byte about once).  The *widest* op decides:
+        one heavy body is enough to make overlap worth the pool.
+        """
+        threshold = self.dispatch_threshold
+        if threshold <= 0:
+            return False
+        key_bytes = ex._key_bytes
+        for idx in range(lo, hi):
+            p = schedule[idx]
+            work = ops[p.op_id].flops or 0
+            for k in p.arg_keys:
+                if k is not None:
+                    work += key_bytes.get(k, 0)
+            if work >= threshold:
+                return False
+        return True
 
     def execute(self, ex, wf, plan) -> None:
         ops = wf.ops
@@ -91,6 +130,20 @@ class ThreadPoolBackend(Backend):
                 args = gather_args(ex, p, node)
                 commit(ex, p, node, resolve_call(ex, p, args)(*args))
                 continue
+            if self._below_threshold(ex, ops, schedule, lo, hi):
+                # µs-scale bodies: serial in-place dispatch beats the pool's
+                # per-future overhead; transitions are identical to serial
+                # (op-at-a-time commits — peaks match the serial reference)
+                self.inlined_levels += 1
+                for idx in range(lo, hi):
+                    p = schedule[idx]
+                    if p.ships:
+                        apply_ships(ex, p)
+                    node = ops[p.op_id]
+                    args = gather_args(ex, p, node)
+                    commit(ex, p, node, resolve_call(ex, p, args)(*args))
+                continue
+            self.pooled_levels += 1
             # stage the whole level on the main thread, plan order
             staged = []
             for idx in range(lo, hi):

@@ -276,3 +276,19 @@ class ExecutableCache:
 # Process-wide cache: signatures are shared across executors and workflows
 # (the same tiled-GEMM leaf compiles once per process, not once per run).
 EXEC_CACHE = ExecutableCache()
+
+
+def process_local_cache() -> ExecutableCache:
+    """The calling process's executable cache (per-worker instantiation).
+
+    Pool workers of the process-pool backend resolve op bodies through
+    their *own* cache: XLA executables and jit-vs-python decisions are
+    process-local state that cannot ship over a pipe, and a worker must
+    make exactly the decisions the serial reference would (same
+    ``_build`` rules) so numerics stay bitwise-identical across backends.
+    In the parent this returns :data:`EXEC_CACHE`; in a spawned worker the
+    module re-imports and the fresh process-wide instance *is* the
+    per-worker cache — one signature table per rank, populated on first
+    replay and persistent across plans for the worker's lifetime.
+    """
+    return EXEC_CACHE

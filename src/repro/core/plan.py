@@ -720,3 +720,173 @@ def plan_for(wf, start: int, end: int, n_nodes: int, collective_mode: str,
                           pinned)
         _plan_cache_put(key, plan)
     return plan
+
+
+# ---------------------------------------------------------------------------
+# Rank-local plan slicing (process-pool backend)
+# ---------------------------------------------------------------------------
+
+class RankSlices:
+    """A plan resolved into per-rank, per-level picklable work lists.
+
+    The process-pool backend ships each worker only its own slice:
+    ``worker_levels[rank][li]`` is ``(pulls, ops, drops)`` where ``pulls``
+    are ``(version_key, src_rank)`` memcpys realising this rank's share of
+    the level's ship schedule, ``ops`` are ``(fn_index, argspec,
+    write_keys, report)`` descriptors (``argspec`` entries are ``(0, key)``
+    payload reads from the rank's own arena or ``(1, const_index)`` into
+    the shared ``consts`` vector; ``report`` marks the one exec rank that
+    reports result nbytes back), and ``drops`` are the version keys whose
+    last reader sits in this level — the per-op GC drop lists re-bucketed
+    by holder rank so workers free eagerly.
+
+    ``fns`` is the registered fn table (pickled by reference — workers
+    resolve the module-level callables on their side); constants are
+    *not* baked into descriptors because plans are reused across runs with
+    different embedded constants.  ``read_holders`` records the holder
+    ranks of every key the plan reads before writing, so a later run may
+    validate that a cached slice's ship/drop distribution is still valid.
+    """
+
+    __slots__ = ("fns", "consts", "worker_levels", "read_holders",
+                 "n_levels")
+
+    def __init__(self, fns, consts, worker_levels, read_holders, n_levels):
+        self.fns = fns
+        self.consts = consts
+        self.worker_levels = worker_levels
+        self.read_holders = read_holders
+        self.n_levels = n_levels
+
+
+def slice_for_ranks(plan: ExecutionPlan, wf, holders: dict,
+                    n_ranks: int) -> RankSlices:
+    """Slice ``plan`` into per-rank wavefront work lists (see
+    :class:`RankSlices`).
+
+    Re-simulates holder evolution exactly as :func:`build_plan` did (ships
+    add replicas, writes place on exec ranks, GC removes every replica) so
+    each drop lands on precisely the ranks physically holding a segment.
+    Broadcast-tree ships are realised as direct pulls from the tree root:
+    the *accounting* keeps the tree shape (the frontend replays
+    ``p.ships`` virtually), but the physical memcpy always reads the root
+    rank's segment — the root committed it before the level started, so
+    every pull inside one level is race-free without intra-level rounds.
+    """
+    n_levels = len(plan.levels)
+    fns: list = []
+    fn_idx: dict = {}
+    consts: list = []
+    per_rank = [[([], [], []) for _ in range(n_levels)]
+                for _ in range(n_ranks)]
+    sim: dict = {}
+    read_holders: dict = {}
+
+    def ensure(k):
+        hold = sim.get(k)
+        if hold is None:
+            rs = holders.get(k)
+            sim[k] = hold = set(rs) if rs else set()
+            read_holders[k] = tuple(sorted(hold))
+        return hold
+
+    for p in plan.schedule:
+        node = wf.ops[p.op_id]
+        li = p.level - 1
+        for k, root, transfers in p.ships:
+            hold = ensure(k)
+            for _src, dst, _kind, _rel in transfers:
+                if dst not in hold:
+                    per_rank[dst][li][0].append((k, root))
+                    hold.add(dst)
+        for k in p.arg_keys:
+            if k is not None:
+                ensure(k)
+        fi = fn_idx.get(p.fn)
+        if fi is None:
+            fn_idx[p.fn] = fi = len(fns)
+            fns.append(p.fn)
+        argspec = []
+        for k, a in zip(p.arg_keys, node.args):
+            if k is not None:
+                argspec.append((0, k))
+            else:
+                argspec.append((1, len(consts)))
+                consts.append(a[1])
+        desc = (fi, tuple(argspec), p.write_keys)
+        for j, r in enumerate(p.exec_ranks):
+            per_rank[r][li][1].append(desc + (j == 0,))
+        for k in p.write_keys:
+            sim[k] = set(p.exec_ranks)
+        for k in p.gc_keys:
+            hold = sim.pop(k, None)
+            if hold:
+                for r in hold:
+                    per_rank[r][li][2].append(k)
+    worker_levels = tuple(
+        tuple((tuple(pl), tuple(ops), tuple(dr)) for pl, ops, dr in lvls)
+        for lvls in per_rank)
+    return RankSlices(tuple(fns), tuple(consts), worker_levels,
+                      read_holders, n_levels)
+
+
+def key_delta(template: ExecutionPlan, plan: ExecutionPlan):
+    """Per-ref version-index shift mapping ``template``'s keys onto
+    ``plan``'s, or None if the two schedules are not shift-equivalent.
+
+    The program-trace cache replays a loop body against fresh version keys
+    every iteration (:meth:`ExecutionPlan.rebind`): same structure, every
+    key of ref ``r`` advanced by a per-ref constant.  When that holds, a
+    worker-resident plan slice can be re-run by sending only the delta
+    table — the "run plan N, epoch K" message — instead of re-shipping
+    sliced descriptors.  The check is exhaustive over every key-bearing
+    field (args, writes, GC, ship roots/schedules), so a successful delta
+    *proves* the shipped slice replays correctly under translation.
+    """
+    if len(template.schedule) != len(plan.schedule):
+        return None
+    deltas: dict[int, int] = {}
+
+    def match(ok, nk):
+        if ok is None or nk is None:
+            return ok is None and nk is None
+        if ok[0] != nk[0]:
+            return False
+        d = nk[1] - ok[1]
+        return deltas.setdefault(ok[0], d) == d
+
+    for op_, np_ in zip(template.schedule, plan.schedule):
+        if (op_.fn is not np_.fn or op_.exec_ranks != np_.exec_ranks
+                or op_.level != np_.level
+                or len(op_.arg_keys) != len(np_.arg_keys)
+                or len(op_.write_keys) != len(np_.write_keys)
+                or len(op_.gc_keys) != len(np_.gc_keys)
+                or len(op_.ships) != len(np_.ships)):
+            return None
+        for ok, nk in zip(op_.arg_keys, np_.arg_keys):
+            if not match(ok, nk):
+                return None
+        for ok, nk in zip(op_.write_keys, np_.write_keys):
+            if not match(ok, nk):
+                return None
+        for ok, nk in zip(op_.gc_keys, np_.gc_keys):
+            if not match(ok, nk):
+                return None
+        for (okk, oroot, otr), (nkk, nroot, ntr) in zip(op_.ships,
+                                                        np_.ships):
+            if oroot != nroot or otr != ntr or not match(okk, nkk):
+                return None
+    return deltas
+
+
+def plan_consts(plan: ExecutionPlan, wf) -> tuple:
+    """The plan's embedded-constant vector, in :func:`slice_for_ranks`
+    order (schedule-major, argument-position minor).  Read from the live
+    ops — constants are never baked into plans or shipped slices."""
+    out = []
+    for p in plan.schedule:
+        node = wf.ops[p.op_id]
+        for k, a in zip(p.arg_keys, node.args):
+            if k is None:
+                out.append(a[1])
+    return tuple(out)

@@ -67,6 +67,7 @@ from .placement import placement_ranks
 from .plan import (PLAN_CACHE_STATS, map_ranks, wavefront_flops,
                    wavefront_levels)
 from .program import PROGRAM_CACHE_STATS, Segment, resolve_plan
+from .shm_store import ShmRef
 from .recovery import (apply_failure, build_subset_plan, choose_replacement,
                        plan_recovery, wipe_rank)
 from .stats import ExecutionStats, TransferEvent, _nbytes
@@ -181,6 +182,14 @@ class LocalExecutor:
         if type(payload) is BatchSlice:
             concrete = payload.materialize()
             payload.release()
+            for r in ranks:
+                self._stores[r][version.key] = concrete
+            payload = concrete
+        elif type(payload) is ShmRef:
+            # procs backend: the payload lives in a worker's shared-memory
+            # arena; attach, rehydrate, and write back so repeated fetches
+            # pay the copy once
+            concrete = payload.materialize()
             for r in ranks:
                 self._stores[r][version.key] = concrete
             payload = concrete

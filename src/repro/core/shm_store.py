@@ -1,0 +1,417 @@
+"""Shared-memory payload arenas for the process-pool backend.
+
+One worker process per simulated rank keeps its rank-local store in
+``multiprocessing.shared_memory`` segments, one segment per *(version,
+rank)* replica.  Segment names are a pure function of ``(session, version
+key, rank)``, so any process can attach a replica by name with zero
+coordination — the wavefront barrier (not a message) is what guarantees a
+producer's segment exists before a consumer attaches.  Rank-local reads are
+zero-copy NumPy views of the mapped buffer; a ship is one ``memcpy`` from
+the source rank's segment into a fresh segment owned by the destination
+rank, so replica ownership (and therefore GC/unlink responsibility) is
+always single-rank.
+
+Segments are self-describing: a small header carries the payload kind
+(pickled object / NumPy array / JAX array), dtype and shape, so the
+frontend can rehydrate a payload it never saw — plans are shape-oblivious
+and op results are born inside workers.
+
+This module is deliberately import-light (no jax): workers import it at
+spawn, and a NumPy-only workflow never pays a jax import in any worker.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import struct
+import time
+from multiprocessing import shared_memory
+from typing import Any, Optional
+
+import numpy as np
+
+KIND_PICKLE = 0     # arbitrary python object, pickled
+KIND_NUMPY = 1      # np.ndarray, raw bytes
+KIND_JAX = 2        # jax.Array, stored as raw host bytes, rehydrated on read
+
+_HEADER = struct.Struct("<BB6sB")      # kind, dtype-name len, pad, ndim
+
+
+def segment_name(session: str, vkey: tuple[int, int], rank: int) -> str:
+    """Deterministic shm name for one (version, rank) replica."""
+    return f"bnd{session}-{vkey[0]}-{vkey[1]}-r{rank}"
+
+
+def payload_kind(payload: Any) -> int:
+    """Classify a payload without importing jax (duck-typed)."""
+    if type(payload) is np.ndarray:
+        return KIND_NUMPY
+    # jax.Array quacks like an ndarray but is not one; the module check
+    # avoids importing jax from a process that has never seen a jax payload
+    mod = type(payload).__module__ or ""
+    if (mod.startswith("jax") or mod.startswith("jaxlib")) and \
+            getattr(payload, "dtype", None) is not None:
+        return KIND_JAX
+    return KIND_PICKLE
+
+
+def _encode(payload: Any) -> tuple[int, bytes, Optional[np.ndarray]]:
+    """(kind, header bytes, raw array or None) for one payload."""
+    kind = payload_kind(payload)
+    if kind == KIND_PICKLE:
+        raw = pickle.dumps(payload)
+        header = _HEADER.pack(kind, 0, b"", 0) + struct.pack("<Q", len(raw))
+        return kind, header + raw, None
+    arr = np.asarray(payload)           # jax: device_get to host bytes
+    if not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr)
+    dname = arr.dtype.name.encode()
+    header = (_HEADER.pack(kind, len(dname), b"", arr.ndim) + dname
+              + struct.pack(f"<{arr.ndim}q", *arr.shape)
+              + struct.pack("<Q", arr.nbytes))
+    return kind, header, arr
+
+
+def _decode(buf: memoryview) -> tuple[int, Any]:
+    """(kind, raw payload) from a segment buffer.
+
+    ``raw`` is a *copy* (the caller may close the segment); JAX payloads
+    come back as the host ndarray — rehydration to a device array is the
+    caller's job (it owns the decision to import jax).
+    """
+    kind, dlen, _pad, ndim = _HEADER.unpack_from(buf, 0)
+    off = _HEADER.size
+    if kind == KIND_PICKLE:
+        (n,) = struct.unpack_from("<Q", buf, off)
+        return kind, pickle.loads(bytes(buf[off + 8:off + 8 + n]))
+    dname = bytes(buf[off:off + dlen]).decode()
+    off += dlen
+    shape = struct.unpack_from(f"<{ndim}q", buf, off)
+    off += 8 * ndim
+    (nbytes,) = struct.unpack_from("<Q", buf, off)
+    off += 8
+    try:
+        dtype = np.dtype(dname)
+    except TypeError:       # extension dtypes (bfloat16) register via import
+        import ml_dtypes
+        dtype = np.dtype(getattr(ml_dtypes, dname))
+    arr = np.frombuffer(buf, dtype=dtype, count=nbytes // dtype.itemsize,
+                        offset=off).reshape(shape).copy()
+    return kind, arr
+
+
+def _view(buf: memoryview) -> tuple[int, Any]:
+    """Like :func:`_decode` but zero-copy for arrays (rank-local reads).
+
+    The returned view is marked read-only: op bodies are functional by
+    contract, and a stray in-place write must not corrupt a committed
+    version other consumers will read.
+    """
+    kind, dlen, _pad, ndim = _HEADER.unpack_from(buf, 0)
+    if kind == KIND_PICKLE:
+        return _decode(buf)
+    off = _HEADER.size
+    dname = bytes(buf[off:off + dlen]).decode()
+    off += dlen
+    shape = struct.unpack_from(f"<{ndim}q", buf, off)
+    off += 8 * ndim
+    (nbytes,) = struct.unpack_from("<Q", buf, off)
+    off += 8
+    try:
+        dtype = np.dtype(dname)
+    except TypeError:
+        import ml_dtypes
+        dtype = np.dtype(getattr(ml_dtypes, dname))
+    arr = np.frombuffer(buf, dtype=dtype, count=nbytes // dtype.itemsize,
+                        offset=off).reshape(shape)
+    arr.flags.writeable = False
+    return kind, arr
+
+
+def _attach(name: str) -> shared_memory.SharedMemory:
+    """Attach an existing segment *as a reader*.
+
+    CPython ≤3.12 registers every attach with the resource tracker, but
+    frontend and workers share one tracker daemon (spawned children inherit
+    its fd), so the re-registration is an idempotent set-add and the
+    owner's eventual unlink clears the single shared entry — no
+    per-attach bookkeeping needed.
+    """
+    return shared_memory.SharedMemory(name=name)
+
+
+def read_segment(name: str) -> tuple[int, Any]:
+    """Attach ``name``, decode a copy of its payload, detach."""
+    seg = _attach(name)
+    try:
+        return _decode(seg.buf)
+    finally:
+        seg.close()
+
+
+def peek_nbytes(name: str) -> int:
+    """Accounting nbytes of a segment's payload without copying it out.
+
+    Mirrors ``stats._nbytes``: array payloads report their raw byte count,
+    pickled objects report 0.  Used by the frontend to reconstruct the
+    commit sizes of a SIGKILL'd worker whose "done" message never arrived —
+    the segments survive the process.
+    """
+    seg = _attach(name)
+    try:
+        kind, dlen, _pad, ndim = _HEADER.unpack_from(seg.buf, 0)
+        if kind == KIND_PICKLE:
+            return 0
+        off = _HEADER.size + dlen + 8 * ndim
+        (nbytes,) = struct.unpack_from("<Q", seg.buf, off)
+        return int(nbytes)
+    finally:
+        seg.close()
+
+
+def _close_quiet(seg: shared_memory.SharedMemory) -> None:
+    """Close a segment tolerating live exports.
+
+    An op body may still (transitively) reference a zero-copy view of the
+    segment's mmap — e.g. the last level's ``args`` locals in a worker —
+    which makes ``mmap.close()`` raise ``BufferError: cannot close
+    exported pointers exist``.  The *unlink* is what actually frees the
+    name and (once all maps die) the memory; a stale private mapping is
+    reclaimed when its last view dies, so a failed close is harmless —
+    but the object must be defused (mmap/fd detached) or its ``__del__``
+    would re-raise the same error as an ignored-exception traceback.
+    """
+    try:
+        seg.close()
+    except BufferError:
+        seg._buf = None
+        seg._mmap = None        # freed by the last exporting view's death
+        fd = getattr(seg, "_fd", -1)
+        if fd >= 0:
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+            seg._fd = -1
+
+
+def unlink_segment(name: str) -> None:
+    """Best-effort unlink of a segment by name (missing is fine)."""
+    try:
+        seg = _attach(name)
+    except FileNotFoundError:
+        return
+    _close_quiet(seg)
+    try:
+        seg.unlink()
+    except FileNotFoundError:
+        pass
+
+
+class ShmRef:
+    """Frontend-side proxy for a payload living in a worker arena.
+
+    Stored in the executor's virtual stores like any payload; ``nbytes``
+    keeps the live-footprint and transfer accounting byte-identical to
+    serial replay, and :meth:`materialize` attaches the segment and
+    rehydrates the concrete payload (JAX payloads come back as device
+    arrays) when a fetch actually demands the bytes.
+    """
+
+    __slots__ = ("key", "rank", "_nb", "session")
+
+    def __init__(self, key: tuple[int, int], rank: int, nb: int,
+                 session: str):
+        self.key = key
+        self.rank = rank
+        self._nb = nb
+        self.session = session
+
+    @property
+    def nbytes(self) -> int:
+        return self._nb
+
+    def materialize(self) -> Any:
+        kind, raw = read_segment(segment_name(self.session, self.key,
+                                              self.rank))
+        if kind == KIND_JAX:
+            import jax.numpy as jnp
+            return jnp.asarray(raw)
+        return raw
+
+    def __repr__(self) -> str:
+        return f"ShmRef({self.key}, rank {self.rank}, {self._nb}B)"
+
+
+class WorkerArena:
+    """One rank's shared-memory store: version key → owned segment.
+
+    ``put`` is tolerant of leftovers: a segment name colliding with a stale
+    segment (a previous run of the same version key, or a re-execution
+    after an aborted level) is reused when large enough and replaced
+    otherwise — recovery replays may legitimately re-commit a key.
+    """
+
+    def __init__(self, session: str, rank: int):
+        self.session = session
+        self.rank = rank
+        self._segments: dict[tuple[int, int], shared_memory.SharedMemory] = {}
+
+    def __contains__(self, key) -> bool:
+        return key in self._segments
+
+    def put(self, key: tuple[int, int], payload: Any) -> int:
+        """Store ``payload`` under ``key``; returns its accounting nbytes
+        (array nbytes; 0 for pickled objects — matching ``_nbytes``)."""
+        kind, header, arr = _encode(payload)
+        total = len(header) + (arr.nbytes if arr is not None else 0)
+        name = segment_name(self.session, key, self.rank)
+        old = self._segments.pop(key, None)
+        seg = None
+        if old is not None:
+            if old.size >= total:
+                seg = old
+            else:
+                _close_quiet(old)
+                try:
+                    old.unlink()
+                except FileNotFoundError:
+                    pass
+        if seg is None:
+            try:
+                seg = shared_memory.SharedMemory(name=name, create=True,
+                                                 size=total)
+            except FileExistsError:
+                stale = shared_memory.SharedMemory(name=name)
+                if stale.size >= total:
+                    seg = stale
+                else:
+                    _close_quiet(stale)
+                    stale.unlink()
+                    seg = shared_memory.SharedMemory(name=name, create=True,
+                                                     size=total)
+        seg.buf[:len(header)] = header
+        if arr is not None:
+            dst = np.frombuffer(seg.buf, dtype=np.uint8, count=arr.nbytes,
+                                offset=len(header))
+            dst[:] = arr.view(np.uint8).reshape(-1)
+        self._segments[key] = seg
+        return arr.nbytes if arr is not None else 0
+
+    def view(self, key: tuple[int, int]) -> tuple[int, Any]:
+        """(kind, zero-copy payload view) of an owned segment."""
+        return _view(self._segments[key].buf)
+
+    def pull(self, key: tuple[int, int], src_rank: int) -> int:
+        """Ship: memcpy ``(key, src_rank)``'s segment into this arena."""
+        src_name = segment_name(self.session, key, src_rank)
+        src = _attach(src_name)
+        try:
+            total = src.size
+            name = segment_name(self.session, key, self.rank)
+            old = self._segments.pop(key, None)
+            seg = None
+            if old is not None and old.size >= total:
+                seg = old
+            else:
+                if old is not None:
+                    _close_quiet(old)
+                    try:
+                        old.unlink()
+                    except FileNotFoundError:
+                        pass
+                try:
+                    seg = shared_memory.SharedMemory(name=name, create=True,
+                                                     size=total)
+                except FileExistsError:
+                    stale = shared_memory.SharedMemory(name=name)
+                    if stale.size >= total:
+                        seg = stale
+                    else:
+                        _close_quiet(stale)
+                        stale.unlink()
+                        seg = shared_memory.SharedMemory(
+                            name=name, create=True, size=total)
+            seg.buf[:total] = src.buf[:total]
+            self._segments[key] = seg
+            return total
+        finally:
+            src.close()
+
+    def drop(self, key: tuple[int, int]) -> None:
+        seg = self._segments.pop(key, None)
+        if seg is None:
+            return
+        _close_quiet(seg)
+        try:
+            seg.unlink()
+        except FileNotFoundError:
+            pass
+
+    def clear(self) -> None:
+        for key in list(self._segments):
+            self.drop(key)
+
+
+class BarrierAborted(RuntimeError):
+    """Raised in a worker when the frontend aborts the wavefront barrier."""
+
+
+class ShmBarrier:
+    """Sense-reversing spin barrier over shared ctypes, resizable + abortable.
+
+    ``multiprocessing.Barrier`` cannot shrink its party count after spawn,
+    which elastic degradation (a permanently dead worker) requires; this
+    one keeps ``parties`` in shared memory so the frontend can resize it
+    between plans, and exposes :meth:`abort` so survivors of a killed
+    worker unblock deterministically instead of deadlocking on a barrier
+    the dead rank will never reach.  Waiters spin with a short yield-then-
+    sleep backoff (wavefront levels are the unit of synchronisation, so
+    waits are µs–ms scale).
+    """
+
+    def __init__(self, ctx, parties: int):
+        self._lock = ctx.Lock()
+        self._parties = ctx.RawValue("i", parties)
+        self._count = ctx.RawValue("i", 0)
+        self._gen = ctx.RawValue("Q", 0)
+        self._abort = ctx.RawValue("b", 0)
+
+    def wait(self, timeout: float = 120.0, poke=None) -> None:
+        with self._lock:
+            gen = self._gen.value
+            self._count.value += 1
+            if self._count.value >= self._parties.value:
+                self._count.value = 0
+                self._gen.value = gen + 1
+                return
+        deadline = time.monotonic() + timeout
+        spins = 0
+        while self._gen.value == gen:
+            if self._abort.value:
+                raise BarrierAborted("wavefront barrier aborted")
+            if time.monotonic() > deadline:
+                raise BarrierAborted("wavefront barrier timed out")
+            spins += 1
+            if spins < 200:
+                time.sleep(0)
+            else:
+                time.sleep(0.0002)
+                if poke is not None:
+                    poke()
+
+    # -- frontend-side control ------------------------------------------------
+    def abort(self) -> None:
+        self._abort.value = 1
+
+    def resize(self, parties: int) -> None:
+        with self._lock:
+            self._parties.value = parties
+
+    def reset(self, parties: int) -> None:
+        """Re-arm after an abort; callers guarantee no worker is waiting."""
+        with self._lock:
+            self._parties.value = parties
+            self._count.value = 0
+            self._abort.value = 0

@@ -82,6 +82,13 @@ class ExecutionStats:
     recomputed_ops: int = 0
     restored_versions: int = 0
     recovery_time_s: float = 0.0
+    # Process-pool backend observability: frontend->worker control messages
+    # (plan slices shipped, run/epoch triggers, seed payloads).  A
+    # steady-state loop iteration on a worker-resident plan should cost one
+    # "run plan N, epoch K" message per worker — per-op control traffic in
+    # this counter is a dispatch-overhead regression.  Not part of the
+    # cross-backend conformance contract (simulated backends leave it 0).
+    control_messages: int = 0
 
     @property
     def recompute_ratio(self) -> float:

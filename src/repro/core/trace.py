@@ -441,6 +441,13 @@ def op(fn: Callable = None, *, flops: int = 0) -> Callable:
         caller.__name__ = getattr(f, "__name__", "op")
         caller.__wrapped__ = f
         caller.__bind_intents__ = intents
+        # The *raw* ``f`` is what plans record, but the module attribute now
+        # holds ``caller`` — repoint f's qualname through the wrapper so
+        # pickle-by-reference (procs backend plan shipping) resolves
+        # ``module.<name>.__wrapped__`` back to this exact object.
+        if hasattr(f, "__qualname__"):
+            caller.__qualname__ = f.__qualname__
+            f.__qualname__ = f.__qualname__ + ".__wrapped__"
         return caller
 
     if fn is not None:

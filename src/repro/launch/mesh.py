@@ -88,6 +88,64 @@ class Topology:
             return 0.0
         return h * self.latency_s + nbytes / self.bandwidth_Bps
 
+    def calibrate(self, samples) -> "Topology":
+        """Fit this topology's constants to *measured* samples.
+
+        ``samples`` is an iterable of dicts of two shapes, freely mixed:
+
+        * compute — ``{"flops": F, "seconds": s}``: one op body (or level)
+          that retired ``F`` flops in ``s`` seconds; fitted as
+          ``flops_per_s = ΣF / Σs`` (rate of the pooled sample, so long
+          runs weigh more than noisy short ones);
+        * transfer — ``{"nbytes": B, "hops": h, "seconds": s}``: one
+          measured ship of ``B`` bytes over ``h`` link hops (``hops``
+          defaults to 1); fitted by least squares to the α–β model
+          ``s = h·α + B·β``, clamped to non-negative α and positive β.
+
+        Returns a new frozen :class:`Topology` (constants not covered by
+        the samples keep their current values) — the bridge from the
+        process-pool backend's *measured* wall-clock (see the calibration
+        sweep in ``benchmarks/bench_dag_overhead.py``) to the simulated
+        makespan model, closing the loop between estimated and real time.
+        """
+        comp_f = comp_s = 0.0
+        xfer = []
+        for s in samples:
+            if "flops" in s:
+                comp_f += float(s["flops"])
+                comp_s += float(s["seconds"])
+            elif "nbytes" in s:
+                xfer.append((float(s.get("hops", 1)), float(s["nbytes"]),
+                             float(s["seconds"])))
+        changes = {}
+        if comp_f > 0.0 and comp_s > 0.0:
+            changes["flops_per_s"] = comp_f / comp_s
+        if xfer:
+            if len(xfer) == 1 or len({(h, b) for h, b, _ in xfer}) == 1:
+                # one distinct (hops, nbytes) point cannot split α from β:
+                # attribute the mean to bandwidth, keep the current latency
+                h, b, t = xfer[0]
+                ts = [t for _h, _b, t in xfer]
+                residual = max(1e-12,
+                               sum(ts) / len(ts) - h * self.latency_s)
+                if b > 0.0:
+                    changes["bandwidth_Bps"] = b / residual
+            else:
+                # least squares for s = h·α + b·β over all samples
+                shh = sum(h * h for h, _b, _t in xfer)
+                sbb = sum(b * b for _h, b, _t in xfer)
+                shb = sum(h * b for h, b, _t in xfer)
+                sht = sum(h * t for h, _b, t in xfer)
+                sbt = sum(b * t for _h, b, t in xfer)
+                det = shh * sbb - shb * shb
+                if det > 0.0:
+                    alpha = (sht * sbb - sbt * shb) / det
+                    beta = (sbt * shh - sht * shb) / det
+                    changes["latency_s"] = max(0.0, alpha)
+                    if beta > 0.0:
+                        changes["bandwidth_Bps"] = 1.0 / beta
+        return dataclasses.replace(self, **changes) if changes else self
+
 
 def make_topology(kind: str = "flat", n_nodes: int = 1, *,
                   latency_s: float = 1e-6, bandwidth_Bps: float = 10e9,

@@ -36,16 +36,7 @@ class Supervisor:
         self._spawned_at: Optional[float] = None
 
     def _heartbeat_age(self) -> float:
-        try:
-            return time.time() - os.path.getmtime(self.heartbeat_file)
-        except OSError:
-            # no heartbeat file yet: a worker that dies into a zombie (or
-            # hangs) before its *first* heartbeat used to report age 0.0
-            # forever and was never detected — count age from the spawn
-            # instead, so the timeout covers the pre-first-heartbeat window
-            if self._spawned_at is None:
-                return 0.0
-            return time.time() - self._spawned_at
+        return heartbeat_age(self.heartbeat_file, self._spawned_at)
 
     def run(self, poll: float = 1.0) -> int:
         """Run the training process, respawning on crash or hang.
@@ -73,6 +64,25 @@ class Supervisor:
                     f"gave up after {self.max_restarts} restarts "
                     f"(last exit {ret}, hung={hung})")
             # training script resumes from the latest checkpoint on its own
+
+
+def heartbeat_age(path: str, spawned_at: Optional[float] = None) -> float:
+    """Seconds since ``path`` was last touched.
+
+    The shared liveness predicate for every heartbeat consumer — the
+    :class:`Supervisor` loop for whole training processes, and the
+    process-pool backend's per-rank worker monitor.  No heartbeat file yet:
+    a worker that dies into a zombie (or hangs) before its *first*
+    heartbeat used to report age 0.0 forever and was never detected — count
+    age from the spawn instead, so the timeout covers the
+    pre-first-heartbeat window.
+    """
+    try:
+        return time.time() - os.path.getmtime(path)
+    except OSError:
+        if spawned_at is None:
+            return 0.0
+        return time.time() - spawned_at
 
 
 def touch_heartbeat(path: str) -> None:

@@ -1,0 +1,102 @@
+"""Op pool for the backend-conformance fuzzer (see test_conformance.py).
+
+Lives in its own import-light module — not in the test module — because the
+``procs`` backend pickles op fns *by reference* into worker processes: the
+workers re-import the defining module, and the test module's own imports
+(hypothesis, pytest plugins) only resolve inside a pytest session.  Fns are
+module-level so identity (exec-cache signatures, fusion fallback pins) is
+stable across replays and across processes.
+"""
+
+import numpy as np
+
+from repro import core as bind
+
+
+def _scale(a, s):
+    return a * s
+
+
+_scale.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _shift(a, s):
+    return a + s
+
+
+_shift.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _branchy(a, s):
+    # data-dependent host branch: never vmap/scan-traceable — exercises the
+    # fused backend's per-op fallback without changing semantics
+    if float(np.asarray(a).sum()) >= 0:
+        return a * s
+    return a + s
+
+
+_branchy.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _add(a, b):
+    return a + b
+
+
+_add.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _mix(a, b):
+    return a * 0.5 + b
+
+
+_mix.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _mm(a, b):
+    return a @ b
+
+
+_mm.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _combine(a, b):
+    return a + b
+
+
+# binary-op chain pool: carry (the InOut arg) in position 0 or 1; _bsel's
+# host branch defeats scan tracing mid-chain (fallback must stay seamless)
+def _addr(x, y):
+    return x + y
+
+
+_addr.__bind_intents__ = (bind.In, bind.InOut)
+
+
+def _mixr(x, y):
+    return x * 0.5 + y
+
+
+_mixr.__bind_intents__ = (bind.In, bind.InOut)
+
+
+def _bsel(a, b):
+    if float(np.asarray(a).sum()) >= 0:
+        return a + b
+    return a * 0.5 + b
+
+
+_bsel.__bind_intents__ = (bind.InOut, bind.In)
+
+
+def _axpy(y, x, s):
+    return y + x * s
+
+
+_axpy.__bind_intents__ = (bind.InOut, bind.In, bind.In)
+
+
+UNARY = (_scale, _shift, _branchy)
+BINARY = (_add, _mix, _mm)
+BIN_CARRY0 = (_add, _mix, _bsel)
+BIN_CARRY1 = (_addr, _mixr)
+CONSTS = (2, 2.0, 0.5, -1.5, True)

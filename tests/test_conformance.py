@@ -13,7 +13,9 @@ runs over per-level *varying* constants (hoisted-xs bait), plus adversarial
 chain-breakers (mid-chain ship via a placement flip, dtype flips from int
 payloads under float constants, untraceable branchy fns, NumPy payloads) —
 and replays each across ``interpret`` / ``serial`` / ``threads`` /
-``fused``, asserting the conformance contract:
+``fused`` / ``procs`` (the last with *real* worker processes and
+shared-memory stores — the one backend whose parallelism is physical),
+asserting the conformance contract:
 
 * **value parity** — every fetched payload identical (values *and* dtypes;
   a version GC'd in one backend must be GC'd in all);
@@ -43,101 +45,16 @@ from repro import core as bind
 N_WORKFLOWS = 50        # fixed-seed sweep size
 SHAPE = (4, 4)
 
-PLAN_BACKENDS = ("serial", "threads", "fused")
+PLAN_BACKENDS = ("serial", "threads", "fused", "procs")
 
 
 # ---------------------------------------------------------------------------
-# Op pool — module-level fns so identity (exec-cache signatures, fusion
-# fallback pins) is stable across replays
+# Op pool — in its own import-light module so procs workers can re-import
+# the fns' defining module outside a pytest session (pickle-by-reference)
 # ---------------------------------------------------------------------------
 
-def _scale(a, s):
-    return a * s
-
-
-_scale.__bind_intents__ = (bind.InOut, bind.In)
-
-
-def _shift(a, s):
-    return a + s
-
-
-_shift.__bind_intents__ = (bind.InOut, bind.In)
-
-
-def _branchy(a, s):
-    # data-dependent host branch: never vmap/scan-traceable — exercises the
-    # fused backend's per-op fallback without changing semantics
-    if float(np.asarray(a).sum()) >= 0:
-        return a * s
-    return a + s
-
-
-_branchy.__bind_intents__ = (bind.InOut, bind.In)
-
-
-def _add(a, b):
-    return a + b
-
-
-_add.__bind_intents__ = (bind.InOut, bind.In)
-
-
-def _mix(a, b):
-    return a * 0.5 + b
-
-
-_mix.__bind_intents__ = (bind.InOut, bind.In)
-
-
-def _mm(a, b):
-    return a @ b
-
-
-_mm.__bind_intents__ = (bind.InOut, bind.In)
-
-
-def _combine(a, b):
-    return a + b
-
-
-# binary-op chain pool: carry (the InOut arg) in position 0 or 1; _bsel's
-# host branch defeats scan tracing mid-chain (fallback must stay seamless)
-def _addr(x, y):
-    return x + y
-
-
-_addr.__bind_intents__ = (bind.In, bind.InOut)
-
-
-def _mixr(x, y):
-    return x * 0.5 + y
-
-
-_mixr.__bind_intents__ = (bind.In, bind.InOut)
-
-
-def _bsel(a, b):
-    if float(np.asarray(a).sum()) >= 0:
-        return a + b
-    return a * 0.5 + b
-
-
-_bsel.__bind_intents__ = (bind.InOut, bind.In)
-
-
-def _axpy(y, x, s):
-    return y + x * s
-
-
-_axpy.__bind_intents__ = (bind.InOut, bind.In, bind.In)
-
-
-UNARY = (_scale, _shift, _branchy)
-BINARY = (_add, _mix, _mm)
-BIN_CARRY0 = (_add, _mix, _bsel)
-BIN_CARRY1 = (_addr, _mixr)
-CONSTS = (2, 2.0, 0.5, -1.5, True)
+from _conformance_ops import (BIN_CARRY0, BIN_CARRY1, BINARY, CONSTS, UNARY,
+                              _axpy, _combine)
 
 
 # ---------------------------------------------------------------------------
@@ -384,6 +301,7 @@ def check_conformance(seed: int) -> None:
 # ---------------------------------------------------------------------------
 
 FAULT_CONFIGS = (("plan", "serial"), ("plan", "threads"), ("plan", "fused"),
+                 ("plan", "procs"),     # kill_rank => a real worker SIGKILL
                  ("interpret", "serial"))
 
 

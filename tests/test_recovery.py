@@ -177,7 +177,7 @@ def test_delay_policy_is_not_a_failure():
 # elastic degradation: permanent death and explicit decommission
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", ["serial", "threads", "fused"])
+@pytest.mark.parametrize("backend", ["serial", "threads", "fused", "procs"])
 def test_permanent_kill_rebinds_to_survivors(backend):
     n = 4
     build = lambda wf, arrs: _chains(wf, arrs, 8, mix_at=(2, 5))
