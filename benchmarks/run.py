@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.run                     # all
     PYTHONPATH=src python -m benchmarks.run strassen            # one
-    PYTHONPATH=src python -m benchmarks.run --quick dag_overhead  # CI smoke
+    PYTHONPATH=src python -m benchmarks.run --quick dag_overhead serving
+                                 # several (one combined results file)
 
 ``--quick`` shrinks problem sizes / repetitions for CI smoke runs; numbers
 from quick mode are sanity signals, not trajectory data.
@@ -24,20 +25,22 @@ import sys
 def main() -> None:
     from benchmarks import (
         bench_strassen, bench_distgemm, bench_sort, bench_dag_overhead,
-        bench_roofline)
+        bench_roofline, bench_serving)
 
     args = [a for a in sys.argv[1:] if a != "--quick"]
     quick = "--quick" in sys.argv[1:]
-    which = args[0] if args else "all"
     suites = {
         "strassen": lambda: bench_strassen.run(),
         "distgemm": lambda: bench_distgemm.run(),
         "sort": lambda: bench_sort.run(n_items=100_000 if quick else 1_000_000),
         "dag_overhead": lambda: bench_dag_overhead.run(quick=quick),
+        "serving": lambda: bench_serving.run(quick=quick),
         "roofline": lambda: bench_roofline.run(mesh=None),
     }
-    if which != "all":
-        suites = {which: suites[which]}
+    if args and "all" not in args:
+        # several names combine into one run (and one results file) —
+        # single-suite invocations would overwrite each other's rows
+        suites = {name: suites[name] for name in args}
 
     all_rows = []
     for name, fn in suites.items():
@@ -65,7 +68,7 @@ def main() -> None:
                                       "chain_fused", "binop_chain_fused",
                                       "stitched_chain_fused",
                                       "versioning_memory",
-                                      "fault_recovery")]
+                                      "fault_recovery", "serving")]
     if quick and dag_rows:
         # quick numbers are smoke signals, never trajectory data — keep the
         # committed BENCH_dag_overhead.json untouched

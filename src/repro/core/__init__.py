@@ -43,6 +43,7 @@ from .program import (
     ProgramPlan,
     Segment,
     clear_program_cache,
+    probe_plan,
     resolve_plan,
 )
 from .executable_cache import EXEC_CACHE, ExecutableCache
@@ -73,7 +74,7 @@ __all__ = [
     "ChainSlice", "ExecutionPlan", "PLAN_CACHE_STATS", "build_plan",
     "clear_plan_cache", "plan_for", "segment_signature", "wavefront_flops",
     "PROGRAM_CACHE_STATS", "ProgramPlan", "Segment", "clear_program_cache",
-    "resolve_plan",
+    "probe_plan", "resolve_plan",
     "EXEC_CACHE", "ExecutableCache",
     "BACKENDS", "Backend", "SerialPlanBackend", "ThreadPoolBackend",
     "FusedBatchBackend", "ProcessPoolBackend", "get_backend",

@@ -166,6 +166,15 @@ class Backend:
     def execute(self, ex, wf, plan) -> None:
         raise NotImplementedError
 
+    def reset(self, ex) -> None:
+        """Drop any backend-owned state tied to ``ex``'s current payloads.
+
+        Called when the executor forgets its stores (a new ``Workflow``
+        restarts the version-id streams, so every held key is stale).
+        Simulated backends keep no payload state of their own — the
+        process-pool backend overrides this to clear worker arenas.
+        """
+
     def __repr__(self) -> str:
         return f"<{type(self).__name__} name={self.name!r}>"
 
@@ -312,7 +321,7 @@ def spill_dead_buckets(ex) -> int:
 def apply_ships(ex, p) -> None:
     """Replay ``p``'s precomputed ship schedule (plan order, main thread)."""
     stores, where = ex._stores, ex._where
-    events = ex.stats.transfers
+    events = ex._stats.transfers
     base_round = ex._round_counter
     wavefront = ex._wavefront_base + p.level - 1
     for vkey, root, transfers in p.ships:
@@ -363,7 +372,7 @@ def commit(ex, p, node, result, nbytes=None) -> None:
     costly) jax ``.nbytes`` property is paid once per bucket, not per op.
     """
     stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
-    stats = ex.stats
+    stats = ex._stats
     if p.simple_write and not isinstance(result, tuple):
         # dominant case: one payload, one executing rank
         wk = p.write_keys[0]

@@ -293,7 +293,7 @@ class FusedBatchBackend(Backend):
         # win on dispatch-bound workloads.
         stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
         lazy_buckets = ex._lazy_buckets
-        stats = ex.stats
+        stats = ex._stats
         live_b, live_c = ex._live_bytes, ex._live_entries
         peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
         for off, (p, node, args) in enumerate(staged):
@@ -624,7 +624,7 @@ class FusedBatchBackend(Backend):
         row_of = {idx: j for j, idx in enumerate(last)}
         interior = chain.interior_keys
         stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
-        stats = ex.stats
+        stats = ex._stats
         live_b, live_c = ex._live_bytes, ex._live_entries
         peak_b, peak_c = stats.peak_live_bytes, stats.peak_live_payloads
         first_ord = chain.first_level

@@ -450,6 +450,29 @@ class ProcessPoolBackend(Backend):
         inj.fired.append(pol)
         return {pol["rank"]: (li, pol.get("permanent", False))}
 
+    # -- store reset ---------------------------------------------------------
+    def reset(self, ex) -> None:
+        """Clear worker arenas/plans when ``ex`` forgets its stores.
+
+        A new ``Workflow`` restarts the version-id streams, so every key a
+        worker still holds (payload segments, cached plan slices keyed on
+        those versions) is stale and would collide with the fresh
+        workflow's keys.  Only acts when this executor owns the pool — a
+        different owner's arenas are its problem (``pool.bind`` resets on
+        the change of hands).
+        """
+        pool = _POOLS.get(ex.n_nodes)
+        if pool is None or pool.owner_ex() is not ex:
+            return
+        for r in range(pool.n_ranks):
+            p = pool.procs[r]
+            if p is not None and p.is_alive():
+                try:
+                    pool.conns[r].send(("reset",))
+                except OSError:
+                    pass
+        pool.shipped.clear()
+
     # -- execution -----------------------------------------------------------
     def execute(self, ex, wf, plan) -> None:
         if not plan.schedule:
@@ -480,7 +503,7 @@ class ProcessPoolBackend(Backend):
             _materialize_stores(ex)
             return self._serial.execute(ex, wf, plan)
         msgs, uid = sent
-        ex.stats.control_messages += msgs
+        ex._stats.control_messages += msgs
         self._await_and_replay(ex, wf, plan, pool, alive, uid, kills)
 
     def _ship_or_delta(self, ex, wf, plan, pool, alive, kills):
@@ -681,7 +704,7 @@ class ProcessPoolBackend(Backend):
         """
         schedule = plan.schedule if upto is None else plan.schedule[:upto]
         stores, where, key_bytes = ex._stores, ex._where, ex._key_bytes
-        stats = ex.stats
+        stats = ex._stats
         events = stats.transfers
         base_round = ex._round_counter
         wf_base = ex._wavefront_base

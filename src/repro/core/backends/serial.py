@@ -39,7 +39,7 @@ class SerialPlanBackend(Backend):
         stores = ex._stores
         where = ex._where
         key_bytes = ex._key_bytes
-        stats = ex.stats
+        stats = ex._stats
         events = stats.transfers
         lookup = ex._exec_cache.lookup
         base_round = ex._round_counter

@@ -697,6 +697,21 @@ def _plan_cache_get(key: tuple):
     return plan
 
 
+def _plan_cache_probe(key: tuple):
+    """Like :func:`_plan_cache_get` but *silent on miss*.
+
+    Speculative lookups (the prefix-flush probe tries several candidate
+    ranges per flush) must not inflate the miss counter — a miss here is
+    not a plan build, just one rejected candidate.
+    """
+    with _PLAN_CACHE_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            _PLAN_CACHE.move_to_end(key)
+            PLAN_CACHE_STATS["hits"] += 1
+    return plan
+
+
 def _plan_cache_put(key: tuple, plan: ExecutionPlan) -> None:
     with _PLAN_CACHE_LOCK:
         _PLAN_CACHE[key] = plan

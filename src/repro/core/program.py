@@ -42,11 +42,11 @@ import threading
 from collections import OrderedDict
 from typing import Iterable
 
-from .plan import (ExecutionPlan, PlanOp, _plan_cache_get, _plan_cache_put,
-                   absolute_plan_key, build_plan)
+from .plan import (ExecutionPlan, PlanOp, _plan_cache_get, _plan_cache_probe,
+                   _plan_cache_put, absolute_plan_key, build_plan)
 
 __all__ = ["Segment", "ProgramPlan", "PROGRAM_CACHE_STATS",
-           "clear_program_cache", "resolve_plan"]
+           "clear_program_cache", "probe_plan", "resolve_plan"]
 
 
 class Segment:
@@ -180,6 +180,46 @@ def clear_program_cache() -> None:
         _PROGRAM_CACHE.clear()
         _SKELETON_INDEX.clear()
         PROGRAM_CACHE_STATS["hits"] = PROGRAM_CACHE_STATS["misses"] = 0
+
+
+def probe_plan(wf, start: int, end: int, n_nodes: int, collective_mode: str,
+               holders: dict, pinned: Iterable, rank_map: dict = None):
+    """Cache-only lookup of the stitched plan for ``[start, end)``.
+
+    Same lookup order as :func:`resolve_plan` (exact-identity plan cache,
+    then the relocatable program-trace cache) but it **never builds**: a
+    total miss returns ``None`` and counts nothing — probes are
+    speculative (the prefix flush tries several candidate ranges), so only
+    hits may touch the cache counters.  A relocatable hit binds the
+    template and promotes it into the exact cache, exactly as
+    :func:`resolve_plan` would.
+
+    The prefix-keyed property this enables: :func:`_normalize` assigns
+    norm ids in first-appearance order, so the normalized signature of a
+    program *prefix* equals the prefix of the full program's signature —
+    a streaming client that previously ran ``[0, k)`` as its own flush
+    hits here when ``[0, k)`` reappears as the front of a longer pending
+    program, paying planning cost once.
+    """
+    pinned = set(pinned)
+    akey = absolute_plan_key(wf, start, end, n_nodes, collective_mode,
+                             holders, pinned, rank_map)
+    plan = _plan_cache_probe(akey)
+    if plan is not None:
+        return plan
+    ops_sig, ext, pin, keys = _normalize(wf, start, end, holders, pinned)
+    rmap_sig = tuple(sorted(rank_map.items())) if rank_map else ()
+    pkey = (n_nodes, collective_mode, ops_sig, ext, pin, rmap_sig)
+    with _PROGRAM_CACHE_LOCK:
+        tmpl = _PROGRAM_CACHE.get(pkey)
+        if tmpl is not None:
+            _PROGRAM_CACHE.move_to_end(pkey)
+            PROGRAM_CACHE_STATS["hits"] += 1
+    if tmpl is None:
+        return None
+    plan = _bind(tmpl, keys, start, end)
+    _plan_cache_put(akey, plan)
+    return plan
 
 
 def resolve_plan(wf, start: int, end: int, n_nodes: int, collective_mode: str,

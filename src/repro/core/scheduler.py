@@ -55,7 +55,9 @@ backend-vs-backend ablations are compared.
 
 from __future__ import annotations
 
+import threading
 import time
+import weakref
 from itertools import islice
 from typing import Any, Optional, Union
 
@@ -66,7 +68,7 @@ from .executable_cache import EXEC_CACHE, ExecutableCache
 from .placement import placement_ranks
 from .plan import (PLAN_CACHE_STATS, map_ranks, wavefront_flops,
                    wavefront_levels)
-from .program import PROGRAM_CACHE_STATS, Segment, resolve_plan
+from .program import (PROGRAM_CACHE_STATS, Segment, probe_plan, resolve_plan)
 from .shm_store import ShmRef
 from .recovery import (apply_failure, build_subset_plan, choose_replacement,
                        plan_recovery, wipe_rank)
@@ -100,6 +102,39 @@ class LocalExecutor:
     materialization boundary (``value``/``fetch``, a ``stats`` read, or
     :meth:`flush`); ``stitch=False`` executes every segment eagerly at
     ``run()``, the pre-program behaviour.
+
+    ``prefix_cache`` (default False) lets a flush execute a cached *prefix*
+    of the pending program (at recorded segment boundaries) instead of
+    always compiling the union range: a streaming client whose program
+    grows by structurally-identical steps pays planning cost once, even
+    when several of its steps are pending in one flush.  Off by default
+    because a split program reports its wavefront decomposition per
+    sub-plan (values, transfers and GC are identical; the
+    cross-backend conformance contract compares ``stats.wavefronts``
+    shapes, which assume whole-range stitching).  The serving runtime
+    (:mod:`repro.serve`) turns it on.
+
+    **Thread safety** — ``run()``, ``flush()``, ``value()``, the ``stats``
+    property and ``decommission_rank()`` are serialised on an internal
+    re-entrant lock and safe to call from concurrent client threads.
+    *Recording* (``Workflow.call``/``apply``/``array``) is not the
+    executor's surface and is NOT thread-safe: keep each workflow's
+    recording on one thread (the serving runtime's single-writer
+    discipline), or externally serialise recorders against surfaces that
+    flush.
+
+    **Failure contract** — if a flush fails mid-program (an op-body
+    exception, or a :class:`RankFailure` recovery could not mask), the
+    original exception re-raises and the executor stays *usable*: the
+    failed program's recorded segments are discarded (its writes dropped —
+    fetching a version it produced raises ``KeyError``), accounting is
+    rolled back to the pre-flush snapshot (peaks and recovery counters
+    keep their physically-true values), and payloads that existed before
+    the flush — every head pinned at the program's last sync — remain
+    fetchable.  Both continuing to record on the same workflow and
+    switching to a fresh ``Workflow`` afterwards work; switching
+    workflows resets the payload stores (a new workflow restarts the
+    version-id streams, so stale keys would collide).
     """
 
     def __init__(self, n_nodes: int = 1, collective_mode: str = "tree",
@@ -107,6 +142,7 @@ class LocalExecutor:
                  executable_cache: Optional[ExecutableCache] = None,
                  backend: Union[str, Any, None] = None,
                  stitch: bool = True,
+                 prefix_cache: bool = False,
                  fault_injector: Optional[Any] = None,
                  topology: Optional[Any] = None):
         assert collective_mode in ("tree", "naive")
@@ -115,6 +151,7 @@ class LocalExecutor:
         self.collective_mode = collective_mode
         self.mode = mode
         self.stitch = bool(stitch)
+        self.prefix_cache = bool(prefix_cache)
         self.backend = get_backend(backend if backend is not None else "serial")
         # fault tolerance (ROADMAP item 4): a FaultInjector consulted at
         # wavefront boundaries; a topology cost model pricing elastic
@@ -146,6 +183,15 @@ class LocalExecutor:
         # pending program trace: deferred run() segments awaiting a flush
         self._pending: list[Segment] = []
         self._wf: Optional[Workflow] = None
+        # the workflow whose version keys currently populate the stores
+        # (weakly held: _wf is dropped at flush so finished workflows can
+        # be reclaimed, but a *switch* to a different workflow must reset
+        # the stores — Workflow() restarts the version-id streams)
+        self._wf_token: Optional[weakref.ref] = None
+        # serialises the public surfaces (run/flush/value/stats/
+        # decommission_rank) against each other; re-entrant because a
+        # stats read or value() flushes internally
+        self._lock = threading.RLock()
         # global wavefront ordinal of the executing plan's first level —
         # backends stamp it onto TransferEvents for the makespan model
         self._wavefront_base = 0
@@ -154,15 +200,36 @@ class LocalExecutor:
     @property
     def stats(self) -> ExecutionStats:
         """Execution accounting; reading it materialises any pending program."""
-        if self._pending:
-            self._flush()
-        return self._stats
+        with self._lock:
+            if self._pending:
+                self._flush()
+            return self._stats
 
-    def flush(self) -> ExecutionStats:
-        """Execute the pending program trace (no-op when nothing pends)."""
-        if self._pending:
-            self._flush()
-        return self._stats
+    def flush(self, *, prefix_cache: Optional[bool] = None
+              ) -> ExecutionStats:
+        """Execute the pending program trace (no-op when nothing pends).
+
+        ``prefix_cache`` overrides the constructor setting for this flush
+        only (the serving runtime's planning policy: replay cached
+        per-segment plans when the pending program is one client's step
+        stream, plan the whole stitched program when segments from many
+        clients could fuse into shared batches).
+
+        On a mid-program failure the original exception re-raises with the
+        executor in the documented usable state (see the class docstring's
+        failure contract).
+        """
+        with self._lock:
+            if self._pending:
+                if prefix_cache is None:
+                    self._flush()
+                else:
+                    prev, self.prefix_cache = self.prefix_cache, prefix_cache
+                    try:
+                        self._flush()
+                    finally:
+                        self.prefix_cache = prev
+            return self._stats
 
     # -- payload access ------------------------------------------------------
     def value(self, version) -> Any:
@@ -172,28 +239,36 @@ class LocalExecutor:
         first.  Lazy fused-batch rows
         (:class:`~repro.core.backends.fused.BatchSlice`) materialise here —
         and the concrete row is written back so repeated fetches slice once.
+        Shared-memory payloads (procs backend) come back as *zero-copy
+        read-only views* of the worker's segment, also written back;
+        ``stats.fetch_bytes_copied`` accounts the bytes any fetch actually
+        copied (0 for the NumPy shm path — the no-copy assertion hook).
         """
-        if self._pending:
-            self._flush()
-        ranks = self._where.get(version.key)
-        if not ranks:
-            raise KeyError(f"no payload for {version!r}")
-        payload = self._stores[next(iter(ranks))][version.key]
-        if type(payload) is BatchSlice:
-            concrete = payload.materialize()
-            payload.release()
-            for r in ranks:
-                self._stores[r][version.key] = concrete
-            payload = concrete
-        elif type(payload) is ShmRef:
-            # procs backend: the payload lives in a worker's shared-memory
-            # arena; attach, rehydrate, and write back so repeated fetches
-            # pay the copy once
-            concrete = payload.materialize()
-            for r in ranks:
-                self._stores[r][version.key] = concrete
-            payload = concrete
-        return payload
+        with self._lock:
+            if self._pending:
+                self._flush()
+            ranks = self._where.get(version.key)
+            if not ranks:
+                raise KeyError(f"no payload for {version!r}")
+            payload = self._stores[next(iter(ranks))][version.key]
+            if type(payload) is BatchSlice:
+                concrete = payload.materialize()
+                payload.release()
+                self._stats.fetch_bytes_copied += _nbytes(concrete)
+                for r in ranks:
+                    self._stores[r][version.key] = concrete
+                payload = concrete
+            elif type(payload) is ShmRef:
+                # procs backend: the payload lives in a worker's
+                # shared-memory arena; attach a read-only view (NumPy:
+                # zero-copy; JAX: one host->device copy) and write it back
+                # so repeated fetches attach once
+                concrete, copied = payload.view()
+                self._stats.fetch_bytes_copied += copied
+                for r in ranks:
+                    self._stores[r][version.key] = concrete
+                payload = concrete
+            return payload
 
     def _holders(self, vkey) -> list[int]:
         return sorted(self._where.get(vkey, ()))
@@ -281,31 +356,61 @@ class LocalExecutor:
 
         Under stitching the returned stats object is live: it reflects the
         segment once a materialization boundary flushes the program.
+
+        Switching to a *different* ``Workflow`` object flushes anything the
+        previous one left pending, then **resets the payload stores**:
+        ``Workflow()`` restarts the version-id streams, so the old
+        workflow's keys would collide with (and shadow) the new one's.
+        Fetch a finished workflow's results before running the next one.
         """
-        if self._wf is not None and self._wf is not wf and self._pending:
-            self._flush()
-        self._wf = wf
-        end = len(wf.ops)
-        if start >= end:
-            # nothing newly recorded: keep initial-array placement current
-            # (a fetch of a fresh array must see its payload) without
-            # opening an empty segment
-            if self._pending:
-                seg = self._pending[-1]
-                seg.init_upto = len(wf.initial)
-                seg.pinned = self._pinned(wf)
-            else:
-                self._place_initial(wf, len(wf.initial))
+        with self._lock:
+            if self._wf is not None and self._wf is not wf and self._pending:
+                self._flush()
+            token = self._wf_token
+            if token is not None and token() is not wf:
+                self._reset_stores()
+            self._wf_token = weakref.ref(wf)
+            self._wf = wf
+            end = len(wf.ops)
+            if start >= end:
+                # nothing newly recorded: keep initial-array placement
+                # current (a fetch of a fresh array must see its payload)
+                # without opening an empty segment
+                if self._pending:
+                    seg = self._pending[-1]
+                    seg.init_upto = len(wf.initial)
+                    seg.pinned = self._pinned(wf)
+                else:
+                    self._place_initial(wf, len(wf.initial))
+                return self._stats
+            if self._pending and self._pending[-1].end != start:
+                # overlapping or rewound range: the pending trace is not a
+                # contiguous program — materialise it first
+                self._flush()
+            self._pending.append(
+                Segment(start, end, self._pinned(wf), len(wf.initial)))
+            if not self.stitch:
+                return self._flush()
             return self._stats
-        if self._pending and self._pending[-1].end != start:
-            # overlapping or rewound range: the pending trace is not a
-            # contiguous program — materialise it first
-            self._flush()
-        self._pending.append(
-            Segment(start, end, self._pinned(wf), len(wf.initial)))
-        if not self.stitch:
-            return self._flush()
-        return self._stats
+
+    def _reset_stores(self) -> None:
+        """Forget every payload: the stores' keys belong to a previous
+        workflow whose version-id streams a fresh ``Workflow()`` restarts.
+
+        Machine state survives (decommissioned ranks, the elastic rank
+        map, stats, caches, the round counter); only payload residency and
+        its live accounting reset.  The backend drops its own payload
+        state too (process-pool worker arenas hold the same stale keys).
+        """
+        self.backend.reset(self)
+        for store in self._stores.values():
+            store.clear()
+        self._where.clear()
+        self._key_bytes.clear()
+        self._live_bytes = 0
+        self._live_entries = 0
+        self._init_seen = 0
+        self._lazy_buckets.clear()
 
     # -- program flush ---------------------------------------------------------
     def _pinned(self, wf: Workflow) -> set:
@@ -351,26 +456,135 @@ class LocalExecutor:
         ph, pm = PLAN_CACHE_STATS["hits"], PLAN_CACHE_STATS["misses"]
         gh, gm = PROGRAM_CACHE_STATS["hits"], PROGRAM_CACHE_STATS["misses"]
         eh, em = self._exec_cache.hits, self._exec_cache.misses
-        if self.mode == "interpret":
-            self._run_interpret(wf, start, end, last.pinned)
-        else:
-            self._run_planned(wf, start, end, last.pinned)
         st = self._stats
-        st.plan_cache_hits += PLAN_CACHE_STATS["hits"] - ph
-        st.plan_cache_misses += PLAN_CACHE_STATS["misses"] - pm
-        st.program_cache_hits += PROGRAM_CACHE_STATS["hits"] - gh
-        st.program_cache_misses += PROGRAM_CACHE_STATS["misses"] - gm
-        st.exec_cache_hits += self._exec_cache.hits - eh
-        st.exec_cache_misses += self._exec_cache.misses - em
+        # pre-flush snapshot for the failure contract: if execution dies
+        # mid-program, _abort_flush rolls accounting back to here and
+        # discards the failed range's writes, leaving the executor usable
+        snap = (st.ops_executed, st.copies_elided, len(st.transfers),
+                len(st.wavefronts), len(st.wavefront_flops),
+                self._round_counter)
+        try:
+            if self.mode == "interpret":
+                self._run_interpret(wf, start, end, last.pinned)
+            else:
+                self._run_program(wf, pending, start, end)
+        except BaseException:
+            self._abort_flush(wf, start, end, snap)
+            raise
+        finally:
+            st.plan_cache_hits += PLAN_CACHE_STATS["hits"] - ph
+            st.plan_cache_misses += PLAN_CACHE_STATS["misses"] - pm
+            st.program_cache_hits += PROGRAM_CACHE_STATS["hits"] - gh
+            st.program_cache_misses += PROGRAM_CACHE_STATS["misses"] - gm
+            st.exec_cache_hits += self._exec_cache.hits - eh
+            st.exec_cache_misses += self._exec_cache.misses - em
         return st
+
+    def _abort_flush(self, wf: Workflow, start: int, end: int,
+                     snap: tuple) -> None:
+        """Restore a usable executor after a failed program execution.
+
+        The failed range's segments were already popped from ``_pending``
+        (they are *discarded* — the contract, not a leak: re-running them
+        against half-mutated stores could double-apply effects).  This
+        rolls the accounting back to the pre-flush snapshot and drops
+        every version the failed range wrote, so the stores hold exactly
+        the pre-flush payloads: pinned heads from before the program stay
+        fetchable, while fetching anything the failed program produced
+        raises ``KeyError`` instead of returning a phantom.
+
+        Peaks and recovery counters are deliberately *not* rolled back —
+        they record physically-true high-water marks and recovery work
+        that really ran.  Live-footprint counters are recomputed from the
+        stores: the serial/fused hot loops mirror them into locals and
+        write back only on success, so their incremental values are
+        unreliable mid-flight (store/index/byte maps are mutated inline
+        and stay mutually consistent).
+        """
+        st = self._stats
+        ops, copies, n_tr, n_wf, n_wff, rnd = snap
+        st.ops_executed = ops
+        st.copies_elided = copies
+        del st.transfers[n_tr:]
+        del st.wavefronts[n_wf:]
+        del st.wavefront_flops[n_wff:]
+        # events past the snapshot are gone, so their round ids are free
+        # to be re-issued — later plans never collide
+        self._round_counter = rnd
+        for node in wf.ops[start:end]:
+            for v in node.writes:
+                vkey = v.key
+                ranks = self._where.pop(vkey, None)
+                if ranks is None:
+                    continue
+                for r in ranks:
+                    dead = self._stores[r].pop(vkey, None)
+                    if type(dead) is BatchSlice:
+                        dead.release()
+                self._key_bytes.pop(vkey, None)
+        spill_dead_buckets(self)
+        self._live_entries = sum(len(s) for s in self._stores.values())
+        self._live_bytes = sum(self._key_bytes.get(k, 0)
+                               for k in self._where)
+
+    def _run_program(self, wf: Workflow, pending: list, start: int,
+                     end: int) -> None:
+        """Execute the pending program, optionally as cached prefixes.
+
+        Default (``prefix_cache=False``, or a single pending segment):
+        resolve-and-run the union range — the stitched-whole behaviour.
+
+        With ``prefix_cache`` on and several segments pending, recorded
+        segment boundaries become candidate split points: the largest
+        candidate range starting at the current position whose plan is
+        *already cached* (exact or relocatable — :func:`probe_plan`, which
+        never builds) executes first, and only a totally-cold remainder
+        pays a plan build.  A streaming client whose per-step programs
+        were planned individually therefore replays N pending steps as N
+        cached plans instead of building an N-step super-plan it will
+        never see again.  Normalization assigns ids in first-appearance
+        order, so a prefix's relocatable signature is exactly the front
+        of the full program's — prefix probes are cheap and sound.
+
+        GC safety at a split boundary ``b``: a version produced before
+        ``b`` and read at or after ``b`` is necessarily still its ref's
+        head at ``b`` (recording always reads then-current heads), hence
+        in segment ``b``'s pinned snapshot — a prefix plan can never drop
+        a payload a later sub-range needs.
+        """
+        if not self.prefix_cache or len(pending) == 1:
+            self._run_planned(wf, start, end, pending[-1].pinned)
+            return
+        pin_of = {seg.end: seg.pinned for seg in pending}
+        bounds = [seg.end for seg in pending]       # strictly increasing
+        pos = start
+        while pos < end:
+            plan = None
+            nxt = end
+            for b in reversed(bounds):              # largest range first
+                if b <= pos:
+                    break
+                p = probe_plan(wf, pos, b, self.n_nodes,
+                               self.collective_mode, self._where,
+                               pin_of[b], rank_map=self._rank_map)
+                if p is not None:
+                    plan, nxt = p, b
+                    break
+            if plan is not None:
+                self._run_planned(wf, pos, nxt, pin_of[nxt], preplan=plan)
+            else:
+                # cold everywhere: build (and cache) the whole remainder
+                nxt = end
+                self._run_planned(wf, pos, end, pin_of[end])
+            pos = nxt
 
     # -- planned replay (default) ---------------------------------------------
     def _run_planned(self, wf: Workflow, start: int, end: int,
-                     pinned: set) -> ExecutionStats:
+                     pinned: set, preplan=None) -> ExecutionStats:
         stats = self._stats
-        current = resolve_plan(wf, start, end, self.n_nodes,
-                               self.collective_mode, self._where, pinned,
-                               rank_map=self._rank_map)
+        current = preplan if preplan is not None else resolve_plan(
+            wf, start, end, self.n_nodes, self.collective_mode, self._where,
+            pinned, rank_map=self._rank_map)
         while current is not None:
             base_round = self._round_counter
             self._wavefront_base = len(stats.wavefronts)
@@ -515,31 +729,32 @@ class LocalExecutor:
         """
         assert self.n_nodes > 1, "cannot decommission the only rank"
         assert rank not in self._decommissioned, f"rank {rank} already dead"
-        if self._pending:
-            self._flush()
-        stats = self._stats
-        t0 = time.perf_counter()
-        replacement = self._note_death(rank, replacement)
-        lost = wipe_rank(self, rank)
-        if lost:
-            # still-demanded versions: every ref head (fetchable / readable
-            # by ops recorded later), plus reads of ops recorded but not yet
-            # synced — those snapshot then-current heads that later records
-            # may since have superseded
-            recorded_upto = getattr(wf, "_synced_upto", len(wf.ops))
-            needed = set(self._pinned(wf))
-            for node in wf.ops[recorded_upto:]:
-                for v in node.reads:
-                    needed.add(v.key)
-            rec_plan, restored, _replaced = plan_recovery(
-                self, wf, needed, rank_map=self._rank_map,
-                future=frozenset(range(recorded_upto, len(wf.ops))))
-            stats.recoveries += 1
-            stats.restored_versions += restored
-            if rec_plan is not None:
-                self._execute_recovery_plan(wf, rec_plan)
-            stats.recovery_time_s += time.perf_counter() - t0
-        return replacement
+        with self._lock:
+            if self._pending:
+                self._flush()
+            stats = self._stats
+            t0 = time.perf_counter()
+            replacement = self._note_death(rank, replacement)
+            lost = wipe_rank(self, rank)
+            if lost:
+                # still-demanded versions: every ref head (fetchable /
+                # readable by ops recorded later), plus reads of ops
+                # recorded but not yet synced — those snapshot then-current
+                # heads that later records may since have superseded
+                recorded_upto = getattr(wf, "_synced_upto", len(wf.ops))
+                needed = set(self._pinned(wf))
+                for node in wf.ops[recorded_upto:]:
+                    for v in node.reads:
+                        needed.add(v.key)
+                rec_plan, restored, _replaced = plan_recovery(
+                    self, wf, needed, rank_map=self._rank_map,
+                    future=frozenset(range(recorded_upto, len(wf.ops))))
+                stats.recoveries += 1
+                stats.restored_versions += restored
+                if rec_plan is not None:
+                    self._execute_recovery_plan(wf, rec_plan)
+                stats.recovery_time_s += time.perf_counter() - t0
+            return replacement
 
     # -- reference interpreter (trace order, per-op) --------------------------
     def _reader_ranks(self, ops, i: int = 0) -> dict:

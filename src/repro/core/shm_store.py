@@ -240,6 +240,39 @@ class ShmRef:
             return jnp.asarray(raw)
         return raw
 
+    def view(self) -> tuple[Any, int]:
+        """``(payload, bytes_copied)`` with NumPy payloads zero-copy.
+
+        NumPy segments come back as a *read-only view* of the shared
+        mapping (``bytes_copied == 0``): the mmap stays alive through the
+        ndarray's buffer reference chain even after the segment handle is
+        defused, so the view outlives this call safely.  JAX payloads must
+        land in device memory (``jnp.asarray`` copies, ``bytes_copied ==
+        nbytes``); pickled objects decode a fresh object (the decode is the
+        copy, but it has no array bytes — reported as 0, matching
+        ``_nbytes``).
+
+        Caveat (documented contract): a view aliases the worker-owned
+        segment.  If a recovery replay re-commits the same version key into
+        a reused segment, a still-held old view observes the new bytes —
+        versions are immutable in fault-free runs, and recovery re-commits
+        byte-identical payloads, so aliasing is benign; callers needing a
+        private buffer copy explicitly (``np.array(view)``).
+        """
+        seg = _attach(segment_name(self.session, self.key, self.rank))
+        try:
+            kind, payload = _view(seg.buf)
+        except BaseException:
+            _close_quiet(seg)
+            raise
+        # Defuse the handle: the fd is not needed once mapped, and the
+        # mapping itself is pinned by the returned array's buffer chain.
+        _close_quiet(seg)
+        if kind == KIND_JAX:
+            import jax.numpy as jnp
+            return jnp.asarray(payload), self._nb
+        return payload, 0
+
     def __repr__(self) -> str:
         return f"ShmRef({self.key}, rank {self.rank}, {self._nb}B)"
 

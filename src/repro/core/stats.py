@@ -82,6 +82,12 @@ class ExecutionStats:
     recomputed_ops: int = 0
     restored_versions: int = 0
     recovery_time_s: float = 0.0
+    # Bytes a ``value()``/``fetch`` actually copied out of backend-owned
+    # storage into a fresh buffer (shared-memory rehydration, fused-bucket
+    # row slicing).  Zero-copy reads — rank-local store hits, read-only
+    # ``ShmRef`` views — add nothing, so tests can assert the no-copy fetch
+    # path by byte count instead of guessing from timings.
+    fetch_bytes_copied: int = 0
     # Process-pool backend observability: frontend->worker control messages
     # (plan slices shipped, run/epoch triggers, seed payloads).  A
     # steady-state loop iteration on a worker-resident plan should cost one
@@ -196,3 +202,64 @@ class ExecutionStats:
             f = flops[w] / rate if rate > 0.0 and w < len(flops) else 0.0
             total += c if c >= f else f
         return total + self.critical_path * op_time_s
+
+
+class LatencyStats:
+    """Per-request latency accounting for the serving runtime.
+
+    Records wall-clock samples (seconds) and answers the questions a
+    service dashboard asks: p50/p99 quantiles and the mean.  Percentiles
+    use the nearest-rank method over a sort of the recorded samples —
+    sample counts are request counts (thousands, not billions), so exact
+    quantiles are affordable and reproducible.
+    """
+
+    __slots__ = ("samples",)
+
+    def __init__(self) -> None:
+        self.samples: list[float] = []
+
+    def record(self, seconds: float) -> None:
+        self.samples.append(seconds)
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def mean(self) -> float:
+        return sum(self.samples) / len(self.samples) if self.samples else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank quantile, ``q`` in [0, 100]; 0.0 when empty."""
+        s = self.samples
+        if not s:
+            return 0.0
+        ordered = sorted(s)
+        rank = max(0, min(len(ordered) - 1,
+                          int(round(q / 100.0 * (len(ordered) - 1)))))
+        return ordered[rank]
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+    def summary(self, scale: float = 1e3) -> dict:
+        """Dashboard row (default unit: milliseconds)."""
+        return {
+            "count": len(self.samples),
+            "mean": self.mean * scale,
+            "p50": self.p50 * scale,
+            "p99": self.p99 * scale,
+        }
+
+    def __repr__(self) -> str:
+        return (f"LatencyStats(n={len(self.samples)}, "
+                f"p50={self.p50 * 1e3:.3f}ms, p99={self.p99 * 1e3:.3f}ms)")

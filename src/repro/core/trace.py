@@ -17,6 +17,7 @@ any process, race-free by construction.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import inspect
 import itertools
@@ -221,6 +222,24 @@ class Workflow:
             self.sync()
         _TLS.wf = None
         return False
+
+    @contextlib.contextmanager
+    def recording(self):
+        """Make this workflow the current recording target, *without* the
+        exit-sync of the ``with Workflow()`` form.
+
+        The serving runtime records many client step closures into one
+        long-lived workflow and controls sync/flush boundaries itself —
+        an implicit sync per closure would defeat cross-request batching.
+        Restores the previous recording target on exit (even on a raise:
+        a failing closure must not leave a poisoned thread-local behind).
+        """
+        prev = getattr(_TLS, "wf", None)
+        _TLS.wf = self
+        try:
+            yield self
+        finally:
+            _TLS.wf = prev
 
     # -- placement ----------------------------------------------------------
     def push_placement(self, p: Any) -> None:

@@ -1,0 +1,22 @@
+"""Always-on serving layer over the Bind executor (ROADMAP item 1).
+
+Usage::
+
+    from repro.serve import ServingRuntime
+
+    with ServingRuntime(backend="fused") as rt:
+        s = rt.session()
+        fut = s.submit(lambda sess: decode_step(sess))
+        value = fut.result()
+        print(rt.metrics.summary())
+
+See :mod:`repro.serve.runtime` for the architecture.
+"""
+
+from .metrics import ServeMetrics
+from .runtime import ServingRuntime
+from .session import (RuntimeClosed, ServeError, ServeRequest, Session,
+                      SessionPoisoned)
+
+__all__ = ["ServingRuntime", "ServeMetrics", "Session", "ServeRequest",
+           "ServeError", "RuntimeClosed", "SessionPoisoned"]

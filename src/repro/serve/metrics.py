@@ -1,0 +1,54 @@
+"""Serving-side observability: request counters + latency quantiles.
+
+:class:`ServeMetrics` is the service twin of
+:class:`~repro.core.stats.ExecutionStats` — the executor accounts ops,
+transfers and cache traffic; this accounts *requests*: admissions,
+completions, failures, how often flushes actually coalesced work across
+requests, and end-to-end/queue latency distributions
+(:class:`~repro.core.stats.LatencyStats`).  The batching effectiveness
+counters are what the serving tests and bench assert: a runtime absorbing
+N concurrent one-step clients should show ``coalesced_requests`` close to
+N and ``batched_flushes >= 1``, while the one-at-a-time arm shows 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.stats import LatencyStats
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Counters and latency distributions for one serving runtime."""
+
+    requests_admitted: int = 0
+    requests_completed: int = 0
+    requests_failed: int = 0
+    requests_cancelled: int = 0     # cancelled while still queued
+    requests_rejected: int = 0      # refused at admission (poisoned session)
+    # flush coalescing: every executor flush issued by the serving loop;
+    # "batched" ones carried >= 2 requests' segments in one program
+    flushes: int = 0
+    batched_flushes: int = 0
+    coalesced_requests: int = 0     # requests that shared their flush
+    max_batch: int = 0              # widest batch observed
+    # end-to-end (submit -> result ready) and queue (submit -> admitted)
+    latency: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    queue_latency: LatencyStats = dataclasses.field(
+        default_factory=LatencyStats)
+
+    def summary(self) -> dict:
+        """One dashboard/bench row (latencies in milliseconds)."""
+        return {
+            "requests_admitted": self.requests_admitted,
+            "requests_completed": self.requests_completed,
+            "requests_failed": self.requests_failed,
+            "requests_cancelled": self.requests_cancelled,
+            "flushes": self.flushes,
+            "batched_flushes": self.batched_flushes,
+            "coalesced_requests": self.coalesced_requests,
+            "max_batch": self.max_batch,
+            "latency_ms": self.latency.summary(),
+            "queue_ms": self.queue_latency.summary(),
+        }

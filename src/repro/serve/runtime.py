@@ -1,0 +1,293 @@
+"""Always-on serving runtime: admission queue + continuous cross-request batching.
+
+Turns the run-to-completion :class:`~repro.core.scheduler.LocalExecutor`
+into a service (ROADMAP item 1): clients submit *step closures* from any
+thread and get back futures; a single background serving thread owns the
+executor and one long-lived shared :class:`~repro.core.trace.Workflow`,
+records each admitted step as its own program segment, and flushes a whole
+batch of requests as ONE stitched program.
+
+That one-flush-per-batch shape is where the existing machinery becomes
+*continuous batching* for free:
+
+* steps from different sessions touch disjoint refs, so their ops land in
+  the same wavefront levels of the stitched plan; same-signature
+  level-mates are exactly what ``backend="fused"`` stacks into one
+  ``jit(vmap)`` dispatch (:class:`~repro.core.backends.FusedBatchBackend`)
+  — N clients' decode steps cost one batched dispatch, not N;
+* planning policy per flush: a *single* client's step stream replays its
+  cached per-step plans at recorded segment boundaries
+  (:func:`~repro.core.program.probe_plan` — the streaming client pays
+  planning cost once even as its program grows); a *multi-client* batch
+  plans the whole stitched program instead, because prefix splitting
+  would fence each request's ops into their own sub-plan and forfeit
+  cross-request fusion — those whole-batch plans are themselves
+  relocatable-cached by structure;
+* the executor's flush failure contract + per-session poisoning keep a
+  bad request from taking the service down: the failed batch's sessions
+  are poisoned, everyone else's payloads provably survive.
+
+Threading model (single-writer): *recording is only ever done by the
+serving thread*; client threads touch nothing but the admission queue and
+their futures.  The executor's own lock additionally makes direct
+``runtime.executor`` reads (stats, values) safe from test/monitor threads.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+from ..core.scheduler import LocalExecutor
+from ..core.trace import BindArray, Workflow
+from .metrics import ServeMetrics
+from .session import (RuntimeClosed, ServeRequest, Session, SessionPoisoned)
+
+__all__ = ["ServingRuntime"]
+
+
+class ServingRuntime:
+    """Background-threaded serving frontend over one executor.
+
+    Parameters
+    ----------
+    n_nodes, backend, mode, collective_mode:
+        Forwarded to the owned :class:`LocalExecutor` (``backend="fused"``
+        is the one that turns cross-request coalescing into single
+        batched dispatches; any backend is correct).
+    max_batch:
+        Most requests admitted into one flush.
+    admission_window:
+        After the first queued request is seen, how long (seconds) the
+        serving thread lingers for more before flushing — the knob trading
+        a little p50 for batch width under bursty traffic.  0 flushes
+        whatever is queued immediately.
+    prefix_cache:
+        Forwarded to the executor (default True here — the streaming-client
+        planning amortisation is the point of a serving runtime).
+    executor:
+        Bring-your-own executor (overrides the construction knobs).
+    autostart:
+        ``False`` leaves the serving thread unstarted until
+        :meth:`start` — deterministic batch composition for tests
+        (everything submitted before ``start()`` lands in one batch, up
+        to ``max_batch``).
+    """
+
+    def __init__(self, n_nodes: int = 1, backend: str = "fused",
+                 mode: str = "plan", collective_mode: str = "tree",
+                 max_batch: int = 32, admission_window: float = 0.002,
+                 prefix_cache: bool = True,
+                 executor: Optional[LocalExecutor] = None,
+                 autostart: bool = True):
+        if executor is not None:
+            self._ex = executor
+        else:
+            self._ex = LocalExecutor(n_nodes, collective_mode, mode=mode,
+                                     backend=backend, stitch=True,
+                                     prefix_cache=prefix_cache)
+        self._prefix_cache = (prefix_cache if executor is None
+                              else bool(executor.prefix_cache))
+        self.max_batch = max(1, int(max_batch))
+        self.admission_window = float(admission_window)
+        self._wf = Workflow(n_nodes=self._ex.n_nodes, executor=self._ex)
+        self.metrics = ServeMetrics()
+        self._queue: deque[ServeRequest] = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._sessions = 0
+        self._loop_error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._serve_loop, daemon=True,
+                                        name="bind-serve")
+        self._started = False
+        if autostart:
+            self.start()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "ServingRuntime":
+        if not self._started:
+            self._started = True
+            self._thread.start()
+        return self
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop admitting, drain everything already queued, join the thread."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._started:
+            self._thread.join(timeout)
+
+    def __enter__(self) -> "ServingRuntime":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    @property
+    def executor(self) -> LocalExecutor:
+        """The owned executor (its lock makes stats/value reads safe)."""
+        return self._ex
+
+    # -- client surface ------------------------------------------------------
+    def session(self) -> Session:
+        """Open a new client session."""
+        with self._cv:
+            self._sessions += 1
+            return Session(self, self._sessions)
+
+    def submit(self, session: Session,
+               step: Callable[[Session], Any]):
+        """Enqueue ``step`` to run against ``session``; returns a future.
+
+        ``step(session)`` is *recorded* on the serving thread (it may
+        create arrays via ``session.array`` and call ``@op`` functions);
+        whatever handles it returns come back through the future as
+        concrete payloads once the batch executes.  The future supports
+        standard ``concurrent.futures`` semantics: ``cancel()`` works
+        while the request is still queued (a cancelled request records
+        nothing and never touches the executor), ``result(timeout=...)``
+        raises ``TimeoutError`` without disturbing the in-flight request.
+        """
+        with self._cv:
+            if self._closed:
+                raise RuntimeClosed("serving runtime is closed")
+            if session.poisoned is not None:
+                self.metrics.requests_rejected += 1
+                raise SessionPoisoned(
+                    f"session {session.sid} failed earlier; open a new one"
+                ) from session.poisoned
+            req = ServeRequest(session, step, time.perf_counter())
+            self._queue.append(req)
+            self.metrics.requests_admitted += 1
+            self._cv.notify()
+        return req.future
+
+    # -- serving thread ------------------------------------------------------
+    def _serve_loop(self) -> None:
+        while True:
+            batch = self._next_batch()
+            if batch is None:
+                return
+            try:
+                self._execute_batch(batch)
+            except BaseException as e:     # never kill the serving thread
+                self._loop_error = e
+                for req in batch:
+                    if not req.future.done():
+                        req.session.poisoned = e
+                        req.future.set_exception(e)
+
+    def _next_batch(self) -> Optional[list]:
+        with self._cv:
+            while not self._queue:
+                if self._closed:
+                    return None
+                self._cv.wait(0.05)
+            if (self.admission_window > 0.0 and not self._closed
+                    and len(self._queue) < self.max_batch):
+                # linger briefly: under concurrent submitters the rest of
+                # the burst usually lands within the window, widening the
+                # fused buckets the flush will dispatch
+                deadline = time.monotonic() + self.admission_window
+                while len(self._queue) < self.max_batch and not self._closed:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0.0:
+                        break
+                    self._cv.wait(remaining)
+            n = min(len(self._queue), self.max_batch)
+            return [self._queue.popleft() for _ in range(n)]
+
+    def _execute_batch(self, batch: list) -> None:
+        ex, wf, m = self._ex, self._wf, self.metrics
+        now = time.perf_counter()
+        recorded: list[ServeRequest] = []
+        with wf.recording():
+            for req in batch:
+                if not req.future.set_running_or_notify_cancel():
+                    m.requests_cancelled += 1
+                    continue
+                if req.session.poisoned is not None:
+                    m.requests_rejected += 1
+                    req.future.set_exception(SessionPoisoned(
+                        f"session {req.session.sid} failed earlier"))
+                    continue
+                req.admitted_s = now
+                try:
+                    req.handles = _as_handles(req.step(req.session))
+                except BaseException as e:
+                    # bad request: poison only this session.  Ops it
+                    # recorded before raising stay in the trace (they
+                    # cannot be unrecorded) and execute as dead work once.
+                    req.session.poisoned = e
+                    m.requests_failed += 1
+                    req.future.set_exception(e)
+                    continue
+                # one segment per request: the granularity at which the
+                # prefix cache can replay this step's plan later
+                wf.sync()
+                recorded.append(req)
+        # cover trailing ops of a closure that raised after recording
+        wf.sync()
+        if not recorded:
+            ex.flush()      # still materialise any orphan ops
+            return
+        m.flushes += 1
+        n = len(recorded)
+        if n >= 2:
+            m.batched_flushes += 1
+            m.coalesced_requests += n
+        if n > m.max_batch:
+            m.max_batch = n
+        try:
+            # planning policy: a single client's step stream replays its
+            # cached per-segment plans (pay planning once, however the
+            # steps got grouped); a multi-client batch plans the whole
+            # stitched program instead — prefix splitting would isolate
+            # each request's ops in their own sub-plan and the fused
+            # backend could never stack cross-request level-mates.  The
+            # whole-program plan is itself relocatable-cached by
+            # structure, so repeating batch shapes stop paying builds too.
+            ex.flush(prefix_cache=self._prefix_cache and n == 1)
+        except BaseException as e:
+            # the executor rolled itself back (flush failure contract);
+            # attribution inside the batch is not knowable here, so the
+            # whole batch's sessions are poisoned — narrower attribution
+            # is a recorded follow-up.  Other sessions' payloads survive.
+            for req in recorded:
+                req.session.poisoned = e
+                m.requests_failed += 1
+                req.future.set_exception(e)
+            return
+        done = time.perf_counter()
+        for req in recorded:
+            try:
+                values = tuple(
+                    ex.value(h.ref.head) if isinstance(h, BindArray) else h
+                    for h in req.handles)
+            except BaseException as e:
+                req.session.poisoned = e
+                m.requests_failed += 1
+                req.future.set_exception(e)
+                continue
+            m.latency.record(done - req.submitted_s)
+            m.queue_latency.record(req.admitted_s - req.submitted_s)
+            m.requests_completed += 1
+            if not req.handles:
+                req.future.set_result(None)
+            elif len(req.handles) == 1:
+                req.future.set_result(values[0])
+            else:
+                req.future.set_result(values)
+
+
+def _as_handles(result: Any) -> tuple:
+    """Normalise a step closure's return into a tuple of fetchables."""
+    if result is None:
+        return ()
+    if isinstance(result, (tuple, list)):
+        return tuple(result)
+    return (result,)

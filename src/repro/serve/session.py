@@ -1,0 +1,96 @@
+"""Client-facing serving primitives: sessions, requests, failure types.
+
+A :class:`Session` is one client's stream of requests against a
+:class:`~repro.serve.runtime.ServingRuntime`.  Clients never touch the
+executor or the shared workflow directly — they submit *step closures*
+that the serving thread records (single-writer discipline), so arbitrary
+numbers of client threads can stream steps concurrently without racing on
+the trace.
+
+The blast radius of a failure is deliberately per-session, not
+per-service: a step closure that raises (bad request) or an op body that
+fails mid-flush poisons the session(s) whose ops were in the failed
+program — their later submits raise :class:`SessionPoisoned` — while the
+runtime, the executor, and every other session keep serving (the
+executor's flush failure contract guarantees their payloads survive).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import itertools
+from typing import Any, Callable, Optional
+
+
+class ServeError(RuntimeError):
+    """Base class for serving-layer failures."""
+
+
+class RuntimeClosed(ServeError):
+    """The serving runtime was shut down; no further submits are accepted."""
+
+
+class SessionPoisoned(ServeError):
+    """A previous step of this session failed; its state is untrusted.
+
+    Carries the original failure as ``__cause__``.  Other sessions are
+    unaffected — open a fresh session to continue.
+    """
+
+
+class Session:
+    """One client's stream of steps over runtime-resident state.
+
+    ``state`` is a scratch dict for the client's step closures (the
+    conventional home for its :class:`~repro.core.trace.BindArray`
+    handles — e.g. the KV cache of a decode loop).  Step closures run *on
+    the serving thread* with the shared workflow active, so inside one
+    they may call ``self.array(...)`` and any recorded ``@op``.
+    """
+
+    __slots__ = ("runtime", "sid", "state", "poisoned")
+
+    def __init__(self, runtime, sid: int):
+        self.runtime = runtime
+        self.sid = sid
+        self.state: dict = {}
+        self.poisoned: Optional[BaseException] = None
+
+    def array(self, value: Any, name: str = "", rank: int = 0):
+        """Create a runtime-resident array (serving thread only — call
+        from inside a step closure)."""
+        return self.runtime._wf.array(
+            value, name=f"s{self.sid}.{name}" if name else f"s{self.sid}",
+            rank=rank)
+
+    def submit(self, step: Callable[["Session"], Any]
+               ) -> concurrent.futures.Future:
+        """Enqueue one step; returns its future (see ``ServingRuntime.submit``)."""
+        return self.runtime.submit(self, step)
+
+    def __repr__(self) -> str:
+        status = "poisoned" if self.poisoned is not None else "ok"
+        return f"Session({self.sid}, {status})"
+
+
+class ServeRequest:
+    """One admitted step: the closure, its future, and latency timestamps.
+
+    ``submitted_s`` is stamped at submit (queue time starts), ``admitted_s``
+    when the serving thread picks the request into a batch; the request
+    latency recorded on completion is end-to-end (submit → value ready),
+    the number a client actually experiences.
+    """
+
+    __slots__ = ("session", "step", "future", "submitted_s", "admitted_s",
+                 "handles")
+
+    _ids = itertools.count()
+
+    def __init__(self, session: Session, step: Callable, submitted_s: float):
+        self.session = session
+        self.step = step
+        self.future: concurrent.futures.Future = concurrent.futures.Future()
+        self.submitted_s = submitted_s
+        self.admitted_s = 0.0
+        self.handles: tuple = ()

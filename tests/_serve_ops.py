@@ -1,0 +1,45 @@
+"""Op pool for the serving and flush-safety tests.
+
+Lives in its own import-light module — not in the test modules — because
+the ``procs`` backend pickles op fns *by reference* into worker processes:
+the workers re-import the defining module, and the test modules' own
+imports (jax models, pytest plugins) only resolve inside a pytest session.
+"""
+
+import numpy as np
+
+from repro import core as bind
+
+
+@bind.op
+def scale(c: bind.InOut, s: bind.In):
+    return c * s
+
+
+@bind.op
+def shift(c: bind.InOut, s: bind.In):
+    return c + s
+
+
+@bind.op
+def decay(c: bind.InOut, s: bind.In):
+    return c * 0.99 + s
+
+
+@bind.op
+def mix(c: bind.InOut, o: bind.In):
+    return c + 0.5 * o
+
+
+@bind.op
+def bomb(c: bind.InOut, s: bind.In):
+    # deterministic mid-program failure for the flush-failure contract tests
+    raise ValueError("bomb: injected op failure")
+
+
+def ref_decay(x, s, n):
+    """Reference semantics of ``decay`` applied ``n`` times (numpy)."""
+    x = np.asarray(x, dtype=np.float64).copy()
+    for _ in range(n):
+        x = x * 0.99 + s
+    return x

@@ -106,6 +106,45 @@ def test_procs_jax_payload_roundtrip():
         assert a.dtype == b.dtype
 
 
+def test_fetch_is_zero_copy_shm_view():
+    """PR-8 bugfix: fetching a procs-resident NumPy payload attaches a
+    *read-only view* of the worker's shared-memory segment instead of
+    copying it out.  ``stats.fetch_bytes_copied`` accounts every byte any
+    fetch path actually copies — the NumPy shm path must add zero, while
+    a JAX payload pays exactly one host->device copy of its own size."""
+    n = 2
+    ex = LocalExecutor(n, mode="plan", backend="procs")
+    with bind.Workflow(n_nodes=n, executor=ex) as wf:
+        a = wf.array(np.arange(64.0).reshape(8, 8), rank=0)
+        with bind.node(0):
+            _step(a, 1.5)
+        wf.sync()
+    ex.flush()
+    st = ex.stats
+    assert st.fetch_bytes_copied == 0
+    v = ex.value(a.ref.head)
+    assert isinstance(v, np.ndarray) and not v.flags.writeable
+    assert st.fetch_bytes_copied == 0            # the no-copy assertion
+    np.testing.assert_array_equal(
+        v, np.arange(64.0).reshape(8, 8) * 1.01 + 1.5)
+    # write-back: the view is cached in the store, so a second fetch
+    # returns the same object without re-attaching the segment
+    assert ex.value(a.ref.head) is v
+
+    # JAX payload on the same executor: exactly one accounted copy
+    jnp = pytest.importorskip("jax.numpy")
+    with bind.Workflow(n_nodes=n, executor=ex) as wf2:
+        c = wf2.array(jnp.arange(16.0), rank=1)
+        with bind.node(1):
+            _step(c, 0.5)
+        wf2.sync()
+    ex.flush()
+    vc = ex.value(c.ref.head)
+    assert st.fetch_bytes_copied == np.asarray(vc).nbytes
+    np.testing.assert_allclose(np.asarray(vc),
+                               np.arange(16.0) * 1.01 + 0.5)
+
+
 # ---------------------------------------------------------------------------
 # steady-state protocol: warm loop iterations cost one message per worker
 # ---------------------------------------------------------------------------

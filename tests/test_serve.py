@@ -109,3 +109,248 @@ def test_ring_cache_matches_full_cache_swa(rng):
     # the ring cache really is W slots, not S
     caches = [l for l in jax.tree_util.tree_leaves(st_r) if l.ndim == 4]
     assert all(c.shape[2] == 4 for c in caches), [c.shape for c in caches]
+
+
+# ===========================================================================
+# Serving runtime (repro.serve): always-on executor behind an admission
+# queue.  Correctness under concurrent submitters, counter-asserted
+# cross-request batching, prefix-cache planning amortisation, and clean
+# cancellation/timeout/failure handling.
+# ===========================================================================
+
+import concurrent.futures
+import threading
+
+from _serve_ops import bomb, decay, ref_decay
+from repro import core as bind
+from repro.core import LocalExecutor
+from repro.serve import ServingRuntime, SessionPoisoned
+
+SERVE_BACKENDS = ["serial", "threads", "fused", "procs"]
+
+
+@pytest.mark.parametrize("backend", SERVE_BACKENDS)
+def test_concurrent_submitters_match_sequential(backend):
+    """N client threads streaming steps concurrently must each get values
+    byte-identical to running their op chain sequentially (numpy payloads
+    are bitwise-deterministic on every backend, including through the
+    procs backend's shared-memory roundtrip)."""
+    n_sessions, steps = 4, 5
+    with ServingRuntime(n_nodes=2, backend=backend,
+                        admission_window=0.001) as rt:
+        barrier = threading.Barrier(n_sessions)
+
+        def client(i):
+            sess = rt.session()
+
+            def init(s):
+                s.state["x"] = s.array(np.arange(8.0) + i, name="x",
+                                       rank=i % 2)
+
+            sess.submit(init).result(timeout=60)
+            barrier.wait(timeout=60)
+
+            def step(s):
+                decay(s.state["x"], 0.5)
+                return s.state["x"]
+
+            futs = [sess.submit(step) for _ in range(steps)]
+            return np.asarray(futs[-1].result(timeout=60))
+
+        with concurrent.futures.ThreadPoolExecutor(n_sessions) as pool:
+            got = list(pool.map(client, range(n_sessions)))
+        for i, val in enumerate(got):
+            np.testing.assert_array_equal(
+                val, ref_decay(np.arange(8.0) + i, 0.5, steps),
+                err_msg=f"{backend}: session {i} diverged")
+        m = rt.metrics
+        assert m.requests_completed == n_sessions * (1 + steps)
+        assert m.requests_failed == 0
+        st = rt.executor.stats
+        assert sum(st.wavefronts) == st.ops_executed
+
+
+def test_cross_request_batching_fires():
+    """Six one-step clients admitted into one batch must coalesce: the
+    serving metrics see one batched flush carrying all six requests, and
+    the fused backend sees their same-signature steps as ONE batched
+    dispatch (jax payloads are what vmap-stacks)."""
+    rt = ServingRuntime(n_nodes=1, backend="fused", max_batch=8,
+                        autostart=False)
+    try:
+        def step(s):
+            x = s.array(jnp.full((16,), float(s.sid)), name="x")
+            decay(x, 0.5)
+            return x
+
+        futs = [rt.session().submit(step) for _ in range(6)]
+        rt.start()
+        vals = [np.asarray(f.result(timeout=60)) for f in futs]
+        for sid, v in zip(range(1, 7), vals):
+            np.testing.assert_allclose(v, float(sid) * 0.99 + 0.5,
+                                       rtol=1e-6)
+        m = rt.metrics
+        assert m.flushes == 1
+        assert m.batched_flushes == 1
+        assert m.coalesced_requests == 6
+        assert m.max_batch == 6
+        fb = rt.executor.backend
+        assert fb.batches_dispatched >= 1
+        assert fb.ops_fused >= 6
+    finally:
+        rt.close()
+
+
+def test_prefix_cache_replays_streamed_step_plans():
+    """The planning-amortisation path behind a streaming client: per-step
+    plans cached by earlier single-step flushes must be *replayed at
+    recorded segment boundaries* when a later burst flushes several steps
+    as one program — zero new plan builds, one program-cache hit per
+    segment."""
+    ex = LocalExecutor(1, mode="plan", backend="serial", stitch=True,
+                       prefix_cache=True)
+    wf = bind.Workflow(n_nodes=1, executor=ex)
+    with wf.recording():
+        x = wf.array(np.full(8, 1.0), name="x")
+    wf.sync()
+    ex.flush()
+
+    # warm the per-step plan caches: two one-step flushes
+    for _ in range(2):
+        with wf.recording():
+            decay(x, 0.5)
+        wf.sync()
+        ex.flush()
+    st = ex.stats
+    builds0 = st.plan_cache_misses
+    hits0 = st.program_cache_hits
+
+    # burst: three steps recorded as three segments, flushed as one program
+    for _ in range(3):
+        with wf.recording():
+            decay(x, 0.5)
+        wf.sync()
+    ex.flush()
+    assert st.plan_cache_misses == builds0, "burst paid a plan build"
+    assert st.program_cache_hits == hits0 + 3
+    np.testing.assert_array_equal(
+        np.asarray(ex.value(x.ref.head)), ref_decay(np.full(8, 1.0), 0.5, 5))
+
+
+def test_cancel_queued_request_never_touches_executor():
+    rt = ServingRuntime(n_nodes=1, backend="serial", autostart=False)
+    try:
+        sess_a, sess_b = rt.session(), rt.session()
+
+        def step_for(sess):
+            def step(s):
+                x = s.state.get("x")
+                if x is None:
+                    x = s.state["x"] = s.array(np.full(4, 2.0), name="x")
+                decay(x, 1.0)
+                return x
+            return step
+
+        fut_a = sess_a.submit(step_for(sess_a))
+        fut_b = sess_b.submit(step_for(sess_b))
+        assert fut_b.cancel()
+        rt.start()
+        np.testing.assert_allclose(np.asarray(fut_a.result(timeout=60)),
+                                   2.0 * 0.99 + 1.0)
+        with pytest.raises(concurrent.futures.CancelledError):
+            fut_b.result(timeout=60)
+        assert rt.metrics.requests_cancelled == 1
+        # the cancelled request recorded nothing: only A's op executed
+        assert rt.executor.stats.ops_executed == 1
+        # and B's session is not poisoned — it can submit again
+        assert sess_b.poisoned is None
+        np.testing.assert_allclose(
+            np.asarray(sess_b.submit(step_for(sess_b)).result(timeout=60)),
+            2.0 * 0.99 + 1.0)
+    finally:
+        rt.close()
+
+
+def test_timeout_on_queued_request_leaves_request_intact():
+    rt = ServingRuntime(n_nodes=1, backend="serial", autostart=False)
+    try:
+        sess = rt.session()
+
+        def step(s):
+            x = s.array(np.full(4, 3.0), name="x")
+            decay(x, 0.0)
+            return x
+
+        fut = sess.submit(step)
+        with pytest.raises(concurrent.futures.TimeoutError):
+            fut.result(timeout=0.05)     # still queued: times out cleanly
+        rt.start()
+        np.testing.assert_allclose(np.asarray(fut.result(timeout=60)),
+                                   3.0 * 0.99)
+        assert rt.metrics.requests_completed == 1
+    finally:
+        rt.close()
+
+
+def test_bad_request_poisons_only_its_session():
+    """A step closure that raises while recording fails its own future and
+    poisons its session; a good request in the SAME batch still completes."""
+    rt = ServingRuntime(n_nodes=1, backend="serial", autostart=False)
+    try:
+        bad, good = rt.session(), rt.session()
+
+        def bad_step(s):
+            raise RuntimeError("malformed request")
+
+        def good_step(s):
+            x = s.array(np.full(4, 5.0), name="x")
+            decay(x, 0.0)
+            return x
+
+        fut_bad = bad.submit(bad_step)
+        fut_good = good.submit(good_step)
+        rt.start()
+        with pytest.raises(RuntimeError, match="malformed"):
+            fut_bad.result(timeout=60)
+        np.testing.assert_allclose(np.asarray(fut_good.result(timeout=60)),
+                                   5.0 * 0.99)
+        assert bad.poisoned is not None
+        with pytest.raises(SessionPoisoned):
+            bad.submit(bad_step)
+        assert good.poisoned is None
+    finally:
+        rt.close()
+
+
+def test_op_failure_mid_flush_keeps_runtime_serving():
+    """An op body that raises during the batch flush fails the batch's
+    futures and poisons its sessions, but the runtime and executor keep
+    serving: a fresh session's request right after must succeed (the
+    executor's flush failure contract at work behind the queue)."""
+    with ServingRuntime(n_nodes=1, backend="serial",
+                        admission_window=0.0) as rt:
+        doomed = rt.session()
+
+        def bomb_step(s):
+            x = s.array(np.full(4, 1.0), name="x")
+            bomb(x, 0.0)
+            return x
+
+        fut = doomed.submit(bomb_step)
+        with pytest.raises((ValueError, RuntimeError)):
+            fut.result(timeout=60)
+        assert doomed.poisoned is not None
+        assert rt.metrics.requests_failed == 1
+
+        fresh = rt.session()
+
+        def good_step(s):
+            x = s.array(np.full(4, 2.0), name="x")
+            decay(x, 1.0)
+            return x
+
+        np.testing.assert_allclose(
+            np.asarray(fresh.submit(good_step).result(timeout=60)),
+            2.0 * 0.99 + 1.0)
+        st = rt.executor.stats
+        assert sum(st.wavefronts) == st.ops_executed
