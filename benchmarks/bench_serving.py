@@ -19,6 +19,18 @@ additionally reports ``batched_vs_serial_speedup`` — the CI-asserted bar
 ``skipped`` instead: with one core the client threads, the serving thread
 and the dispatch all timeslice the same CPU and the arm comparison
 measures scheduler noise, not batching.
+
+Two further rows pin the overload-safety contract (PR 9):
+
+* ``overload`` — offered load deliberately exceeds a bounded admission
+  queue: the excess must shed (retriable ``RuntimeOverloaded``) while
+  every admitted request completes.  Reports shed rate, goodput
+  (accepted requests/s) and p99 latency *of the accepted requests* —
+  the load-shed story is only a story if what got in stayed fast.
+* ``steady_state`` — one long-lived session streams decode steps with
+  trace compaction enabled: ``len(wf.ops)`` must stay flat (bounded by
+  ``compact_threshold``) across 100 steps instead of growing linearly.
+  CI asserts ``trace_bounded`` and that compactions actually fired.
 """
 
 from __future__ import annotations
@@ -30,7 +42,7 @@ import time
 import jax.numpy as jnp
 
 from repro import core as bind
-from repro.serve import ServingRuntime
+from repro.serve import RuntimeOverloaded, ServingRuntime
 
 
 @bind.op
@@ -90,6 +102,84 @@ def _arm(max_batch: int, sessions: int, steps: int, dim: int,
     return best_s, best_rt
 
 
+def _self_init_step(dim: int):
+    """A decode step that lazily seeds its session state on first use —
+    lets the overload arm queue work before the serving thread starts."""
+    def step(sh):
+        x = sh.state.get("x")
+        if x is None:
+            x = sh.state["x"] = sh.array(jnp.linspace(0.0, 1.0, dim),
+                                         name="x")
+        _decode_step(x, 0.5)
+        return x
+    return step
+
+
+def _overload_row(sessions: int, steps: int, dim: int) -> dict:
+    """Offered load > a bounded admission queue, deterministically.
+
+    The runtime starts stopped: a burst of ``sessions * steps``
+    submissions fills the queue to ``max_queue`` and sheds the rest (no
+    race against the serving thread).  Then the runtime starts and the
+    drain is timed — goodput is accepted requests/s, and the latency
+    percentiles cover exactly the accepted requests.
+    """
+    max_queue = max(2, sessions // 2)
+    offered = sessions * steps
+    with ServingRuntime(n_nodes=1, backend="fused", max_batch=sessions,
+                        admission_window=0.002, max_queue=max_queue,
+                        autostart=False) as rt:
+        sess = [rt.session() for _ in range(sessions)]
+        step = _self_init_step(dim)
+        futs, shed = [], 0
+        for _ in range(steps):
+            for s in sess:
+                try:
+                    futs.append(s.submit(step))
+                except RuntimeOverloaded:
+                    shed += 1
+        t0 = time.perf_counter()
+        rt.start()
+        for f in futs:
+            f.result(timeout=300)
+        wall = time.perf_counter() - t0
+        m = rt.metrics
+    return {
+        "bench": "serving", "arm": "overload",
+        "sessions": sessions, "max_queue": max_queue,
+        "offered": offered, "accepted": len(futs), "shed": shed,
+        "shed_rate": round(shed / offered, 3),
+        "goodput_req_per_s": round(len(futs) / max(wall, 1e-9), 1),
+        "accepted_p50_ms": round(m.latency.p50 * 1e3, 3),
+        "accepted_p99_ms": round(m.latency.p99 * 1e3, 3),
+        "queue_depth_hwm": m.queue_depth_hwm,
+        "requests_shed": m.requests_shed,
+    }
+
+
+def _steady_state_row(dim: int, steps: int, threshold: int = 12) -> dict:
+    """One long-lived session, ``steps`` decode steps, compaction on:
+    the recorded trace must stay flat at O(threshold) ops."""
+    with ServingRuntime(n_nodes=1, backend="fused", admission_window=0.0,
+                        compact_threshold=threshold) as rt:
+        s = rt.session()
+        step = _self_init_step(dim)
+        sizes = []
+        for _ in range(steps):
+            s.submit(step).result(timeout=300)
+            sizes.append(len(rt._wf.ops))
+        m = rt.metrics
+    return {
+        "bench": "serving", "arm": "steady_state", "steps": steps,
+        "compact_threshold": threshold,
+        "max_trace_ops": max(sizes),
+        "trace_ops_hwm": m.trace_ops_hwm,
+        "compactions": m.compactions,
+        "ops_compacted": m.ops_compacted,
+        "trace_bounded": bool(max(sizes) <= threshold),
+    }
+
+
 def run(quick: bool = False):
     n_cpus = os.cpu_count() or 1
     sessions, steps, dim = (4, 4, 64) if quick else (8, 6, 64)
@@ -125,6 +215,8 @@ def run(quick: bool = False):
             row["batched_vs_serial_speedup"] = round(
                 serial_s / max(batched_s, 1e-9), 2)
         rows.append(row)
+    rows.append(_overload_row(sessions, steps, dim))
+    rows.append(_steady_state_row(dim, steps=40 if quick else 100))
     return rows
 
 

@@ -326,6 +326,81 @@ def main() -> None:
               f"{fb.ops_fused} ops fused into {fb.batches_dispatched} "
               f"batched dispatch(es), "
               f"p50={m.latency.p50 * 1e3:.2f}ms p99={m.latency.p99 * 1e3:.2f}ms")
+
+    # 11. overload safety: the runtime stays correct when clients outrun
+    #     it.  Admission is bounded (``max_queue``): the excess sheds with
+    #     a *retriable* RuntimeOverloaded instead of growing the queue
+    #     without bound — nothing is poisoned, back off and resubmit (or
+    #     pass ``submit(..., timeout=)`` to block for a slot instead).
+    #     When a coalesced batch fails, the runtime *bisects*: it re-drives
+    #     per-request sub-ranges of the recorded program to attribute the
+    #     failure, so one bad request poisons only its own session and
+    #     every innocent batch-mate still gets its answer.  And a
+    #     long-lived session never grows the trace without bound: after
+    #     each flush the executed prefix is compacted away
+    #     (``compact_threshold``), with the relocatable plan cache still
+    #     hitting across the renumbering.
+    from repro.serve import RuntimeOverloaded, SessionPoisoned
+
+    @bind.op
+    def guard(x: bind.InOut):
+        if float(jnp.min(x)) < 0:
+            raise ValueError("negative activation")
+        return x
+
+    with ServingRuntime(n_nodes=1, backend="fused", autostart=False,
+                        max_queue=2, compact_threshold=8) as rt:
+        def step_for(value):
+            def step(sess):
+                x = sess.state.get("x")
+                if x is None:
+                    x = sess.state["x"] = sess.array(
+                        jnp.full((8,), value), name="x")
+                guard(x)
+                scale(x, 1.01)
+                return x
+            return step
+
+        # a) backpressure: runtime not yet started, queue bound is 2 —
+        #    the third submission is shed, retriably
+        sessions = [rt.session() for _ in range(3)]
+        futs = [sessions[0].submit(step_for(1.0)),
+                sessions[1].submit(step_for(-1.0))]   # <- the poison pill
+        try:
+            sessions[2].submit(step_for(3.0))
+            raise AssertionError("bounded queue must shed")
+        except RuntimeOverloaded:
+            pass
+        rt.start()
+
+        # b) bisection: both admitted steps flushed as one program; the
+        #    flush fails, the runtime bisects, and only session 1 (the
+        #    negative input) is poisoned — session 0's future resolves
+        np.testing.assert_allclose(np.asarray(futs[0].result(timeout=60)),
+                                   1.01, rtol=1e-6)
+        try:
+            futs[1].result(timeout=60)
+            raise AssertionError("poison step must fail")
+        except ValueError:
+            pass
+        assert sessions[1].poisoned is not None
+        try:
+            sessions[1].submit(step_for(1.0))
+        except SessionPoisoned:
+            pass                                  # poisoned stays poisoned
+
+        # c) bounded trace: stream 30 more steps through session 0 —
+        #    compaction keeps the shared trace at O(threshold) ops
+        for _ in range(30):
+            sessions[0].submit(step_for(1.0)).result(timeout=60)
+        m = rt.metrics
+        assert m.trace_ops_hwm <= 8
+        print(f"overload: {m.requests_shed} shed (retriable), "
+              f"{m.bisections} bisection x {m.bisect_probes} probes "
+              f"salvaged {m.requests_salvaged} request(s); "
+              f"{m.compactions} compactions kept the trace at "
+              f"<= {m.trace_ops_hwm} ops across "
+              f"{m.requests_completed} requests")
     print("OK")
 
 

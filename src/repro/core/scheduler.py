@@ -62,7 +62,8 @@ from itertools import islice
 from typing import Any, Optional, Union
 
 from .backends import get_backend
-from .backends.base import BatchSlice, RankFailure, spill_dead_buckets
+from .backends.base import (BatchSlice, RankFailure, drop_versions,
+                            spill_dead_buckets)
 from .collectives import broadcast_tree
 from .executable_cache import EXEC_CACHE, ExecutableCache
 from .placement import placement_ranks
@@ -114,6 +115,18 @@ class LocalExecutor:
     shapes, which assume whole-range stitching).  The serving runtime
     (:mod:`repro.serve`) turns it on.
 
+    ``protect_inputs`` (default False) makes every flush *input-atomic*:
+    the program's external reads (versions produced before the flushed
+    range) are pinned for the duration of the flush instead of being
+    GC'd at their last in-program read, then explicitly dropped once the
+    program succeeds.  Happy-path cost is a short extension of those
+    payloads' lifetime (peak residency may rise by one generation of
+    inputs); in exchange a *failed* flush leaves every external input
+    materialised, so sub-ranges of the rolled-back program can be
+    re-driven via :meth:`flush_slice` — the serving runtime's
+    flush-failure bisection relies on this.  Overridable per flush via
+    ``flush(protect_inputs=...)``.
+
     **Thread safety** — ``run()``, ``flush()``, ``value()``, the ``stats``
     property and ``decommission_rank()`` are serialised on an internal
     re-entrant lock and safe to call from concurrent client threads.
@@ -130,7 +143,8 @@ class LocalExecutor:
     fetching a version it produced raises ``KeyError``), accounting is
     rolled back to the pre-flush snapshot (peaks and recovery counters
     keep their physically-true values), and payloads that existed before
-    the flush — every head pinned at the program's last sync — remain
+    the flush — every head pinned at the program's last sync, plus (under
+    ``protect_inputs``) every external input the program read — remain
     fetchable.  Both continuing to record on the same workflow and
     switching to a fresh ``Workflow`` afterwards work; switching
     workflows resets the payload stores (a new workflow restarts the
@@ -143,6 +157,7 @@ class LocalExecutor:
                  backend: Union[str, Any, None] = None,
                  stitch: bool = True,
                  prefix_cache: bool = False,
+                 protect_inputs: bool = False,
                  fault_injector: Optional[Any] = None,
                  topology: Optional[Any] = None):
         assert collective_mode in ("tree", "naive")
@@ -152,6 +167,7 @@ class LocalExecutor:
         self.mode = mode
         self.stitch = bool(stitch)
         self.prefix_cache = bool(prefix_cache)
+        self.protect_inputs = bool(protect_inputs)
         self.backend = get_backend(backend if backend is not None else "serial")
         # fault tolerance (ROADMAP item 4): a FaultInjector consulted at
         # wavefront boundaries; a topology cost model pricing elastic
@@ -205,15 +221,17 @@ class LocalExecutor:
                 self._flush()
             return self._stats
 
-    def flush(self, *, prefix_cache: Optional[bool] = None
-              ) -> ExecutionStats:
+    def flush(self, *, prefix_cache: Optional[bool] = None,
+              protect_inputs: Optional[bool] = None) -> ExecutionStats:
         """Execute the pending program trace (no-op when nothing pends).
 
         ``prefix_cache`` overrides the constructor setting for this flush
         only (the serving runtime's planning policy: replay cached
         per-segment plans when the pending program is one client's step
         stream, plan the whole stitched program when segments from many
-        clients could fuse into shared batches).
+        clients could fuse into shared batches).  ``protect_inputs``
+        likewise overrides the constructor setting for this flush only
+        (input-atomic execution — see the class docstring).
 
         On a mid-program failure the original exception re-raises with the
         executor in the documented usable state (see the class docstring's
@@ -221,15 +239,88 @@ class LocalExecutor:
         """
         with self._lock:
             if self._pending:
-                if prefix_cache is None:
+                prev = (self.prefix_cache, self.protect_inputs)
+                if prefix_cache is not None:
+                    self.prefix_cache = prefix_cache
+                if protect_inputs is not None:
+                    self.protect_inputs = protect_inputs
+                try:
                     self._flush()
-                else:
-                    prev, self.prefix_cache = self.prefix_cache, prefix_cache
-                    try:
-                        self._flush()
-                    finally:
-                        self.prefix_cache = prev
+                finally:
+                    self.prefix_cache, self.protect_inputs = prev
             return self._stats
+
+    def flush_slice(self, wf: Workflow, start: int, end: int
+                    ) -> ExecutionStats:
+        """Execute ``wf.ops[start:end]`` as its own program.
+
+        The flush-failure *bisection* entry point (serving runtime): when a
+        multi-request flush fails, the executor rolls the whole range back
+        and discards its segments — but the recorded trace still holds
+        every request's ops.  The caller (which knows the per-request
+        segment boundaries) re-drives sub-ranges through this, narrowing
+        attribution to the truly-failing request; each call runs under the
+        same exception-safe flush contract as a normal flush (a failing
+        sub-range rolls back alone, the executor stays usable for the next
+        probe).
+
+        Soundness of re-driving a sub-range in recorded order: the failed
+        flush must have run with ``protect_inputs`` — then its rollback
+        left every external input of the program materialised, not just
+        the last-sync pinned heads (an input superseded *within* the
+        failed batch is no head, yet an innocent sub-range still needs
+        it).  Probes themselves always run input-atomically too, so a
+        failing *group* probe cannot GC an innocent member's inputs out
+        from under the narrower re-probes that follow.  A sub-range whose
+        inputs were produced by an earlier failed sub-range raises (those
+        writes were dropped), which is exactly the attribution the
+        bisection wants.  Anything still pending flushes first (sub-range
+        replay must not interleave with a live program).
+        """
+        with self._lock:
+            if self._pending:
+                self._flush()
+            token = self._wf_token
+            if token is not None and token() is not wf:
+                self._reset_stores()
+            self._wf_token = weakref.ref(wf)
+            self._wf = wf
+            self._place_initial(wf, len(wf.initial))
+            if start >= end:
+                return self._stats
+            self._pending.append(
+                Segment(start, end, self._pinned(wf), len(wf.initial)))
+            prev = self.protect_inputs
+            self.protect_inputs = True
+            try:
+                return self._flush()
+            finally:
+                self.protect_inputs = prev
+
+    def compact(self, wf: Workflow) -> int:
+        """Truncate ``wf``'s executed trace prefix (bounded-memory serving).
+
+        Flushes anything pending, then drops every executed op record,
+        rebases the survivors, and prunes version histories / producer
+        maps / placed initial payloads down to what is still live
+        (:meth:`Workflow.compact_trace`).  Steady-state memory becomes
+        O(live state) instead of O(steps ever served); the relocatable
+        program-trace cache keys survive rebasing, so warm loops keep
+        replaying cached plans afterwards.  The documented trade: lineage
+        below the compaction horizon is gone, so fault recovery can no
+        longer recompute it (checkpoint first if that matters).  Returns
+        the number of op records removed.
+        """
+        with self._lock:
+            if self._pending:
+                self._flush()
+            token = self._wf_token
+            mine = token is not None and token() is wf
+            removed, placed = wf.compact_trace(
+                len(wf.ops), self._init_seen if mine else 0)
+            if mine and removed:
+                self._init_seen = placed
+            return removed
 
     # -- payload access ------------------------------------------------------
     def value(self, version) -> Any:
@@ -385,8 +476,10 @@ class LocalExecutor:
                 return self._stats
             if self._pending and self._pending[-1].end != start:
                 # overlapping or rewound range: the pending trace is not a
-                # contiguous program — materialise it first
+                # contiguous program — materialise it first (the flush
+                # clears _wf; restore it for the segment appended below)
                 self._flush()
+                self._wf = wf
             self._pending.append(
                 Segment(start, end, self._pinned(wf), len(wf.initial)))
             if not self.stitch:
@@ -463,11 +556,20 @@ class LocalExecutor:
         snap = (st.ops_executed, st.copies_elided, len(st.transfers),
                 len(st.wavefronts), len(st.wavefront_flops),
                 self._round_counter)
+        # input-atomic flush: external reads not already pinned ride the
+        # pinned set for the whole program, so a mid-program failure
+        # cannot have GC'd an input a re-driven sub-range would need
+        protected: frozenset = frozenset()
+        if self.protect_inputs:
+            protected = frozenset(
+                self._program_inputs(wf, start, end) - last.pinned)
         try:
             if self.mode == "interpret":
-                self._run_interpret(wf, start, end, last.pinned)
+                self._run_interpret(wf, start, end,
+                                    last.pinned | protected if protected
+                                    else last.pinned)
             else:
-                self._run_program(wf, pending, start, end)
+                self._run_program(wf, pending, start, end, protected)
         except BaseException:
             self._abort_flush(wf, start, end, snap)
             raise
@@ -478,7 +580,34 @@ class LocalExecutor:
             st.program_cache_misses += PROGRAM_CACHE_STATS["misses"] - gm
             st.exec_cache_hits += self._exec_cache.hits - eh
             st.exec_cache_misses += self._exec_cache.misses - em
+        if protected:
+            # success: the protected inputs are superseded (they were not
+            # heads at the last sync) with no readers left — drop them now
+            # so input atomicity costs lifetime, not steady-state memory
+            present = [k for k in protected if k in self._where]
+            if present:
+                self._live_bytes, self._live_entries = drop_versions(
+                    present, self._stores, self._where, self._key_bytes,
+                    self._live_bytes, self._live_entries)
+                spill_dead_buckets(self)
         return st
+
+    @staticmethod
+    def _program_inputs(wf: Workflow, start: int, end: int) -> set:
+        """Version keys ``wf.ops[start:end]`` reads but does not produce.
+
+        Trace order makes one pass sufficient: any in-range read of an
+        in-range write necessarily follows that write.
+        """
+        written: set = set()
+        ext: set = set()
+        for node in wf.ops[start:end]:
+            for v in node.reads:
+                if v.key not in written:
+                    ext.add(v.key)
+            for v in node.writes:
+                written.add(v.key)
+        return ext
 
     def _abort_flush(self, wf: Workflow, start: int, end: int,
                      snap: tuple) -> None:
@@ -528,7 +657,7 @@ class LocalExecutor:
                                for k in self._where)
 
     def _run_program(self, wf: Workflow, pending: list, start: int,
-                     end: int) -> None:
+                     end: int, protected: frozenset = frozenset()) -> None:
         """Execute the pending program, optionally as cached prefixes.
 
         Default (``prefix_cache=False``, or a single pending segment):
@@ -553,9 +682,17 @@ class LocalExecutor:
         a payload a later sub-range needs.
         """
         if not self.prefix_cache or len(pending) == 1:
-            self._run_planned(wf, start, end, pending[-1].pinned)
+            self._run_planned(wf, start, end,
+                              pending[-1].pinned | protected if protected
+                              else pending[-1].pinned)
             return
-        pin_of = {seg.end: seg.pinned for seg in pending}
+        # protected inputs join every sub-plan's pinned set: over-pinning a
+        # sub-range is always GC-safe, and the relocatable cache key only
+        # normalizes pinned keys the sub-range actually reads, so warm
+        # prefix probes keep hitting
+        pin_of = {seg.end: (seg.pinned | protected if protected
+                            else seg.pinned)
+                  for seg in pending}
         bounds = [seg.end for seg in pending]       # strictly increasing
         pos = start
         while pos < end:

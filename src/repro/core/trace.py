@@ -359,8 +359,8 @@ class Workflow:
         self._index_op(node)
         return None
 
-    def _index_op(self, node: OpNode) -> None:
-        """Extend the cached producer/consumer maps with one recorded op."""
+    def _index_op_maps(self, node: OpNode) -> None:
+        """Extend the cached producer/consumer maps with one op."""
         consumers = self._consumers
         for v in node.reads:
             lst = consumers.get(v.key)
@@ -371,6 +371,10 @@ class Workflow:
         producers = self._producers
         for v in node.writes:
             producers[v.key] = node
+
+    def _index_op(self, node: OpNode) -> None:
+        """Extend the cached producer/consumer maps with one recorded op."""
+        self._index_op_maps(node)
         self._op_sigs.append(_intern_sig((
             node.fn, node.name, node.placement, node.flops,
             tuple((v.key if ref is not None else None)
@@ -393,6 +397,85 @@ class Workflow:
         Returns the live map — treat it as read-only.
         """
         return self._producers
+
+    # -- trace compaction -----------------------------------------------------
+    def compact_trace(self, upto: int, placed_init: int = 0
+                      ) -> tuple[int, int]:
+        """Truncate the executed prefix ``ops[:upto]`` of the trace.
+
+        The always-on serving runtime records an unbounded step stream into
+        one long-lived workflow; without compaction ``ops``, the
+        producer/consumer maps and every ref's version history grow
+        forever.  Once a prefix has *executed* (its effects live in the
+        executor's payload stores), its op records are only needed for
+        lineage-based recovery — this drops them and rebases everything
+        positional:
+
+        * ``ops[:upto]`` and their interned signatures are removed and the
+          surviving ops' ``op_id`` renumbered (the ``op_id == index``
+          invariant every plan consumer relies on);
+        * the producer/consumer maps are rebuilt from the survivors, so a
+          pinned head produced below the horizon reads like an initial
+          array (no producer — already materialised);
+        * each ref's version history is truncated to its head plus any
+          version a surviving op still references (indices are preserved,
+          never reused — see :meth:`Ref.compact`);
+        * ``initial`` entries already placed by the executor are dropped
+          unless still live (a ref's current head), and checkpoint sources
+          for compacted versions are forgotten.
+
+        The cost is recoverability below the horizon: lineage-based fault
+        recovery cannot recompute what it can no longer see (the same
+        truncation contract as an executed checkpoint barrier, without the
+        disk copy) — callers that need deep recovery should checkpoint
+        before compacting.  The relocatable program-trace cache survives:
+        its keys are normalized to (ref-ordinal, index-delta), which
+        rebasing preserves, so steady-state loops keep their zero-replan
+        hits across compactions.
+
+        ``placed_init`` is how many ``initial`` entries the executor has
+        materialised (its ``_init_seen``).  Returns ``(ops_removed,
+        new_placed_init)``.
+        """
+        upto = min(upto, self._synced_upto)
+        if upto <= 0:
+            return 0, placed_init
+        del self.ops[:upto]
+        del self._op_sigs[:upto]
+        for i, node in enumerate(self.ops):
+            node.op_id = i
+        self._synced_upto -= upto
+        self._producers.clear()
+        self._consumers.clear()
+        live: set[tuple[int, int]] = set()
+        for node in self.ops:
+            self._index_op_maps(node)
+            for v in node.reads:
+                live.add(v.key)
+            for v in node.writes:
+                live.add(v.key)
+        keep: dict[int, set[int]] = {}
+        for rid, idx in live:
+            keep.setdefault(rid, set()).add(idx)
+        for ref in self.refs.values():
+            ref.compact(keep.get(ref.ref_id, ()))
+        # initial entries form a placed prefix (executor materialises them
+        # in insertion order); drop placed entries unless still live
+        new_initial: dict[tuple[int, int], Any] = {}
+        new_placed = 0
+        for i, (k, item) in enumerate(self.initial.items()):
+            if i >= placed_init:
+                new_initial[k] = item
+                continue
+            if k in live or self.refs[k[0]].head.key == k:
+                new_initial[k] = item
+                new_placed += 1
+        self.initial = new_initial
+        if self._ckpt_sources:
+            self._ckpt_sources = {
+                k: v for k, v in self._ckpt_sources.items()
+                if k in live or self.refs[k[0]].head.key == k}
+        return upto, new_placed
 
     # -- execution boundary ---------------------------------------------------
     def sync(self) -> None:

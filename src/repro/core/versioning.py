@@ -69,12 +69,43 @@ class Ref:
         return self.versions[-1]
 
     def new_version(self, producer: int) -> Version:
-        v = Version(self.ref_id, len(self.versions), producer)
+        # index continues from the head, not from len(versions): a
+        # compacted ref (history truncated to its live suffix) must keep
+        # issuing monotonically fresh indices — (ref_id, index) keys are
+        # never reused
+        v = Version(self.ref_id, self.versions[-1].index + 1, producer)
         self.versions.append(v)
         return v
 
     def version(self, index: int) -> Version:
-        return self.versions[index]
+        """The version with history index ``index`` (offset-aware: valid
+        after :meth:`compact` for any retained index)."""
+        pos = index - self.versions[0].index
+        if 0 <= pos < len(self.versions) and self.versions[pos].index == index:
+            return self.versions[pos]
+        for v in self.versions:      # sparse retained history post-compact
+            if v.index == index:
+                return v
+        raise IndexError(f"version {index} of ref {self.ref_id} was compacted")
+
+    def compact(self, keep=()) -> int:
+        """Drop superseded versions not in ``keep`` (a set of *indices*).
+
+        Trace compaction calls this once the executed prefix of a workflow
+        is truncated: superseded versions can never gain new readers, so
+        only the head (still fetchable / readable by future ops) and any
+        version a not-yet-executed op still reads need to survive.  Returns
+        the number of versions dropped.  Version *indices* are preserved —
+        only the history list shrinks — so existing keys stay valid.
+        """
+        if len(self.versions) == 1:
+            return 0
+        kept = [v for v in self.versions[:-1] if v.index in keep]
+        kept.append(self.versions[-1])
+        dropped = len(self.versions) - len(kept)
+        if dropped:
+            self.versions = kept
+        return dropped
 
     def __repr__(self) -> str:
         return f"Ref({self.name}, head={self.head})"

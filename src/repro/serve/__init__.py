@@ -15,8 +15,9 @@ See :mod:`repro.serve.runtime` for the architecture.
 
 from .metrics import ServeMetrics
 from .runtime import ServingRuntime
-from .session import (RuntimeClosed, ServeError, ServeRequest, Session,
-                      SessionPoisoned)
+from .session import (RuntimeClosed, RuntimeOverloaded, ServeError,
+                      ServeRequest, Session, SessionPoisoned)
 
 __all__ = ["ServingRuntime", "ServeMetrics", "Session", "ServeRequest",
-           "ServeError", "RuntimeClosed", "SessionPoisoned"]
+           "ServeError", "RuntimeClosed", "RuntimeOverloaded",
+           "SessionPoisoned"]

@@ -9,16 +9,20 @@ the trace.
 
 The blast radius of a failure is deliberately per-session, not
 per-service: a step closure that raises (bad request) or an op body that
-fails mid-flush poisons the session(s) whose ops were in the failed
-program — their later submits raise :class:`SessionPoisoned` — while the
-runtime, the executor, and every other session keep serving (the
-executor's flush failure contract guarantees their payloads survive).
+fails mid-flush poisons the session(s) the flush-failure bisection
+attributes the failure to — their later submits raise
+:class:`SessionPoisoned` — while the runtime, the executor, and every
+other session keep serving (the executor's flush failure contract
+guarantees their payloads survive).  Overload is likewise surfaced, not
+absorbed: when the admission queue or a session's in-flight budget is
+full, ``submit`` sheds the request with :class:`RuntimeOverloaded` — a
+*retriable* condition, unlike the terminal :class:`RuntimeClosed` /
+:class:`SessionPoisoned`.
 """
 
 from __future__ import annotations
 
 import concurrent.futures
-import itertools
 from typing import Any, Callable, Optional
 
 
@@ -27,7 +31,15 @@ class ServeError(RuntimeError):
 
 
 class RuntimeClosed(ServeError):
-    """The serving runtime was shut down; no further submits are accepted."""
+    """The serving runtime was shut down (or its serving thread died —
+    then ``__cause__`` carries the loop's exception); no further submits
+    are accepted."""
+
+
+class RuntimeOverloaded(ServeError):
+    """The request was shed at admission: the bounded queue (or the
+    session's in-flight budget) is full.  Retriable — back off and
+    resubmit; the session is *not* poisoned."""
 
 
 class SessionPoisoned(ServeError):
@@ -46,15 +58,19 @@ class Session:
     handles — e.g. the KV cache of a decode loop).  Step closures run *on
     the serving thread* with the shared workflow active, so inside one
     they may call ``self.array(...)`` and any recorded ``@op``.
+
+    ``inflight`` counts this session's unresolved requests (queued or
+    executing); the runtime's per-session cap sheds submits beyond it.
     """
 
-    __slots__ = ("runtime", "sid", "state", "poisoned")
+    __slots__ = ("runtime", "sid", "state", "poisoned", "inflight")
 
     def __init__(self, runtime, sid: int):
         self.runtime = runtime
         self.sid = sid
         self.state: dict = {}
         self.poisoned: Optional[BaseException] = None
+        self.inflight = 0
 
     def array(self, value: Any, name: str = "", rank: int = 0):
         """Create a runtime-resident array (serving thread only — call
@@ -63,10 +79,11 @@ class Session:
             value, name=f"s{self.sid}.{name}" if name else f"s{self.sid}",
             rank=rank)
 
-    def submit(self, step: Callable[["Session"], Any]
+    def submit(self, step: Callable[["Session"], Any],
+               timeout: Optional[float] = None
                ) -> concurrent.futures.Future:
         """Enqueue one step; returns its future (see ``ServingRuntime.submit``)."""
-        return self.runtime.submit(self, step)
+        return self.runtime.submit(self, step, timeout=timeout)
 
     def __repr__(self) -> str:
         status = "poisoned" if self.poisoned is not None else "ok"
@@ -84,8 +101,6 @@ class ServeRequest:
 
     __slots__ = ("session", "step", "future", "submitted_s", "admitted_s",
                  "handles")
-
-    _ids = itertools.count()
 
     def __init__(self, session: Session, step: Callable, submitted_s: float):
         self.session = session

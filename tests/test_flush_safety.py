@@ -25,7 +25,7 @@ import threading
 import numpy as np
 import pytest
 
-from _serve_ops import bomb, ref_decay, scale, shift
+from _serve_ops import bomb, decay, ref_decay, scale, shift
 from repro import core as bind
 from repro.core import LocalExecutor
 
@@ -162,6 +162,175 @@ def test_failed_flush_does_not_leak_round_ids():
     _recorded(ex, wf, lambda wf: scale(b, 3.0))
     ex.flush()
     np.testing.assert_allclose(np.asarray(ex.value(b.ref.head)), 3.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_flush_slice_redrives_innocent_range(backend):
+    """The bisection primitive: after an input-atomic flush of two
+    requests' segments fails on the second, flush_slice re-drives the
+    innocent first range to its correct value, the failing range fails
+    alone, and the executor stays usable.  The input-atomicity matters:
+    the innocent op executed inside the failed program and its input was
+    superseded in-batch (so NOT in the last pinned snapshot) — only
+    protect_inputs keeps it materialised through the rollback."""
+    ex = LocalExecutor(2, mode="plan", backend=backend)
+    wf = bind.Workflow(n_nodes=2, executor=ex)
+
+    def seed(wf):
+        a = wf.array(np.ones(4), name="a", rank=0)
+        b = wf.array(np.full(4, 2.0), name="b", rank=1)
+        return a, b
+
+    a, b = _recorded(ex, wf, seed)
+    ex.flush()
+
+    s1 = len(wf.ops)
+    _recorded(ex, wf, lambda wf: scale(a, 3.0))
+    s2 = len(wf.ops)
+    _recorded(ex, wf, lambda wf: bomb(b, 0.0))
+    s3 = len(wf.ops)
+
+    with pytest.raises((ValueError, RuntimeError)):
+        ex.flush(protect_inputs=True)
+
+    # innocent range: byte-identical to what a serial flush would give
+    ex.flush_slice(wf, s1, s2)
+    np.testing.assert_array_equal(np.asarray(ex.value(a.ref.head)),
+                                  np.full(4, 3.0))
+    # failing range: fails alone, executor stays usable
+    with pytest.raises((ValueError, RuntimeError)):
+        ex.flush_slice(wf, s2, s3)
+    with pytest.raises(KeyError):
+        ex.value(b.ref.head)
+
+    _recorded(ex, wf, lambda wf: scale(a, 2.0))
+    ex.flush()
+    np.testing.assert_array_equal(np.asarray(ex.value(a.ref.head)),
+                                  np.full(4, 6.0))
+    st = ex.stats
+    assert sum(st.wavefronts) == st.ops_executed
+    assert ex._live_entries == sum(len(s) for s in ex._stores.values())
+
+
+def test_flush_slice_attributes_dependent_failed_range():
+    """A sub-range whose inputs were produced by an earlier FAILED
+    sub-range must itself fail (dropped writes are unfetchable) — the
+    attribution the serving bisection relies on for same-session
+    casualties."""
+    ex = LocalExecutor(1, mode="plan", backend="serial")
+    wf = bind.Workflow(n_nodes=1, executor=ex)
+    a = _recorded(ex, wf, lambda wf: wf.array(np.ones(4), name="a"))
+    ex.flush()
+
+    s1 = len(wf.ops)
+    _recorded(ex, wf, lambda wf: bomb(a, 0.0))
+    s2 = len(wf.ops)
+    _recorded(ex, wf, lambda wf: scale(a, 2.0))   # reads the bomb's output
+    s3 = len(wf.ops)
+    with pytest.raises(ValueError):
+        ex.flush(protect_inputs=True)
+    with pytest.raises(ValueError):
+        ex.flush_slice(wf, s1, s2)
+    # the dependent range cannot be salvaged: its input was never written
+    with pytest.raises(AssertionError):
+        ex.flush_slice(wf, s2, s3)
+
+
+@pytest.mark.parametrize("backend", ["serial", "fused"])
+def test_trace_compaction_roundtrip(backend):
+    """compact() truncates the executed prefix (ops, sigs, version
+    histories, placed initials) while preserving semantics: values after
+    compaction are byte-identical to the uncompacted run, and the
+    relocatable program cache keeps hitting (rebased keys normalise to
+    the same relocatable signatures)."""
+    from repro.core.program import PROGRAM_CACHE_STATS
+
+    ex = LocalExecutor(1, mode="plan", backend=backend, prefix_cache=True)
+    wf = bind.Workflow(n_nodes=1, executor=ex)
+    x = _recorded(ex, wf, lambda wf: wf.array(np.ones(8), name="x"))
+    ex.flush()
+
+    def step():
+        _recorded(ex, wf, lambda wf: decay(x, 0.5))
+        ex.flush()
+
+    for _ in range(5):
+        step()
+    assert len(wf.ops) == 5
+    builds0 = PROGRAM_CACHE_STATS["misses"]
+    removed = ex.compact(wf)
+    assert removed == 5
+    assert len(wf.ops) == 0
+    assert len(x.ref.versions) == 1          # history truncated to the head
+    assert x.ref.head.index == 5             # ...but indices never rewind
+
+    for _ in range(5):
+        step()
+    # every post-compaction step replayed a cached plan (exact or
+    # relocatable — rebased keys normalise to the same relocatable
+    # signatures): zero new plan builds
+    assert PROGRAM_CACHE_STATS["misses"] == builds0
+    np.testing.assert_array_equal(np.asarray(ex.value(x.ref.head)),
+                                  ref_decay(np.ones(8), 0.5, 10))
+    # second compaction from a rebased trace works the same
+    assert ex.compact(wf) == 5
+    step()
+    np.testing.assert_array_equal(np.asarray(ex.value(x.ref.head)),
+                                  ref_decay(np.ones(8), 0.5, 11))
+    st = ex.stats
+    assert sum(st.wavefronts) == st.ops_executed
+
+
+def test_compact_after_aborted_flush_keeps_executor_usable():
+    """compact() right after a failed flush: the poisoned range's records
+    vanish with the rest of the prefix, pre-failure payloads stay
+    fetchable, and fresh refs keep working on the rebased trace."""
+    ex = LocalExecutor(1, mode="plan", backend="serial")
+    wf = bind.Workflow(n_nodes=1, executor=ex)
+
+    def seed(wf):
+        keep = wf.array(np.full(4, 2.0), name="keep")
+        scale(keep, 3.0)
+        return keep
+
+    keep = _recorded(ex, wf, seed)
+    ex.flush()
+    keep_head = keep.ref.head
+
+    _recorded(ex, wf, lambda wf: bomb(keep, 0.0))
+    with pytest.raises(ValueError):
+        ex.flush(protect_inputs=True)
+
+    removed = ex.compact(wf)
+    assert removed == 2 and len(wf.ops) == 0
+    np.testing.assert_array_equal(np.asarray(ex.value(keep_head)),
+                                  np.full(4, 6.0))
+
+    def cont(wf):
+        c = wf.array(np.full(4, 4.0), name="cont")
+        scale(c, 2.5)
+        return c
+
+    c = _recorded(ex, wf, cont)
+    ex.flush()
+    np.testing.assert_array_equal(np.asarray(ex.value(c.ref.head)),
+                                  np.full(4, 10.0))
+
+
+def test_compacted_version_lookup():
+    """Ref.version() stays index-faithful after compaction: retained
+    indices resolve, compacted ones raise IndexError."""
+    ex = LocalExecutor(1, mode="plan", backend="serial")
+    wf = bind.Workflow(n_nodes=1, executor=ex)
+    x = _recorded(ex, wf, lambda wf: wf.array(np.ones(2), name="x"))
+    for _ in range(3):
+        _recorded(ex, wf, lambda wf: scale(x, 2.0))
+    ex.flush()
+    assert x.ref.version(2).index == 2
+    ex.compact(wf)
+    assert x.ref.version(3) is x.ref.head
+    with pytest.raises(IndexError):
+        x.ref.version(1)
 
 
 def test_concurrent_fetch_and_stats_during_streaming():

@@ -120,11 +120,13 @@ def test_ring_cache_matches_full_cache_swa(rng):
 
 import concurrent.futures
 import threading
+import time
 
 from _serve_ops import bomb, decay, ref_decay
 from repro import core as bind
 from repro.core import LocalExecutor
-from repro.serve import ServingRuntime, SessionPoisoned
+from repro.serve import (RuntimeClosed, RuntimeOverloaded, ServingRuntime,
+                         SessionPoisoned)
 
 SERVE_BACKENDS = ["serial", "threads", "fused", "procs"]
 
@@ -207,6 +209,8 @@ def test_prefix_cache_replays_streamed_step_plans():
     recorded segment boundaries* when a later burst flushes several steps
     as one program — zero new plan builds, one program-cache hit per
     segment."""
+    bind.clear_plan_cache()       # counters below must not be satisfied by
+    bind.clear_program_cache()    # identical plans cached by earlier tests
     ex = LocalExecutor(1, mode="plan", backend="serial", stitch=True,
                        prefix_cache=True)
     wf = bind.Workflow(n_nodes=1, executor=ex)
@@ -354,3 +358,216 @@ def test_op_failure_mid_flush_keeps_runtime_serving():
             2.0 * 0.99 + 1.0)
         st = rt.executor.stats
         assert sum(st.wavefronts) == st.ops_executed
+
+
+# ===========================================================================
+# Overload safety (PR 9): backpressure + load-shed, flush-failure bisection,
+# bounded trace growth, and the serve-layer lifecycle bugfixes.
+# ===========================================================================
+
+
+@pytest.mark.parametrize("backend", SERVE_BACKENDS)
+def test_poison_pill_bisection_attribution(backend):
+    """One poison-pill request in a batch of five concurrent sessions must
+    poison ONLY its own session: the failed batch flush is bisected, the
+    four innocent requests complete with values byte-identical to the
+    serial reference, and the culprit's future carries the op failure."""
+    n = 5
+    rt = ServingRuntime(n_nodes=2, backend=backend, autostart=False)
+    try:
+        sessions = [rt.session() for _ in range(n)]
+
+        def make_step(i):
+            def step(s):
+                s.state["x"] = s.array(np.arange(6.0) + i, name="x",
+                                       rank=i % 2)
+                if i == 2:
+                    bomb(s.state["x"], 0.0)
+                else:
+                    decay(s.state["x"], 0.5)
+                return s.state["x"]
+            return step
+
+        futs = [sessions[i].submit(make_step(i)) for i in range(n)]
+        rt.start()
+        for i, f in enumerate(futs):
+            if i == 2:
+                # procs surfaces worker-side failures as RuntimeError
+                with pytest.raises((ValueError, RuntimeError)):
+                    f.result(timeout=60)
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(f.result(timeout=60)),
+                    ref_decay(np.arange(6.0) + i, 0.5, 1),
+                    err_msg=f"{backend}: innocent session {i} diverged")
+        assert sessions[2].poisoned is not None
+        assert all(sessions[i].poisoned is None for i in (0, 1, 3, 4))
+        m = rt.metrics
+        assert m.bisections == 1
+        assert m.bisect_probes >= 2
+        assert m.requests_salvaged == n - 1
+        assert m.requests_completed == n - 1
+        assert m.requests_failed == 1
+
+        # the culprit's session rejects further submits; innocents serve on
+        with pytest.raises(SessionPoisoned):
+            sessions[2].submit(make_step(2))
+        assert rt.metrics.requests_rejected == 1
+
+        def again(s):
+            decay(s.state["x"], 0.5)
+            return s.state["x"]
+
+        np.testing.assert_array_equal(
+            np.asarray(sessions[0].submit(again).result(timeout=60)),
+            ref_decay(np.arange(6.0), 0.5, 2))
+        st = rt.executor.stats
+        assert sum(st.wavefronts) == st.ops_executed
+    finally:
+        rt.close()
+
+
+def test_overload_shed_and_blocking_submit():
+    """A full admission queue (or session in-flight budget) sheds the
+    newest submit with the retriable RuntimeOverloaded; ``timeout=`` blocks
+    for space and sheds only at the deadline; the shed/queue-depth gauges
+    and the (previously missing) requests_rejected all appear in the
+    metrics summary."""
+    rt = ServingRuntime(backend="serial", autostart=False, max_queue=3,
+                        max_inflight=2)
+    try:
+        s1, s2 = rt.session(), rt.session()
+        noop = lambda sess: None
+        f1, f2 = s1.submit(noop), s1.submit(noop)
+        with pytest.raises(RuntimeOverloaded):
+            s1.submit(noop)              # per-session in-flight cap
+        f3 = s2.submit(noop)
+        with pytest.raises(RuntimeOverloaded):
+            s2.submit(noop)              # queue bound (reject-newest)
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeOverloaded):
+            s2.submit(noop, timeout=0.2)
+        assert time.monotonic() - t0 >= 0.15   # blocked before shedding
+        m = rt.metrics
+        assert m.requests_shed == 3
+        assert m.queue_depth_hwm == 3
+        rt.start()
+        for f in (f1, f2, f3):
+            f.result(timeout=60)
+        # queue drained: a blocking submit now finds space and completes
+        s2.submit(noop, timeout=30).result(timeout=60)
+        summary = rt.metrics.summary()
+        for key in ("requests_rejected", "requests_shed", "queue_depth_hwm",
+                    "bisections", "requests_salvaged", "compactions",
+                    "trace_ops_hwm"):
+            assert key in summary, f"summary missing {key}"
+        # shed requests are not poisonings: both sessions stayed healthy
+        assert s1.poisoned is None and s2.poisoned is None
+    finally:
+        rt.close()
+
+
+def test_close_unstarted_runtime_resolves_queued_futures():
+    """close() on a never-started runtime must not strand queued requests:
+    their futures resolve (cancelled), and later submits see
+    RuntimeClosed."""
+    rt = ServingRuntime(backend="serial", autostart=False)
+    s = rt.session()
+    futs = [s.submit(lambda sess: None) for _ in range(3)]
+    rt.close()
+    for f in futs:
+        assert f.done()
+        assert f.cancelled()
+    assert rt.metrics.requests_cancelled == 3
+    with pytest.raises(RuntimeClosed):
+        s.submit(lambda sess: None)
+
+
+def test_close_drains_admitted_requests():
+    """A started runtime's close() drains the queue before the thread
+    exits: everything admitted resolves with its value."""
+    rt = ServingRuntime(backend="serial", autostart=False)
+    s = rt.session()
+
+    def step(sess):
+        if "x" not in sess.state:
+            sess.state["x"] = sess.array(np.full(4, 1.0), name="x")
+        decay(sess.state["x"], 0.5)
+        return sess.state["x"]
+
+    futs = [s.submit(step) for _ in range(3)]
+    rt.start()
+    rt.close()
+    for f in futs:
+        assert f.done()
+    np.testing.assert_array_equal(np.asarray(futs[-1].result(timeout=1)),
+                                  ref_decay(np.full(4, 1.0), 0.5, 3))
+
+
+def test_dead_serving_loop_surfaces_at_submit():
+    """An exception escaping _next_batch (outside the batch try) must not
+    kill the serving thread silently: queued futures fail, and the next
+    submit raises RuntimeClosed carrying the loop error as __cause__."""
+    rt = ServingRuntime(backend="serial", autostart=False)
+    s = rt.session()
+    fut = s.submit(lambda sess: None)
+
+    def boom():
+        raise RuntimeError("loop infrastructure failure")
+
+    rt._next_batch = boom
+    rt.start()
+    with pytest.raises(RuntimeClosed):
+        fut.result(timeout=60)
+    rt._thread.join(60)
+    with pytest.raises(RuntimeClosed) as exc_info:
+        s.submit(lambda sess: None)
+    assert isinstance(exc_info.value.__cause__, RuntimeError)
+    assert "loop infrastructure" in str(exc_info.value.__cause__)
+    rt.close()       # idempotent on a dead runtime
+
+
+@pytest.mark.parametrize("backend", SERVE_BACKENDS)
+def test_steady_state_trace_stays_bounded(backend):
+    """A long-lived session must not grow the shared trace without bound:
+    compaction keeps len(wf.ops) under the threshold across steady-state
+    steps, the relocatable program cache keeps hitting across compactions,
+    and the final value is byte-identical to the serial reference."""
+    from repro.core.program import PROGRAM_CACHE_STATS
+
+    warm, steps = 5, 30
+    rt = ServingRuntime(n_nodes=1, backend=backend, admission_window=0.0,
+                        compact_threshold=12)
+    try:
+        s = rt.session()
+
+        def step(sess):
+            if "x" not in sess.state:
+                sess.state["x"] = sess.array(np.full(8, 1.0), name="x")
+            decay(sess.state["x"], 0.5)
+            return sess.state["x"]
+
+        for _ in range(warm):
+            s.submit(step).result(timeout=60)
+        builds0 = PROGRAM_CACHE_STATS["misses"]
+        sizes = []
+        for _ in range(steps):
+            np.testing.assert_array_equal(
+                np.asarray(s.submit(step).result(timeout=60))[:1],
+                ref_decay(np.full(1, 1.0), 0.5, len(sizes) + warm + 1))
+            sizes.append(len(rt._wf.ops))
+        assert max(sizes) <= 12, f"trace grew to {max(sizes)} ops"
+        m = rt.metrics
+        assert m.compactions >= 2
+        assert m.ops_compacted > 0
+        assert m.trace_ops_hwm <= 12
+        # warm loop keeps replaying cached plans across compactions:
+        # no (or almost no) new plan builds after warm-up, even though
+        # compaction rebased every op id and version index underneath
+        assert PROGRAM_CACHE_STATS["misses"] - builds0 <= 2
+        np.testing.assert_array_equal(
+            np.asarray(s.submit(lambda sess: sess.state["x"]
+                                ).result(timeout=60)),
+            ref_decay(np.full(8, 1.0), 0.5, warm + steps))
+    finally:
+        rt.close()
