@@ -66,6 +66,15 @@
     ``stitched_vs_unstitched_speedup ≥ 1.3`` is the CI-asserted
     acceptance bar;
 
+3d. mesh pallas chain dispatch (``bench="mesh_chain_pallas"``): a width-1
+    kernel-tagged scan chain through the mesh backend's
+    one-``pallas_call``-per-chain path vs calling the identical compiled
+    executable by hand.  The measured gap is the runtime's whole dispatch
+    tax (plan-cache hit + chain staging + commit/GC accounting);
+    ``mesh_dispatch_overhead_vs_handwritten ≤ 1.1`` is the CI-asserted bar
+    on multi-device runners, with a ``skipped`` row on single-device hosts
+    (pallas lowering is auto-armed only when a real device axis exists);
+
 4. multi-versioning memory overhead: peak live payloads vs the
    single-version working set, with and without version GC (checked in
    both executor modes);
@@ -134,12 +143,13 @@ def _chain_exec_time(mode: str, tile: int, n_ops: int,
         return time.perf_counter() - t0
 
 
-def _wide_exec_time(backend, width: int, depth: int, tile: int) -> float:
+def _wide_exec_time(backend, width: int, depth: int, tile: int,
+                    topo=None) -> float:
     """Seconds in ``sync()`` for ``depth`` levels of ``width`` independent
     same-signature jax ops — the fused/thread backends' target shape."""
     import jax.numpy as jnp
 
-    ex = bind.LocalExecutor(1, mode="plan", backend=backend)
+    ex = bind.LocalExecutor(1, mode="plan", backend=backend, topology=topo)
     with bind.Workflow(executor=ex) as wf:
         xs = [wf.array(jnp.ones((tile, tile), jnp.float32), f"x{i}")
               for i in range(width)]
@@ -216,6 +226,30 @@ def _stitched_chain_exec_time(backend, stitch: bool, width: int, depth: int,
             np.asarray(wf.fetch(y))
         t += time.perf_counter() - t0
         return t / n_programs
+
+
+def _mesh_chain_exec_time(backend, depth: int, tile: int, cache) -> float:
+    """Seconds in ``sync()`` + flush for a width-1 kernel-tagged scan chain
+    — the mesh backend's pallas target shape (the whole run is ONE compiled
+    ``pallas_call`` executable).  The exterior operand is chain-invariant
+    (one handle reused every level → ``single`` layout), so the measured
+    gap against the handwritten call is pure runtime dispatch, not operand
+    restaging."""
+    import jax.numpy as jnp
+    from repro.kernels.linear_scan.ops import scan_step
+
+    ex = bind.LocalExecutor(1, mode="plan", backend=backend,
+                            executable_cache=cache)
+    with bind.Workflow(executor=ex) as wf:
+        y = wf.array(jnp.ones((tile, tile), jnp.float32), "y")
+        x = wf.array(jnp.full((tile, tile), 1.0001, jnp.float32), "x")
+        for _ in range(depth):
+            wf.call(scan_step, (y, 0.5, x), name="scan_step")
+        t0 = time.perf_counter()
+        wf.sync()
+        ex.flush()
+        np.asarray(wf.fetch(y))         # materialise the async jax result
+        return time.perf_counter() - t0
 
 
 def _procs_wide_exec_time(backend, n_nodes: int, width: int, depth: int,
@@ -442,26 +476,51 @@ def run(quick: bool = False) -> list[dict]:
     # its own bench below — this workload is a single signature chain and
     # would otherwise collapse into one scan call).
     width, depth, tile = (8, 10, 16) if quick else (32, 20, 16)
-    reps = 2 if quick else 3
+    # enough interleaved rounds that the threads-vs-serial bar below is a
+    # paired comparison, not a host-noise sample (the shape is ms-scale)
+    reps = 7
+    # Calibrate a topology from this host's measured streaming rate so the
+    # threads backend seeds its dispatch threshold from reality instead of
+    # the static default — µs-scale bodies like this shape then delegate
+    # the whole plan to the serial loop (the old width-32 soft spot where
+    # threads lost to serial by paying generic per-level inline dispatch).
+    from repro.launch.mesh import make_topology
+
+    y_cal = np.ones((256, 256))
+    t0 = time.perf_counter()
+    for _ in range(64):
+        y_cal = y_cal * 1.0000001
+    topo_cal = make_topology("flat", 1).calibrate(
+        [{"flops": 64 * 256 * 256, "seconds": time.perf_counter() - t0}])
+    threads_cal = bind.ThreadPoolBackend()          # auto threshold
     backends = {"serial": bind.get_backend("serial"),
-                "threads": bind.get_backend("threads"),
+                "threads": threads_cal,
                 "fused": bind.FusedBatchBackend(min_chain_levels=0)}
-    for backend in backends.values():              # warm caches per backend
-        _wide_exec_time(backend, 4, 2, tile)
-        _wide_exec_time(backend, width, depth, tile)
+    topos = {"threads": topo_cal}
+    for n, backend in backends.items():            # warm caches per backend
+        _wide_exec_time(backend, 4, 2, tile, topo=topos.get(n))
+        _wide_exec_time(backend, width, depth, tile, topo=topos.get(n))
     t_best = {n: float("inf") for n in backends}   # interleaved rounds again
     fused_counts = (0, 0)
     for _ in range(reps):
         for n, backend in backends.items():
             if n == "fused":
                 b0, o0 = backend.batches_dispatched, backend.ops_fused
-            t_best[n] = min(t_best[n], _wide_exec_time(backend, width, depth, tile))
+            t_best[n] = min(t_best[n], _wide_exec_time(
+                backend, width, depth, tile, topo=topos.get(n)))
             if n == "fused":
                 # per-run deltas (the workload is deterministic, so every
                 # rep fuses identically) — never the cumulative counters
                 fused_counts = (backend.batches_dispatched - b0,
                                 backend.ops_fused - o0)
     n_ops = width * depth
+    # below break-even, the backend must have auto-inlined or delegated —
+    # and with it, threads may no longer lose to serial on this shape
+    assert threads_cal.plans_delegated + threads_cal.inlined_levels > 0, \
+        "threads backend pooled a below-threshold plan"
+    threads_speedup = t_best["serial"] / max(t_best["threads"], 1e-9)
+    assert threads_speedup >= 0.9, (
+        f"threads worse than serial on width-{width}: {threads_speedup:.2f}x")
     for name, backend in backends.items():
         row = {
             "bench": "backend_parallel", "backend": name,
@@ -470,6 +529,10 @@ def run(quick: bool = False) -> list[dict]:
         }
         if name == "fused":
             row["batches_dispatched"], row["ops_fused"] = fused_counts
+        if name == "threads":
+            row["dispatch_threshold"] = threads_cal._threshold
+            row["plans_delegated"] = threads_cal.plans_delegated
+            row["threads_vs_serial_speedup"] = round(threads_speedup, 2)
         rows.append(row)
 
     # 2b. process-pool wavefront scaling: the same wide shape but with
@@ -656,6 +719,60 @@ def run(quick: bool = False) -> list[dict]:
             row["stitched_vs_unstitched_speedup"] = round(
                 un_us / max(st_us, 1e-9), 2)
         rows.append(row)
+
+    # 3d. mesh chain pallas dispatch overhead: the mesh backend compiles a
+    #     kernel-tagged chain into ONE pallas executable; this prices what
+    #     the runtime adds on top of calling that identical executable by
+    #     hand (plan-cache hit, chain staging, commit/GC accounting).  The
+    #     bar — ``mesh_dispatch_overhead_vs_handwritten <= 1.1`` — is
+    #     CI-asserted on multi-device runners where pallas lowering is
+    #     auto-armed; single-device hosts emit a skipped row (the mesh
+    #     backend would just take the generic fused path there).
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.linear_scan.ops import scan_step
+
+    n_dev = len(jax.devices())
+    depth_m, tile_m = (64, 768) if quick else (64, 1024)
+    if n_dev < 2:
+        rows.append({
+            "bench": "mesh_chain_pallas", "skipped": "single-device host",
+            "devices": n_dev, "depth": depth_m, "tile": tile_m,
+        })
+    else:
+        cache_m = bind.ExecutableCache()
+        mesh_b = bind.MeshBackend()             # pallas auto-armed: >= 2 dev
+        reps_m = 4 if quick else 6
+        _mesh_chain_exec_time(mesh_b, depth_m, tile_m, cache_m)  # warm
+        assert mesh_b.pallas_chains_dispatched >= 1, "chain did not lower"
+        # hand-written baseline: the very executable the backend compiled,
+        # resolved from the same cache (compiles stays put) and called raw
+        y0 = jnp.ones((tile_m, tile_m), jnp.float32)
+        x_m = jnp.full((tile_m, tile_m), 1.0001, jnp.float32)
+        hand = cache_m.lookup_chain_pallas(
+            scan_step, ("single", "const", "single"), depth_m, 0,
+            [y0, 0.5, x_m])
+        np.asarray(hand(y0, 0.5, x_m))                           # warm
+        assert cache_m.compiles == 1, "baseline missed the backend's cache"
+        t_mesh = t_hand = float("inf")
+        for _ in range(reps_m):                 # interleaved best-of-N
+            t_mesh = min(t_mesh, _mesh_chain_exec_time(
+                mesh_b, depth_m, tile_m, cache_m))
+            t0 = time.perf_counter()
+            np.asarray(hand(y0, 0.5, x_m))
+            t_hand = min(t_hand, time.perf_counter() - t0)
+        rows.append({
+            "bench": "mesh_chain_pallas", "backend": "mesh",
+            "devices": n_dev, "depth": depth_m, "tile": tile_m,
+            "pallas_chains_dispatched": mesh_b.pallas_chains_dispatched,
+            "ops_pallas": mesh_b.ops_pallas,
+            "compiles": cache_m.compiles,
+            "mesh_us_per_op": round(t_mesh / depth_m * 1e6, 2),
+            "handwritten_us_per_op": round(t_hand / depth_m * 1e6, 2),
+            # acceptance bar (CI-asserted on multi-device runners)
+            "mesh_dispatch_overhead_vs_handwritten": round(
+                t_mesh / max(t_hand, 1e-9), 3),
+        })
 
     # 4. versioning memory: GC keeps the working set O(1), not O(#versions) —
     #    in both executor modes.

@@ -67,6 +67,7 @@ def main() -> None:
                                       "procs_calibration",
                                       "chain_fused", "binop_chain_fused",
                                       "stitched_chain_fused",
+                                      "mesh_chain_pallas",
                                       "versioning_memory",
                                       "fault_recovery", "serving")]
     if quick and dag_rows:

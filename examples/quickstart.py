@@ -4,7 +4,10 @@ Classical sequential code over versioned arrays; placement via scope
 guards; transfers, collectives and parallelism are the runtime's problem —
 exactly the paper's pitch.  Sections 4-7 show the execution machinery:
 compiled-plan replay, pluggable backends, program-level stitching with the
-program-trace cache, and the topology cost model.
+program-trace cache, and the topology cost model.  Sections 8-11 cover
+fault tolerance, real parallelism and serving; section 12 lowers the same
+compiled plan onto a real jax device mesh (shard_map collectives + pallas
+kernel chains).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -401,6 +404,91 @@ def main() -> None:
               f"{m.compactions} compactions kept the trace at "
               f"<= {m.trace_ops_hwm} ops across "
               f"{m.requests_completed} requests")
+
+    # 12. lowering onto a real device axis: backend="mesh" executes the
+    #     SAME compiled plan on a jax device mesh.  Plan ranks map to the
+    #     mesh axis; broadcast ships run as log-depth shard_map collective
+    #     rounds (tree / ring / hierarchical, picked from the topology
+    #     model); kernel-tagged chains (``fn.__bind_kernel__``) compile
+    #     into ONE pallas executable for the whole run.  Values, stats and
+    #     the transfer stream stay byte-identical to the simulated
+    #     backends — the frontend replays the plan's accounting virtually
+    #     while the collectives move the actual bits.  Without a device
+    #     axis (run with XLA_FLAGS=--xla_force_host_platform_device_count=4
+    #     to fake one on CPU) the backend degrades to the fused path —
+    #     same plan, same answers.
+    #
+    #     backend   level dispatch              ships          sweet spot
+    #     -------   ------------------------    -----------    ------------------
+    #     serial    op-at-a-time python         simulated      debugging, small DAGs
+    #     threads   pool per wide level         simulated      GIL-releasing bodies
+    #     fused     one vmapped call per level  simulated      many small jax ops
+    #               (chains: one lax.scan)
+    #     procs     one OS worker per rank      shared mem     GIL-holding NumPy
+    #     mesh      fused + pallas chains       shard_map      real device axes
+    import jax
+
+    from repro.kernels.gemm.ops import gemm_tile
+
+    n_dev = len(jax.devices())
+    mesh_b = bind.MeshBackend()
+    ex12 = bind.LocalExecutor(4, collective_mode="tree", mode="plan",
+                              backend=mesh_b)
+    T = 32
+    rng12 = np.random.default_rng(12)
+    At = [[jnp.asarray(rng12.normal(size=(T, T)), jnp.float32)
+           for _ in range(2)] for _ in range(2)]
+    Bt = [[jnp.asarray(rng12.normal(size=(T, T)), jnp.float32)
+           for _ in range(2)] for _ in range(2)]
+    with bind.Workflow(n_nodes=4, executor=ex12) as wf:
+        # distributed GEMM: operand tiles live where they were produced,
+        # each C tile accumulates on its own rank — every remote operand
+        # read becomes a broadcast ship the planner derives (and the mesh
+        # backend runs as a collective when a device axis exists)
+        a12 = [[wf.array(At[i][k], f"A{i}{k}", rank=2 * i + k)
+                for k in range(2)] for i in range(2)]
+        b12 = [[wf.array(Bt[k][j], f"B{k}{j}", rank=2 * k + j)
+                for j in range(2)] for k in range(2)]
+        c12 = [[wf.array(jnp.zeros((T, T), jnp.float32), f"C{i}{j}",
+                         rank=2 * i + j) for j in range(2)] for i in range(2)]
+        for i in range(2):
+            for j in range(2):
+                with bind.node(2 * i + j):
+                    for k in range(2):      # 2-level gemm_tile kernel chain
+                        wf.call(gemm_tile, (c12[i][j], a12[i][k], b12[k][j]),
+                                name="gemm_tile")
+        wf.sync()
+        for i in range(2):
+            for j in range(2):
+                want = At[i][0] @ Bt[0][j] + At[i][1] @ Bt[1][j]
+                np.testing.assert_allclose(np.asarray(wf.fetch(c12[i][j])),
+                                           np.asarray(want), rtol=1e-4)
+    # ... and a width-1 kernel-tagged scan chain: with a device axis the
+    # whole 8-level run dispatches as ONE compiled pallas executable
+    # (without one, as one jit(lax.scan) — same values either way)
+    from repro.kernels.linear_scan.ops import scan_step
+
+    ex12b = bind.LocalExecutor(1, mode="plan", backend=mesh_b)
+    with bind.Workflow(n_nodes=1, executor=ex12b) as wf:
+        y12 = wf.array(jnp.ones((T,), jnp.float32), "y")
+        x12 = wf.array(jnp.full((T,), 0.25, jnp.float32), "x")
+        for _ in range(8):
+            wf.call(scan_step, (y12, 0.5, x12), name="scan_step")
+        got = np.asarray(wf.fetch(y12))
+    ref12 = np.ones((T,), np.float32)
+    for _ in range(8):
+        ref12 = scan_step(ref12, np.float32(0.5), np.full((T,), 0.25,
+                                                          np.float32))
+    np.testing.assert_array_equal(got, ref12)
+
+    arm = ("collectives ACTIVE" if mesh_b.ships_lowered
+           else "fused fallback (no device axis)")
+    print(f"mesh backend on {n_dev} device(s): {arm} — "
+          f"{mesh_b.ships_lowered} ships lowered / "
+          f"{mesh_b.ships_simulated} simulated "
+          f"(schedule={mesh_b._schedule_eff}), "
+          f"{mesh_b.pallas_chains_dispatched} pallas chain(s); "
+          f"transfer stream identical to serial by construction")
     print("OK")
 
 

@@ -57,4 +57,20 @@ def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
-__all__ = ["axis_size", "shard_map"]
+def import_pallas():
+    """The ``jax.experimental.pallas`` module, or ``None`` when absent.
+
+    Pallas has lived at ``jax.experimental.pallas`` since 0.4.x, but some
+    CPU-only wheels omit the Triton/Mosaic backends entirely — callers that
+    can fall back to a plain XLA path (the mesh backend's chain lowering)
+    probe through here instead of importing at module scope, so the
+    executor never hard-depends on the kernel toolchain being present.
+    """
+    try:
+        from jax.experimental import pallas as pl  # noqa: PLC0415
+    except ImportError:
+        return None
+    return pl
+
+
+__all__ = ["axis_size", "import_pallas", "shard_map"]

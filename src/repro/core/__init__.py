@@ -51,6 +51,7 @@ from .backends import (
     BACKENDS,
     Backend,
     FusedBatchBackend,
+    MeshBackend,
     ProcessPoolBackend,
     SerialPlanBackend,
     ThreadPoolBackend,
@@ -77,7 +78,7 @@ __all__ = [
     "probe_plan", "resolve_plan",
     "EXEC_CACHE", "ExecutableCache",
     "BACKENDS", "Backend", "SerialPlanBackend", "ThreadPoolBackend",
-    "FusedBatchBackend", "ProcessPoolBackend", "get_backend",
+    "FusedBatchBackend", "MeshBackend", "ProcessPoolBackend", "get_backend",
     "FaultInjector", "RankFailure", "PlanCheckpoint", "build_subset_plan",
     "choose_replacement", "plan_recovery",
 ]

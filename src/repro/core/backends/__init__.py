@@ -23,7 +23,12 @@ transfers, live-footprint accounting, stats.  A **backend** owns only the
   *process* per simulated rank, rank-local stores in shared memory, ships
   as real cross-process memcpys — GIL-free parallelism for NumPy op bodies
   the ``threads`` backend cannot overlap, plus *real* worker-kill fault
-  injection feeding the recovery machinery.
+  injection feeding the recovery machinery;
+* ``"mesh"``    — :class:`MeshBackend`: the plan runs on a real jax device
+  mesh — ship schedules lower to ``shard_map``/``ppermute`` collectives
+  (:mod:`repro.core.lowering`) and kernel-tagged chains compile into one
+  ``pallas_call`` each; falls back to ``fused`` behaviour on single-device
+  hosts.
 
 All backends replay the same plan against the same frontend state, so
 payload values and the transfer event stream are identical across backends;
@@ -37,6 +42,7 @@ from .base import Backend, BatchBucket, BatchSlice, spill_dead_buckets
 from .serial import SerialPlanBackend
 from .threadpool import ThreadPoolBackend
 from .fused import FusedBatchBackend
+from .mesh import MeshBackend
 from .procs import ProcessPoolBackend
 
 BACKENDS: dict[str, type] = {
@@ -44,6 +50,7 @@ BACKENDS: dict[str, type] = {
     ThreadPoolBackend.name: ThreadPoolBackend,
     FusedBatchBackend.name: FusedBatchBackend,
     ProcessPoolBackend.name: ProcessPoolBackend,
+    MeshBackend.name: MeshBackend,
 }
 
 
@@ -61,5 +68,6 @@ def get_backend(spec) -> Backend:
 
 
 __all__ = ["Backend", "BatchBucket", "BatchSlice", "SerialPlanBackend",
-           "ThreadPoolBackend", "FusedBatchBackend", "ProcessPoolBackend",
-           "BACKENDS", "get_backend", "spill_dead_buckets"]
+           "ThreadPoolBackend", "FusedBatchBackend", "MeshBackend",
+           "ProcessPoolBackend", "BACKENDS", "get_backend",
+           "spill_dead_buckets"]

@@ -217,19 +217,32 @@ class FusedBatchBackend(Backend):
                 and chain.fn not in self._no_chain
                 and self._chain_inputs_jax(ex, plan, chain))
 
+    def _delegate_wholesale(self, ex, wf, plan) -> bool:
+        """Serial-delegation decision (subclass override point).
+
+        Wholesale delegation is only safe while the stores cannot hold
+        lazy rows — the serial loop feeds payloads to op bodies (and
+        ships them cross-rank) without materialising.  While any bucket
+        has live rows, the level loop runs instead, materialising at
+        every boundary.
+        """
+        if plan.has_fusion_groups or ex._lazy_buckets:
+            return False
+        min_chain = self.min_chain_levels
+        return not min_chain or not any(
+            self._chain_maybe_viable(ex, plan, c) for c in plan.chains)
+
+    def _apply_ships(self, ex, p) -> None:
+        """Concretise and replay one op's ship schedule (override point:
+        the mesh backend lowers this onto device collectives)."""
+        self._materialize_shipped(ex, p)
+        apply_ships(ex, p)
+
     def execute(self, ex, wf, plan) -> None:
         min_chain = self.min_chain_levels
-        if not plan.has_fusion_groups and not ex._lazy_buckets:
-            # wholesale delegation is only safe while the stores cannot hold
-            # lazy rows — the serial loop feeds payloads to op bodies (and
-            # ships them cross-rank) without materialising.  While any
-            # bucket has live rows, stay on the level loop below, which
-            # materialises at every boundary.
-            if not min_chain or not any(
-                    self._chain_maybe_viable(ex, plan, c)
-                    for c in plan.chains):
-                self._serial.execute(ex, wf, plan)
-                return
+        if self._delegate_wholesale(ex, wf, plan):
+            self._serial.execute(ex, wf, plan)
+            return
         ops = wf.ops
         schedule = plan.schedule
         levels = plan.levels
@@ -266,8 +279,7 @@ class FusedBatchBackend(Backend):
         for idx in range(lo, hi):
             p = schedule[idx]
             if p.ships:
-                self._materialize_shipped(ex, p)
-                apply_ships(ex, p)
+                self._apply_ships(ex, p)
             node = ops[p.op_id]
             staged.append((p, node, gather_args(ex, p, node)))
         results = [_PENDING] * (hi - lo)
@@ -436,6 +448,21 @@ class FusedBatchBackend(Backend):
         concrete = [materialize(a) for a in column]
         return FLAT, concrete, concrete[0]
 
+    def _dispatch_chain(self, ex, chain, layout, width, n_levels, carry_pos,
+                        call_args, sig_args):
+        """Compile and run one eligible chain; returns the output buffer.
+
+        The single override point for subclasses that lower chains to a
+        different executable form (the mesh backend swaps in
+        ``lookup_chain_pallas`` for kernel-tagged bodies).  Raising any of
+        the scan-tracing error types makes :meth:`_run_chain` pin the fn to
+        per-level dispatch; everything before (eligibility, staging) and
+        after (ships, virtual commit/GC replay) is shared.
+        """
+        call = ex._exec_cache.lookup_chain(
+            chain.fn, layout, width, n_levels, carry_pos, sig_args)
+        return call(*call_args)
+
     def _run_chain(self, ex, ops, plan, chain) -> bool:
         """Dispatch a :class:`~repro.core.plan.ChainSlice` as one scan call.
 
@@ -593,10 +620,10 @@ class FusedBatchBackend(Backend):
                 layout.append(XS)
                 call_args.append(stacked)
                 sig_args.append(stacked)
-        call = ex._exec_cache.lookup_chain(
-            chain.fn, tuple(layout), width, n_levels, carry_pos, sig_args)
         try:
-            out = call(*call_args)
+            out = self._dispatch_chain(
+                ex, chain, tuple(layout), width, n_levels, carry_pos,
+                call_args, sig_args)
         except (jax.errors.JAXTypeError, TypeError, ValueError):
             # not scan-traceable: data-dependent control flow, or the carry
             # aval is not loop-invariant (fn changes shape/dtype).  Pin the
@@ -610,8 +637,7 @@ class FusedBatchBackend(Backend):
         for idx in first:
             p = schedule[idx]
             if p.ships:
-                self._materialize_shipped(ex, p)
-                apply_ships(ex, p)
+                self._apply_ships(ex, p)
         # --- replay commit/GC accounting in plan order -------------------
         # Interior writes never materialise, but their (uniform: the scan
         # carry aval is loop-invariant) sizes flow through the same

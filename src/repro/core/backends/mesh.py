@@ -1,0 +1,218 @@
+"""Device-mesh dispatch: plan ships become ``shard_map`` collectives and
+kernel-bodied chains become single ``pallas_call`` executables.
+
+Every other backend *simulates* the distributed machine the plan was
+compiled for — per-rank stores are dict entries, a ship is a dict insert.
+This backend executes the same plan against a **real jax device mesh**
+(CPU multi-device via ``XLA_FLAGS=--xla_force_host_platform_device_count``
+in tests/CI; on TPU the identical build runs un-interpreted):
+
+* **Ships** — plan ranks map 1:1 onto a named mesh axis ``"r"``.  Each
+  op's precomputed ship schedule is lowered to the log-depth ``ppermute``
+  broadcast rounds of :mod:`repro.core.lowering` (``tree`` / ``ring`` /
+  ``hierarchical``, selected by the executor's
+  :class:`~repro.launch.mesh.Topology` model), run inside one jitted
+  ``shard_map`` over a row-sharded staging buffer whose root row holds the
+  payload.  Destination ranks' stores then hold *their device's* broadcast
+  row — bitwise-identical bits that physically travelled the collective.
+* **Chains** — a :class:`~repro.core.plan.ChainSlice` whose op body
+  carries a ``__bind_kernel__`` tag (the executor-callable entry points of
+  ``repro.kernels.*.ops``) dispatches through
+  :meth:`~repro.core.executable_cache.ExecutableCache.lookup_chain_pallas`:
+  the whole chain compiles into ONE ``pallas_call`` whose kernel runs the
+  levels as a ``fori_loop`` — instead of a python-level ``lax.scan`` of
+  XLA calls.  Untagged bodies keep the generic scan path.
+
+The frontend contract is unchanged: commit/GC/transfer accounting is
+replayed virtually in plan order (the procs-backend pattern), so values,
+stats and the transfer-event stream stay **byte-identical to serial** and
+the backend passes the cross-backend conformance fuzzer unchanged.
+``ppermute`` moves bits without arithmetic and the pallas chain kernels
+are bitwise-stable in interpret mode, so parity is exact, not approximate.
+
+Graceful degradation (never an error):
+
+* fewer than 2 devices, or more plan ranks than devices → ships replay
+  simulated (inherited :class:`~.fused.FusedBatchBackend` behaviour);
+* a non-jax / empty payload, or a collective build failure → that ship
+  replays simulated;
+* an untagged chain body, width > 1, a non-width-1 layout, or a pallas
+  trace failure → that chain takes the generic ``jit(lax.scan)`` path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from ..lowering import broadcast_by_schedule, schedule_for_topology
+from ..stats import TransferEvent, _nbytes
+from .fused import CONST, SINGLE, XS, XS_CONST, FusedBatchBackend
+
+# layouts a width-1 pallas chain executable understands (FLAT/STACKED are
+# width>1 shapes; they keep the generic scan path)
+_PALLAS_LAYOUTS = frozenset((SINGLE, CONST, XS, XS_CONST))
+
+
+class MeshBackend(FusedBatchBackend):
+    """Execute a compiled plan on a real jax device mesh (see module doc).
+
+    ``schedule`` pins the ship-lowering collective (``"tree"`` | ``"ring"``
+    | ``"hierarchical"``); default derives it from the executor's topology
+    model via :func:`~repro.core.lowering.schedule_for_topology`.
+
+    ``pallas`` gates chain lowering: ``"auto"`` (default) enables it
+    exactly when ship lowering is active (≥ 2 devices — single-device
+    hosts fall back to ``fused`` wholesale), ``True`` forces it on any
+    host (interpret mode runs on one CPU device; the test suite uses this
+    to counter-assert dispatch without a multi-device subprocess), and
+    ``False`` disables it.
+    """
+
+    name = "mesh"
+
+    def __init__(self, min_batch: int = 2, min_chain_levels: int = 2, *,
+                 schedule: str | None = None, pallas="auto",
+                 interpret: bool = True):
+        super().__init__(min_batch, min_chain_levels)
+        self.schedule = schedule
+        self.pallas = pallas
+        self.interpret = interpret
+        self._devices = tuple(jax.devices())
+        self._active = False            # ship lowering armed for this plan?
+        self._schedule_eff = "tree"     # resolved per execute()
+        self._arity = 4
+        self._meshes: dict[int, Mesh] = {}
+        self._bcast_cache: dict[tuple, object] = {}
+        self._no_pallas: set = set()    # fns whose pallas lowering failed
+        # observability: counter-asserted by tests/benchmarks
+        self.ships_lowered = 0          # ship schedules run as collectives
+        self.ships_simulated = 0        # ship schedules replayed simulated
+        self.pallas_chains_dispatched = 0
+        self.ops_pallas = 0
+
+    # -- per-plan arming ------------------------------------------------------
+    def _pallas_enabled(self) -> bool:
+        if self.pallas == "auto":
+            return len(self._devices) >= 2
+        return bool(self.pallas)
+
+    def execute(self, ex, wf, plan) -> None:
+        self._active = (len(self._devices) >= 2
+                        and 2 <= ex.n_nodes <= len(self._devices))
+        if self._active:
+            topo = getattr(ex, "topology", None)
+            self._schedule_eff = (self.schedule
+                                  or schedule_for_topology(topo))
+            self._arity = max(2, int(getattr(topo, "arity", 4) or 4))
+        super().execute(ex, wf, plan)
+
+    def _delegate_wholesale(self, ex, wf, plan) -> bool:
+        # while lowering is armed, multi-rank plans stay on the level loop
+        # so their ships actually reach the collective path (serial replays
+        # ships inline, simulated)
+        if self._active and ex.n_nodes >= 2:
+            return False
+        return super()._delegate_wholesale(ex, wf, plan)
+
+    # -- ship lowering --------------------------------------------------------
+    def _mesh_for(self, n: int) -> Mesh:
+        mesh = self._meshes.get(n)
+        if mesh is None:
+            mesh = Mesh(np.array(self._devices[:n]), ("r",))
+            self._meshes[n] = mesh
+        return mesh
+
+    def _bcast_call(self, n: int, root: int, shape, dtype):
+        """Jitted ``shard_map`` broadcast over the ``n``-rank mesh axis,
+        cached per ``(n, root, schedule, shape, dtype)``."""
+        key = (n, root, self._schedule_eff, shape, str(dtype))
+        call = self._bcast_cache.get(key)
+        if call is None:
+            mesh = self._mesh_for(n)
+            sched, arity = self._schedule_eff, self._arity
+            spec = P("r", *(None,) * len(shape))
+
+            def body(x):
+                return broadcast_by_schedule(x, sched, "r", root=root,
+                                             arity=arity)
+
+            smapped = shard_map(body, mesh=mesh, in_specs=spec,
+                                out_specs=spec, check_vma=False)
+            call = (jax.jit(smapped), mesh, spec)
+            self._bcast_cache[key] = call
+        return call
+
+    def _broadcast_rows(self, payload, root: int, n: int):
+        """Run one rooted broadcast on the device mesh; returns the global
+        ``(n, *shape)`` result whose every row holds the payload's bits."""
+        call, mesh, spec = self._bcast_call(
+            n, root, payload.shape, payload.dtype)
+        # root row carries the payload, every other row is zeros — the
+        # collective must really move the bits (a broken schedule shows up
+        # as zero rows, not silently-correct replicas)
+        buf = jnp.zeros((n,) + payload.shape, payload.dtype)
+        buf = buf.at[root].set(payload)
+        buf = jax.device_put(buf, NamedSharding(mesh, spec))
+        return call(buf)
+
+    def _apply_ships(self, ex, p) -> None:
+        if not self._active:
+            super()._apply_ships(ex, p)
+            return
+        self._materialize_shipped(ex, p)
+        n = ex.n_nodes
+        stores, where = ex._stores, ex._where
+        events = ex._stats.transfers
+        base_round = ex._round_counter
+        wavefront = ex._wavefront_base + p.level - 1
+        for vkey, root, transfers in p.ships:
+            payload = stores[root][vkey]
+            rows = None
+            if isinstance(payload, jax.Array) and payload.size:
+                try:
+                    rows = self._broadcast_rows(payload, root, n)
+                except Exception:   # collective build/run failure: simulate
+                    rows = None
+            if rows is None:
+                self.ships_simulated += 1
+            else:
+                self.ships_lowered += 1
+            # virtual replay: the plan's precomputed transfer schedule is
+            # emitted verbatim (byte-identical stream); only the payload a
+            # destination rank holds differs — its own broadcast row
+            nb = _nbytes(payload)
+            ranks = where[vkey]
+            for src, dst, kind, rel in transfers:
+                stores[dst][vkey] = payload if rows is None else rows[dst]
+                ranks.add(dst)
+                ex._live_entries += 1
+                events.append(
+                    TransferEvent(vkey, src, dst, nb, base_round + rel,
+                                  kind, wavefront))
+
+    # -- chain lowering -------------------------------------------------------
+    def _dispatch_chain(self, ex, chain, layout, width, n_levels, carry_pos,
+                        call_args, sig_args):
+        if (width == 1 and chain.lowerable is not None
+                and chain.fn not in self._no_pallas
+                and self._pallas_enabled()
+                and set(layout) <= _PALLAS_LAYOUTS):
+            try:
+                call = ex._exec_cache.lookup_chain_pallas(
+                    chain.fn, layout, n_levels, carry_pos, sig_args,
+                    interpret=self.interpret)
+                out = call(*call_args)
+            except Exception:
+                # pallas trace/lowering failed for this body: pin the fn to
+                # the generic scan path (NOT _no_chain — the scan is fine)
+                self._no_pallas.add(chain.fn)
+            else:
+                self.pallas_chains_dispatched += 1
+                self.ops_pallas += n_levels
+                return out
+        return super()._dispatch_chain(ex, chain, layout, width, n_levels,
+                                       carry_pos, call_args, sig_args)

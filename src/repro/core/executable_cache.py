@@ -239,6 +239,88 @@ class ExecutableCache:
 
         return self._resolve(key, build)
 
+    def lookup_chain_pallas(self, fn: Callable, layout: tuple, n_levels: int,
+                            carry_pos: int, sig_args, *,
+                            interpret: bool = True) -> Callable:
+        """Resolve a *Pallas* chain executable: the whole ``n_levels`` run of
+        a width-1 kernel-bodied chain compiled into ONE ``pl.pallas_call``.
+
+        Where :meth:`lookup_chain` scans a python-level ``fn`` with
+        ``lax.scan`` (one XLA loop around per-level ops), this lowers the
+        chain *into* a Pallas kernel: every tensor operand becomes a kernel
+        ref, the levels run as a ``fori_loop`` over the refs (per-level
+        ``"xs"``/``"xs_const"`` operands are dynamic leading-dim loads), and
+        only the final carry is written out.  ``interpret=True`` executes
+        the kernel on CPU; on TPU the same build compiles for real.  Only
+        op bodies annotated ``__bind_kernel__`` (the executor-callable
+        entry points of ``repro.kernels.*.ops``) should be resolved here —
+        the tag asserts the body is a pure shape-preserving array function
+        a Pallas block can evaluate.
+
+        Layout vocabulary is the width-1 subset of :meth:`lookup_chain`:
+        ``"single"`` (carry or chain-invariant exterior), ``"xs"`` /
+        ``"xs_const"`` (per-level varying, stacked to ``(n_levels, ...)``),
+        and ``"const"``.  Constants are **static** here (they bake into the
+        kernel; the cache key carries their values) so the kernel body sees
+        exactly the python scalars serial replay passes — Pallas operands
+        would round-trip them through arrays and could flip a weak dtype.
+
+        Tracing/lowering failures follow the :meth:`_resolve` contract: the
+        entry is evicted and the caller falls back to the generic scan.
+        """
+        key = ((fn, "chain_pallas", layout, n_levels, carry_pos, interpret)
+               + tuple(("const", a) if lay == "const" else _abstract(a)
+                       for lay, a in zip(layout, sig_args)))
+        tensor_pos = tuple(i for i, lay in enumerate(layout)
+                           if lay != "const")
+        const_pos = tuple(i for i, lay in enumerate(layout)
+                          if lay == "const")
+
+        def build():
+            from repro.compat import import_pallas
+            pl = import_pallas()
+            if pl is None:
+                raise RuntimeError(
+                    "jax.experimental.pallas unavailable in this install")
+
+            def chain_call(*flat):
+                consts = {p: flat[p] for p in const_pos}
+
+                def kernel(*refs):
+                    out_ref = refs[-1]
+                    ref_of = dict(zip(tensor_pos, refs))
+
+                    def body(i, carry):
+                        call_args = []
+                        for p, lay in enumerate(layout):
+                            if p == carry_pos:
+                                call_args.append(carry)
+                            elif lay == "const":
+                                call_args.append(consts[p])
+                            elif lay in ("xs", "xs_const"):
+                                call_args.append(ref_of[p][i])
+                            else:               # "single": chain-invariant
+                                call_args.append(ref_of[p][...])
+                        out = fn(*call_args)
+                        if isinstance(out, tuple):
+                            out = out[0]        # chain ops write one payload
+                        return out
+
+                    out_ref[...] = jax.lax.fori_loop(
+                        0, n_levels, body, ref_of[carry_pos][...])
+
+                carry0 = flat[carry_pos]
+                return pl.pallas_call(
+                    kernel,
+                    out_shape=jax.ShapeDtypeStruct(carry0.shape,
+                                                   carry0.dtype),
+                    interpret=interpret,
+                )(*(flat[p] for p in tensor_pos))
+
+            return jax.jit(chain_call, static_argnums=const_pos)
+
+        return self._resolve(key, build)
+
     # -- entry construction ---------------------------------------------------
     def _build(self, key: tuple, fn: Callable, args) -> Callable:
         array_args = [a for a in args

@@ -160,6 +160,133 @@ def allreduce_by_schedule(
 
 
 # ---------------------------------------------------------------------------
+# Rooted broadcasts (the mesh backend's ship lowering)
+# ---------------------------------------------------------------------------
+# A plan ship moves one version from its *root* holder to the destination
+# ranks; the plan's TreeSchedule already fixes the accounting (the transfer
+# stream replayed by every backend).  These are the corresponding *physical*
+# schedules over a named mesh axis: every rank ends holding the root's
+# shard.  ``tree`` is the log-depth lowering of the plan's broadcast tree;
+# ``ring``/``hierarchical`` are the topology-model-selected alternatives
+# (neighbour fabrics / switch trees), value-identical by construction —
+# ppermute moves bytes, it never rounds.
+#
+# All three work from an arbitrary root by operating on *virtual* ranks
+# ``v = (idx - root) mod n`` (the root plays virtual rank 0), so the pair
+# lists are plain rotations of the root-0 schedules.
+
+def tree_broadcast_from(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
+    """Binary-tree broadcast from ``root`` (log₂ n ppermute rounds)."""
+    n = axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    v = (idx - root) % n
+    s = 1 << (int(math.ceil(math.log2(n))) - 1)
+    while s >= 1:
+        pairs = [((i + root) % n, (i + s + root) % n)
+                 for i in range(0, n - s, 2 * s)]
+        y = lax.ppermute(x, axis_name, pairs)
+        is_receiver = v % (2 * s) == s
+        x = jnp.where(is_receiver, y, x)
+        s //= 2
+    return x
+
+
+def ring_broadcast(x: jax.Array, axis_name: str, root: int = 0) -> jax.Array:
+    """Neighbour-only broadcast: n−1 single-hop rounds around the ring.
+
+    Linear depth but every round is a nearest-neighbour ppermute — the
+    right schedule when the topology model says distant hops are expensive
+    (a 1-D torus), and the baseline the tree must beat elsewhere.
+    """
+    n = axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    v = (idx - root) % n
+    for s in range(1, n):
+        y = lax.ppermute(x, axis_name,
+                         [((root + s - 1) % n, (root + s) % n)])
+        x = jnp.where(v == s, y, x)
+    return x
+
+
+def hierarchical_broadcast(x: jax.Array, axis_name: str, root: int = 0,
+                           *, arity: int = 4) -> jax.Array:
+    """Two-phase broadcast for switch-tree fabrics: leaders, then groups.
+
+    Virtual ranks split into groups of ``arity``; phase 1 tree-broadcasts
+    the root's shard across the group *leaders* (the cross-switch hops),
+    phase 2 tree-broadcasts inside every group concurrently (the cheap
+    intra-switch hops).  Cross-switch rounds drop to ⌈log₂⌈n/arity⌉⌉.
+    """
+    n = axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    v = (idx - root) % n
+    leaders = list(range(0, n, arity))
+    m = len(leaders)
+    if m > 1:                       # phase 1: binary tree over leaders
+        s = 1 << (int(math.ceil(math.log2(m))) - 1)
+        while s >= 1:
+            pairs = [((leaders[i] + root) % n,
+                      (leaders[i + s] + root) % n)
+                     for i in range(0, m - s, 2 * s)]
+            y = lax.ppermute(x, axis_name, pairs)
+            is_receiver = jnp.logical_and(v % arity == 0,
+                                          (v // arity) % (2 * s) == s)
+            x = jnp.where(is_receiver, y, x)
+            s //= 2
+    g = min(arity, n)               # phase 2: trees inside each group
+    s = 1 << max(0, int(math.ceil(math.log2(g))) - 1)
+    while s >= 1:
+        pairs = []
+        for lead in leaders:
+            size = min(arity, n - lead)
+            for i in range(0, size - s, 2 * s):
+                pairs.append(((lead + i + root) % n,
+                              (lead + i + s + root) % n))
+        if pairs:
+            y = lax.ppermute(x, axis_name, pairs)
+            x = jnp.where((v % arity) % (2 * s) == s, y, x)
+        s //= 2
+    return x
+
+
+SHIP_SCHEDULES = ("tree", "ring", "hierarchical")
+
+
+def broadcast_by_schedule(x: jax.Array, schedule: str, axis_name: str,
+                          root: int = 0, *, arity: int = 4) -> jax.Array:
+    """Dispatch a rooted broadcast by schedule name (value-identical)."""
+    if schedule == "tree":
+        return tree_broadcast_from(x, axis_name, root)
+    if schedule == "ring":
+        return ring_broadcast(x, axis_name, root)
+    if schedule == "hierarchical":
+        return hierarchical_broadcast(x, axis_name, root, arity=arity)
+    raise ValueError(f"unknown schedule {schedule!r}; one of {SHIP_SCHEDULES}")
+
+
+def schedule_for_topology(topology) -> str:
+    """Ship schedule the :class:`~repro.launch.mesh.Topology` model prefers.
+
+    Neighbour fabrics (``ring``) price distant hops by arc length — the
+    single-hop pipeline wins; switch trees (``fat-tree``) price cross-switch
+    hops double — the leader/group split wins; flat crossbars (and no
+    topology at all) take the paper's log-depth tree.
+    """
+    kind = getattr(topology, "kind", None)
+    if kind == "ring":
+        return "ring"
+    if kind == "fat-tree":
+        return "hierarchical"
+    return "tree"
+
+
+# ---------------------------------------------------------------------------
 # Whole-tree wrappers (operate on pytrees of gradients inside shard_map)
 # ---------------------------------------------------------------------------
 

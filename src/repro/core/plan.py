@@ -136,6 +136,23 @@ class ChainSlice:
     def n_levels(self) -> int:
         return len(self.members)
 
+    @property
+    def lowerable(self):
+        """Kernel-lowering tag of this chain's op body, or ``None``.
+
+        Op functions published as executor-callable kernel entry points
+        (``repro.kernels.*.ops``) carry a ``__bind_kernel__`` annotation
+        naming their lowering class (``"ewise"`` — shape-preserving
+        elementwise bodies; ``"dot"`` — tile-contraction bodies).  A
+        mesh-aware backend may compile a chain whose body carries the tag
+        into a single Pallas scan executable
+        (:meth:`~repro.core.executable_cache.ExecutableCache.lookup_chain_pallas`);
+        untagged bodies always take the generic ``jit(lax.scan)`` path.
+        Derived from ``fn`` so :meth:`ExecutionPlan.rebind` /
+        :meth:`~ExecutionPlan.rebind_ranks` preserve it for free.
+        """
+        return getattr(self.fn, "__bind_kernel__", None)
+
     def __repr__(self) -> str:
         return (f"ChainSlice({getattr(self.fn, '__name__', self.fn)!r}, "
                 f"{self.n_levels} levels x {self.width} ops "
@@ -161,11 +178,20 @@ class ExecutionPlan:
     ``jit(lax.scan)`` executable.  ``level_flops`` carries, per level, the
     critical-path compute (max over ranks of the summed ``OpNode.flops``
     placed on that rank) consumed by the topology cost model.
+
+    ``level_kernels`` is the lowerable-signature annotation: per level, the
+    ``__bind_kernel__`` tag when *every* op of the level shares one tagged
+    op function (the kernel entry points of ``repro.kernels.*.ops``), else
+    ``None`` — a mesh-aware backend consults it (and the equivalent
+    :attr:`ChainSlice.lowerable`) to decide which schedule slices may
+    compile onto Pallas executables.  Structure-derived, so both rebind
+    paths share it with the template.
     """
 
     __slots__ = ("schedule", "wavefront_counts", "n_rounds", "start", "end",
                  "n_nodes", "collective_mode", "total_writes", "levels",
-                 "level_groups", "has_fusion_groups", "chains", "level_flops")
+                 "level_groups", "has_fusion_groups", "chains", "level_flops",
+                 "level_kernels")
 
     def __init__(self, schedule, wavefront_counts, n_rounds, start, end,
                  n_nodes, collective_mode, level_flops=()):
@@ -184,6 +210,7 @@ class ExecutionPlan:
         self.chains = _signature_chains(schedule, self.levels)
         self.level_flops = tuple(level_flops) if level_flops else \
             (0,) * len(self.levels)
+        self.level_kernels = _level_kernels(schedule, self.levels)
 
     def __len__(self) -> int:
         return len(self.schedule)
@@ -288,6 +315,7 @@ class ExecutionPlan:
             for c in self.chains
             if not any(plan.schedule[m].ships
                        for lvl in c.members[1:] for m in lvl))
+        plan.level_kernels = self.level_kernels
         if wf is not None:
             acc: dict[int, dict[int, int]] = {}
             for p in plan.schedule:
@@ -333,7 +361,25 @@ class ExecutionPlan:
                                  for lvl in c.members[:-1] for m in lvl))
             for c in self.chains)
         plan.level_flops = self.level_flops
+        plan.level_kernels = self.level_kernels
         return plan
+
+
+def _level_kernels(schedule, levels) -> tuple:
+    """Per-level kernel-lowering tag (see :attr:`ExecutionPlan.level_kernels`).
+
+    A level is annotated only when all its ops share one op function that
+    carries ``__bind_kernel__`` — mixed or untagged levels get ``None``.
+    """
+    tags = []
+    for lo, hi in levels:
+        fn0 = schedule[lo].fn
+        tag = getattr(fn0, "__bind_kernel__", None)
+        if tag is not None and any(schedule[i].fn is not fn0
+                                   for i in range(lo + 1, hi)):
+            tag = None
+        tags.append(tag)
+    return tuple(tags)
 
 
 def _level_slices(schedule) -> tuple[tuple[int, int], ...]:

@@ -710,9 +710,25 @@ class LocalExecutor:
             if plan is not None:
                 self._run_planned(wf, pos, nxt, pin_of[nxt], preplan=plan)
             else:
-                # cold everywhere: build (and cache) the whole remainder
+                # cold at pos: when some *later* pending segment's own plan
+                # is already cached, build only up to the first seam and
+                # compose — the cached segments then replay as probe hits
+                # instead of being swallowed into a cold union rebuild
+                # (incremental stitching).  Probing a future segment with
+                # current holder state is speculative: a miss only costs
+                # the union build we were about to pay anyway, and the
+                # authoritative probe re-runs at the seam with true state.
                 nxt = end
-                self._run_planned(wf, pos, end, pin_of[end])
+                later = [b for b in bounds if b > pos]
+                if len(later) > 1:
+                    for lo, hi in zip(later, later[1:]):
+                        if probe_plan(wf, lo, hi, self.n_nodes,
+                                      self.collective_mode, self._where,
+                                      pin_of[hi],
+                                      rank_map=self._rank_map) is not None:
+                            nxt = later[0]
+                            break
+                self._run_planned(wf, pos, nxt, pin_of[nxt])
             pos = nxt
 
     # -- planned replay (default) ---------------------------------------------

@@ -53,3 +53,27 @@ def flash_attention(
         bq=bq_, bkv=bkv_, interpret=interpret,
     )
     return out[:, :, :sq, :]
+
+
+# --------------------------------------------------------------------------
+# Executor-callable entry point
+#
+# ``attn_step`` accumulates one key/value block's attention contribution
+# into a running output tile — the chained form a Bind workflow records
+# when streaming blocks through a fixed query tile.  The ``"dot"`` tag
+# marks the body (two contractions + a row softmax) as lowerable, so the
+# mesh backend can fuse a chain of these into a single ``pallas_call``.
+# --------------------------------------------------------------------------
+
+from repro.core.trace import In, InOut  # noqa: E402
+
+
+def attn_step(o, q, k, v):
+    """One block-accumulation level: ``o ← o + softmax(q kᵀ / √d) v``."""
+    d = q.shape[-1]
+    s = jax.nn.softmax((q @ k.T) * (1.0 / float(d) ** 0.5), axis=-1)
+    return o + s @ v
+
+
+attn_step.__bind_intents__ = (InOut, In, In, In)
+attn_step.__bind_kernel__ = "dot"

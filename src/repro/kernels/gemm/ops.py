@@ -69,3 +69,25 @@ def matmul_accumulate(
         a, b, bm=bm, bn=bn, bk=bk, backend=backend, interpret=interpret
     )
     return (c.astype(jnp.float32) + prod.astype(jnp.float32)).astype(c.dtype)
+
+
+# --------------------------------------------------------------------------
+# Executor-callable entry point
+#
+# ``gemm_tile`` is the Bind tile transaction ``gemm(a, b, c: InOut)`` from
+# the paper, shaped for the tracer: square-tile accumulate with the carry
+# first.  The ``"dot"`` kernel tag lets the mesh backend compile a fused
+# chain of these levels into one ``pallas_call`` scan executable instead of
+# a python-level loop of XLA calls.
+# --------------------------------------------------------------------------
+
+from repro.core.trace import In, InOut  # noqa: E402
+
+
+def gemm_tile(c, a, b):
+    """One accumulation level of the tile transaction: ``c ← c + a @ b``."""
+    return c + a @ b
+
+
+gemm_tile.__bind_intents__ = (InOut, In, In)
+gemm_tile.__bind_kernel__ = "dot"

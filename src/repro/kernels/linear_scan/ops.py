@@ -31,3 +31,26 @@ def linear_scan(
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
     out = linear_scan_pallas(a, x, bs=bs_, interpret=interpret)
     return out[:, :s, :]
+
+
+# --------------------------------------------------------------------------
+# Executor-callable entry point
+#
+# ``scan_step`` is the per-level form of the recurrence above, shaped for
+# the Bind tracer: intent annotations make it a transactional op (the carry
+# is InOut), and the ``__bind_kernel__`` tag marks the body as
+# shape-preserving elementwise so a fused chain of these levels can be
+# lowered to a single ``pallas_call`` scan executable
+# (``ExecutableCache.lookup_chain_pallas``) by the mesh backend.
+# --------------------------------------------------------------------------
+
+from repro.core.trace import In, InOut  # noqa: E402
+
+
+def scan_step(y, a, x):
+    """One linear-recurrence level: ``y ← a ⊙ y + x``."""
+    return a * y + x
+
+
+scan_step.__bind_intents__ = (InOut, In, In)
+scan_step.__bind_kernel__ = "ewise"

@@ -13,8 +13,10 @@ runs over per-level *varying* constants (hoisted-xs bait), plus adversarial
 chain-breakers (mid-chain ship via a placement flip, dtype flips from int
 payloads under float constants, untraceable branchy fns, NumPy payloads) —
 and replays each across ``interpret`` / ``serial`` / ``threads`` /
-``fused`` / ``procs`` (the last with *real* worker processes and
-shared-memory stores — the one backend whose parallelism is physical),
+``fused`` / ``procs`` (with *real* worker processes and shared-memory
+stores — parallelism that is physical) / ``mesh`` (on multi-device hosts:
+ships run as real ``shard_map`` collectives and kernel-tagged chains as
+Pallas executables; on one device it must degrade to ``fused`` exactly),
 asserting the conformance contract:
 
 * **value parity** — every fetched payload identical (values *and* dtypes;
@@ -45,7 +47,7 @@ from repro import core as bind
 N_WORKFLOWS = 50        # fixed-seed sweep size
 SHAPE = (4, 4)
 
-PLAN_BACKENDS = ("serial", "threads", "fused", "procs")
+PLAN_BACKENDS = ("serial", "threads", "fused", "procs", "mesh")
 
 
 # ---------------------------------------------------------------------------
@@ -55,6 +57,10 @@ PLAN_BACKENDS = ("serial", "threads", "fused", "procs")
 
 from _conformance_ops import (BIN_CARRY0, BIN_CARRY1, BINARY, CONSTS, UNARY,
                               _axpy, _combine)
+# kernel-shaped op bodies: the executor-callable entry points the mesh
+# backend lowers to Pallas (importable-by-reference for procs workers)
+from repro.kernels.gemm.ops import gemm_tile
+from repro.kernels.linear_scan.ops import scan_step
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +130,7 @@ def make_spec(seed: int) -> dict:
                         int(rng.integers(0, len(pool))), target, others,
                         ship_at, int(rng.integers(0, n_nodes)),
                         in_chain_sync(depth), placement))
-        elif form < 0.96:       # axpy chain: exterior + varying constants.
+        elif form < 0.93:       # axpy chain: exterior + varying constants.
             # Power-of-two constants keep x*s exact: the eager interpreter
             # (mul, add — two roundings) and the jitted backends (XLA fuses
             # y + x*s into an FMA — one rounding) must stay bitwise equal.
@@ -133,6 +139,23 @@ def make_spec(seed: int) -> dict:
                            for _ in range(depth))
             ops.append(("axpy", target, int(rng.integers(0, n_handles)),
                         consts, in_chain_sync(depth), placement))
+        elif form < 0.955:      # kernel-shaped scan-body chain (pallas bait):
+            # y ← a⊙y + x with a a power of two (a*y exact, so the single
+            # add rounds once on every path — FMA-vs-two-roundings safe)
+            depth = int(rng.integers(3, 9))
+            a_const = float(2.0 ** rng.integers(-2, 2))
+            if rng.random() < 0.5:      # chain-invariant x operand
+                xs = (int(rng.integers(0, n_handles)),) * depth
+            else:                       # per-level varying x (scanned xs)
+                xs = tuple(int(rng.integers(0, n_handles))
+                           for _ in range(depth))
+            ops.append(("kchain", target, a_const, xs,
+                        in_chain_sync(depth), placement))
+        elif form < 0.975:      # kernel-shaped matmul-tile chain (dot bait)
+            depth = int(rng.integers(3, 7))
+            ops.append(("ktile", target, int(rng.integers(0, n_handles)),
+                        int(rng.integers(0, n_handles)), depth,
+                        in_chain_sync(depth), placement))
         else:                   # fresh output via wf.apply
             ops.append(("apply", target, int(rng.integers(0, n_handles)),
                         placement))
@@ -195,6 +218,20 @@ def _record_op(wf, handles, spec_op) -> None:
                     wf.sync()   # segment boundary INSIDE the chain
                 wf.call(_axpy, (handles[target], handles[other], c),
                         name="axpy")
+        elif form == "kchain":
+            _, target, a_const, xs, sync_at, _ = spec_op
+            for _i, xh in enumerate(xs):
+                if _i == sync_at:
+                    wf.sync()   # segment boundary INSIDE the chain
+                wf.call(scan_step, (handles[target], a_const, handles[xh]),
+                        name="scan_step")
+        elif form == "ktile":
+            _, target, oa, ob, depth, sync_at, _ = spec_op
+            for _i in range(depth):
+                if _i == sync_at:
+                    wf.sync()   # segment boundary INSIDE the chain
+                wf.call(gemm_tile, (handles[target], handles[oa],
+                                    handles[ob]), name="gemm_tile")
         else:                   # apply: fresh output array
             _, a, b, _ = spec_op
             handles.append(wf.apply(_combine, [handles[a], handles[b]],
@@ -385,6 +422,24 @@ def test_fuzzer_exercises_chain_shapes():
         run_spec(make_spec(seed), "plan", fb)
         dispatched += fb.chains_dispatched
     assert dispatched > 0, "no chain ever dispatched on the probe seeds"
+
+
+def test_fuzzer_exercises_kernel_shapes():
+    """The generator must emit kernel-shaped regions (scan bodies, matmul
+    tiles), and the mesh backend must actually compile *pallas* chain
+    executables on some of them — not merely keep the path reachable.
+    ``pallas=True`` forces chain lowering on single-device hosts (interpret
+    mode needs no mesh); the multi-device CI job re-runs the whole sweep
+    with lowering armed for real."""
+    all_ops = [op for i in range(N_WORKFLOWS) for op in make_spec(i)["ops"]]
+    forms = {op[0] for op in all_ops}
+    assert {"kchain", "ktile"} <= forms
+    pallas_chains = 0
+    for seed in range(12):
+        mb = bind.MeshBackend(pallas=True)
+        run_spec(make_spec(seed), "plan", mb)
+        pallas_chains += mb.pallas_chains_dispatched
+    assert pallas_chains > 0, "no pallas chain ever dispatched on probe seeds"
 
 
 # ---------------------------------------------------------------------------

@@ -356,3 +356,73 @@ def test_interpret_parity_on_seam_crossing_program():
     assert plan_stats.wavefronts == interp_stats.wavefronts
     assert plan_stats.wavefront_flops == interp_stats.wavefront_flops
     assert plan_stats.ops_executed == interp_stats.ops_executed
+
+
+# ---------------------------------------------------------------------------
+# Incremental stitching: cold prologue composes with cached segments
+# ---------------------------------------------------------------------------
+
+def test_cold_prologue_composes_with_cached_segment_at_seam():
+    """A pending program = never-seen prologue + a segment whose own plan
+    is already cached must NOT rebuild the union range: the flush builds
+    only the prologue up to the seam and replays the cached segment plan —
+    counter-asserted via the program-trace cache stats (a union rebuild
+    would show one miss and zero hits)."""
+    bind.clear_plan_cache()
+    bind.clear_program_cache()
+
+    def warm_segment():
+        """Cache the 4-scale segment's relocatable plan standalone."""
+        ex = bind.LocalExecutor(1, prefix_cache=True)
+        with bind.Workflow(executor=ex) as wf:
+            a = wf.array(np.ones((4, 4)), "a")
+            for _ in range(4):
+                scale(a, 1.1)
+            np.asarray(wf.fetch(a))
+        return ex.stats
+
+    ws = warm_segment()
+    assert ws.program_cache_misses == 1
+
+    # fresh executor, cold program: [prologue | cached segment] in ONE flush
+    ex = bind.LocalExecutor(1, prefix_cache=True)
+    with bind.Workflow(executor=ex) as wf:
+        b = wf.array(np.full((4, 4), 2.0), "b")
+        a = wf.array(np.ones((4, 4)), "a")
+        for _ in range(3):              # prologue: structurally new
+            wf.call(_absorb, (b, a), name="absorb")
+        wf.sync()                       # seam
+        for _ in range(4):              # the segment warmed above
+            scale(a, 1.1)
+        wf.sync()
+        out_b = np.asarray(wf.fetch(b))
+        out_a = np.asarray(wf.fetch(a))
+    np.testing.assert_allclose(out_b, np.full((4, 4), 5.0))
+    np.testing.assert_allclose(out_a, np.full((4, 4), 1.1 ** 4))
+    st = ex.stats
+    # prologue was the only build; the warmed segment replayed from cache
+    assert st.program_cache_misses == 1
+    assert st.program_cache_hits >= 1
+    assert st.ops_executed == 7
+
+
+def test_cold_program_without_cached_segments_still_builds_union():
+    """Control for the seam composition: when nothing is cached, a
+    multi-segment cold program keeps the whole-range union build (one
+    miss, no hits, no split)."""
+    bind.clear_plan_cache()
+    bind.clear_program_cache()
+    ex = bind.LocalExecutor(1, prefix_cache=True)
+    with bind.Workflow(executor=ex) as wf:
+        b = wf.array(np.full((4, 4), 2.0), "b")
+        a = wf.array(np.ones((4, 4)), "a")
+        for _ in range(3):
+            wf.call(_absorb, (b, a), name="absorb")
+        wf.sync()
+        for _ in range(4):
+            scale(a, 1.1)
+        wf.sync()
+        np.asarray(wf.fetch(a))
+    st = ex.stats
+    assert st.program_cache_misses == 1
+    assert st.program_cache_hits == 0
